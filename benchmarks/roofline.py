@@ -1,0 +1,70 @@
+"""Roofline report generator: results/dryrun/*.json -> markdown table.
+
+Per (arch x shape x mesh): the three roofline terms (seconds/step/chip),
+the dominant term, MODEL_FLOPS/HLO_FLOPS (useful-compute ratio), and a
+one-line mitigation hint for whatever dominates.
+
+Run: PYTHONPATH=src python -m benchmarks.roofline [--mesh pod16x16]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+HINTS = {
+    "compute": ("raise arithmetic efficiency: cut remat recompute "
+                "(remat=dots), fuse attention (Pallas kernel path)"),
+    "memory": ("cut HBM traffic: keep flash-attention working set in VMEM "
+               "(Pallas path), bf16 score accumulation, fewer reshards"),
+    "collective": ("cut bytes on the wire: less TP (wider FSDP/DP), "
+                   "int8 cross-pod grad compression, overlap via "
+                   "microbatch pipelining"),
+}
+
+
+def load_cells(mesh=None):
+    base = os.path.join(os.path.dirname(__file__), "..", "results",
+                        "dryrun", "*.json")
+    cells = []
+    for p in sorted(glob.glob(base)):
+        with open(p) as f:
+            d = json.load(f)
+        if d.get("ok") and (mesh is None or d["mesh"] == mesh):
+            cells.append(d)
+    return cells
+
+
+def fmt_row(c):
+    r = c["roofline"]
+    ratio = c.get("useful_flops_ratio")
+    return (f"| {c['arch']} | {c['shape']} | {c['mesh']} "
+            f"| {r['t_compute_s']:.4f} | {r['t_memory_s']:.4f} "
+            f"| {r['t_collective_s']:.4f} | **{r['dominant']}** "
+            f"| {ratio:.2f} |" if ratio else
+            f"| {c['arch']} | {c['shape']} | {c['mesh']} "
+            f"| {r['t_compute_s']:.4f} | {r['t_memory_s']:.4f} "
+            f"| {r['t_collective_s']:.4f} | **{r['dominant']}** | n/a |")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="pod16x16")
+    args = ap.parse_args()
+    cells = load_cells(args.mesh)
+    print(f"# Roofline ({args.mesh}, {len(cells)} cells)\n")
+    print("| arch | shape | mesh | t_compute | t_memory | t_collective "
+          "| dominant | useful |")
+    print("|---|---|---|---|---|---|---|---|")
+    for c in cells:
+        print(fmt_row(c))
+    print("\n## Mitigation hints")
+    doms = {c["roofline"]["dominant"] for c in cells}
+    for d in sorted(doms):
+        print(f"- **{d}**: {HINTS[d]}")
+
+
+if __name__ == "__main__":
+    main()

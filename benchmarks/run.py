@@ -1,0 +1,138 @@
+"""Benchmark harness: one entry per paper table/figure + roofline summary.
+
+Prints ``name,us_per_call,derived`` CSV rows (one per benchmark), where
+``derived`` packs the table's headline numbers.  Paper-number comparisons
+live in EXPERIMENTS.md.
+
+  table2_deployments   -- paper Table II   (rack deployment trade-offs)
+  table3_rebalancing   -- paper Table III  (headroom rebalancing, Sec. V-B)
+  table4_standby       -- paper Table IV   (standby reallocation, Sec. V-C)
+  table5_flexible      -- paper Table V    (flexible capacity, Sec. V-D)
+  powercap_latency     -- cap-change vs vMotion cost asymmetry (Sec. II-D)
+  roofline_summary     -- per-(arch x shape) roofline terms from the dry-run
+
+Run: PYTHONPATH=src python -m benchmarks.run [--skip-slow]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import time
+
+
+def _timed(fn):
+    t0 = time.perf_counter()
+    out = fn()
+    return (time.perf_counter() - t0) * 1e6, out
+
+
+def table2_deployments():
+    from repro.core.power_model import PAPER_HOST, deployment_table
+    rows = deployment_table(PAPER_HOST, 8000.0, [400, 320, 285, 250])
+    derived = ";".join(
+        f"{int(r['power_cap_w'])}W:{r['host_count']}hosts"
+        f"/cpu{r['capacity_ratio']:.2f}/mem{r['memory_ratio']:.2f}"
+        for r in rows)
+    return derived
+
+
+def _sim_table(scenario):
+    from repro.sim.experiments import run_all
+    from repro.sim.metrics import ratio_table
+    res = run_all(scenario)
+    table = ratio_table({k: v.acc for k, v in res.items()}, "statichigh")
+    return res, table
+
+
+def table3_rebalancing():
+    res, t = _sim_table("headroom")
+    return ";".join(
+        f"{p}:cpu{t[p]['cpu_payload_ratio']:.2f}/vmo{t[p]['vmotions']}"
+        for p in ("cpc", "static", "statichigh"))
+
+
+def table4_standby():
+    res, t = _sim_table("standby")
+    return ";".join(
+        f"{p}:cpu{t[p]['cpu_payload_ratio']:.2f}/vmo{t[p]['vmotions']}"
+        f"/pow{t[p]['power_ratio']:.2f}"
+        for p in ("cpc", "static", "statichigh"))
+
+
+def table5_flexible():
+    res, t = _sim_table("flexible")
+    return ";".join(
+        f"{p}:cpu{t[p]['cpu_payload_ratio']:.2f}"
+        f"/mem{t[p]['mem_payload_ratio']:.2f}"
+        f"/trd{res[p].acc.tag_satisfaction('trading'):.2f}"
+        for p in ("cpc", "static", "statichigh"))
+
+
+def powercap_latency():
+    """Sec. II-D asymmetry: cap write (<1 ms) vs vMotion (seconds).
+
+    Reports our simulator's models of both actions for one 2 GB VM."""
+    from repro.sim.cluster import SimConfig
+    cfg = SimConfig()
+    cap_ms = 1.0  # baseboard RPC, paper ref [4]
+    vmotion_s = (2 * 1024) / cfg.vmotion_rate_mb_s
+    return (f"cap:{cap_ms}ms;vmotion:{vmotion_s:.0f}s;"
+            f"ratio:{vmotion_s * 1000 / cap_ms:.0f}x")
+
+
+def roofline_summary():
+    pats = os.path.join(os.path.dirname(__file__), "..", "results",
+                        "dryrun", "*.json")
+    cells = []
+    for p in sorted(glob.glob(pats)):
+        with open(p) as f:
+            d = json.load(f)
+        if d.get("ok"):
+            cells.append(d)
+    if not cells:
+        return "no-dryrun-results(run repro.launch.dryrun first)"
+    by_dom = {}
+    for c in cells:
+        by_dom.setdefault(c["roofline"]["dominant"], []).append(c)
+    return (f"{len(cells)}cells;" + ";".join(
+        f"{k}:{len(v)}" for k, v in sorted(by_dom.items())))
+
+
+def kernel_microbenches():
+    from benchmarks.kernel_bench import BENCHES as KB
+    parts = []
+    for name, fn in KB:
+        us, derived = fn()
+        parts.append(f"{name.replace('kernel_', '')}:{us:.0f}us")
+    return ";".join(parts) + ";(interpret-mode)"
+
+
+BENCHES = [
+    ("table2_deployments", table2_deployments, False),
+    ("table3_rebalancing", table3_rebalancing, False),
+    ("table4_standby", table4_standby, False),
+    ("table5_flexible", table5_flexible, True),
+    ("powercap_latency", powercap_latency, False),
+    ("kernel_microbenches", kernel_microbenches, False),
+    ("roofline_summary", roofline_summary, False),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--skip-slow", action="store_true")
+    args, _ = ap.parse_known_args()
+    print("name,us_per_call,derived")
+    for name, fn, slow in BENCHES:
+        if slow and args.skip_slow:
+            print(f"{name},skipped,--skip-slow")
+            continue
+        us, derived = _timed(fn)
+        print(f"{name},{us:.0f},{derived}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,133 @@
+"""CloudPowerCap power model (paper Eqs. 1-4).
+
+Maps a host's power cap to its effective compute capacity and back, so the
+power budget can be managed as a first-class schedulable resource by the
+resource manager.  The paper's linear utilization<->power model (validated by
+Fan et al. for CPU-dominated servers) is kept as the default calibration; the
+model is pluggable so a measured cap->sustained-clock curve for a TPU host can
+be dropped in at the same interface.
+
+Capacity units are MHz in the simulator plane (matching the paper) and FLOP/s
+in the data plane -- the model is unit-agnostic: ``capacity`` is whatever
+linear resource the host delivers at 100% utilization of its peak.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Union
+
+import numpy as np
+
+ArrayLike = Union[float, np.ndarray]
+
+
+@dataclasses.dataclass(frozen=True)
+class HostPowerSpec:
+    """Static power/capacity description of one host.
+
+    Attributes:
+      capacity_peak: capacity delivered at 100% utilization, uncapped (MHz or
+        FLOP/s).
+      power_idle: Watts drawn at 0% utilization (includes non-CPU components,
+        per the paper -- memory / disk / NIC draw is roughly flat).
+      power_peak: Watts drawn at 100% utilization, uncapped.
+      power_nameplate: label power, only used for deployment math (Table II).
+      hypervisor_overhead: capacity reserved by the hypervisor / host agent
+        (Eq. 4's ``C_H``); subtracted from power-capped capacity to obtain the
+        capacity the resource manager may allocate.
+      memory_mb: host memory (the other first-class resource in the paper).
+    """
+
+    capacity_peak: float
+    power_idle: float
+    power_peak: float
+    power_nameplate: float = 0.0
+    hypervisor_overhead: float = 0.0
+    memory_mb: float = 0.0
+
+    def __post_init__(self) -> None:
+        if self.power_peak <= self.power_idle:
+            raise ValueError(
+                f"power_peak ({self.power_peak}) must exceed power_idle "
+                f"({self.power_idle})")
+        if self.capacity_peak <= 0:
+            raise ValueError("capacity_peak must be positive")
+
+    # -- Eq. 1: utilization -> consumed power (upper bound under DVFS) -------
+    def power_consumed(self, utilization: ArrayLike) -> ArrayLike:
+        u = np.clip(utilization, 0.0, 1.0)
+        return self.power_idle + (self.power_peak - self.power_idle) * u
+
+    # -- Eq. 3: power cap -> power-capped capacity ---------------------------
+    def capped_capacity(self, power_cap: ArrayLike) -> ArrayLike:
+        """Lower-bound capacity reachable under ``power_cap`` Watts."""
+        cap = np.clip(power_cap, self.power_idle, self.power_peak)
+        frac = (cap - self.power_idle) / (self.power_peak - self.power_idle)
+        return self.capacity_peak * frac
+
+    # -- Eq. 3 inverted: capacity -> minimum power cap that supports it ------
+    def cap_for_capacity(self, capacity: ArrayLike) -> ArrayLike:
+        c = np.clip(capacity, 0.0, self.capacity_peak)
+        return self.power_idle + (self.power_peak - self.power_idle) * (
+            c / self.capacity_peak)
+
+    # -- Eq. 4: managed (resource-manager-visible) capacity ------------------
+    def managed_capacity(self, power_cap: ArrayLike) -> ArrayLike:
+        return np.maximum(
+            self.capped_capacity(power_cap) - self.hypervisor_overhead, 0.0)
+
+    def cap_for_managed_capacity(self, capacity: ArrayLike) -> ArrayLike:
+        return self.cap_for_capacity(
+            np.asarray(capacity) + self.hypervisor_overhead)
+
+
+# Paper Table I server: 12 cores x 2.9 GHz = 34.8 GHz, 96 GB,
+# nameplate 400 W, peak 320 W, idle 160 W.
+PAPER_HOST = HostPowerSpec(
+    capacity_peak=34_800.0,       # MHz
+    power_idle=160.0,
+    power_peak=320.0,
+    power_nameplate=400.0,
+    hypervisor_overhead=0.0,
+    memory_mb=96 * 1024,
+)
+
+
+# TPU v5e host (4 chips): used by the data plane.  197 TFLOP/s bf16 per chip.
+# Power figures follow public v5e board estimates; the exact constants only
+# scale the Watts<->FLOP/s line and are configurable.
+TPU_V5E_HOST = HostPowerSpec(
+    capacity_peak=4 * 197e12,     # FLOP/s, 4 chips per host
+    power_idle=4 * 70.0,
+    power_peak=4 * 220.0,
+    power_nameplate=4 * 250.0,
+    hypervisor_overhead=0.0,
+    memory_mb=4 * 16 * 1024,
+)
+
+
+def deployment_table(spec: HostPowerSpec, rack_budget_watts: float,
+                     power_caps: list[float]) -> list[dict]:
+    """Reproduces the shape of paper Table II.
+
+    For each candidate per-host power cap, how many hosts fit in the rack
+    budget and what aggregate capacity / memory results.
+    """
+    rows = []
+    base = None
+    for cap in power_caps:
+        count = int(rack_budget_watts // cap)
+        total_capacity = count * float(spec.capped_capacity(cap))
+        total_memory = count * spec.memory_mb
+        if base is None:
+            base = (total_capacity, total_memory)
+        rows.append({
+            "power_cap_w": cap,
+            "host_count": count,
+            "capacity": total_capacity,
+            "capacity_ratio": total_capacity / base[0] if base[0] else 0.0,
+            "memory_mb": total_memory,
+            "memory_ratio": total_memory / base[1] if base[1] else 0.0,
+        })
+    return rows

@@ -1,0 +1,106 @@
+"""Algorithm 3: Powercap Redistribution for DPM host power-on/off.
+
+Power-on: the candidate host needs a power cap before it can join the
+cluster.  Take unallocated budget first; if short, drain hosts whose
+utilization is low, never reducing any below the capacity at which DPM's
+power-on trigger would fire (no oscillation) nor below its reservations.
+
+Power-off: the host's cap returns to the pool and is redivvied across the
+remaining hosts, proportional to each host's headroom to peak.
+"""
+
+from __future__ import annotations
+
+from repro.drs import actions as act
+from repro.drs.dpm import DPMConfig
+from repro.drs.snapshot import ClusterSnapshot
+
+
+def redistribute_for_power_on(snapshot: ClusterSnapshot, candidate_id: str,
+                              dpm_config: DPMConfig | None = None
+                              ) -> tuple[ClusterSnapshot, float]:
+    """Fund ``candidate_id``'s cap.  Returns (what-if snapshot, granted W).
+
+    The candidate ends with the largest cap the budget allows, at most its
+    physical peak; the function never violates donors' reservations or drives
+    them into DPM's power-on band.
+    """
+    dpm_config = dpm_config or DPMConfig()
+    f = snapshot.clone()
+    cand = f.hosts[candidate_id]
+    spec = cand.spec
+
+    needed = spec.power_peak  # target: full peak cap (best robustness)
+    granted = 0.0
+
+    # 1. Unallocated budget first (paper Fig. 5 step 1).
+    pool = max(f.unallocated_power_budget() - cand.power_cap
+               * (0.0 if not cand.powered_on else 1.0), 0.0)
+    take = min(pool, needed)
+    granted += take
+    needed -= take
+
+    # 2. Drain low-utilization hosts down to their power-on-threshold floor.
+    if needed > 1e-9:
+        donors = sorted(
+            (h for h in f.powered_on_hosts()
+             if f.host_cpu_utilization(h.host_id) < dpm_config.high_util
+             and h.host_id != candidate_id),
+            key=lambda h: f.host_cpu_utilization(h.host_id))
+        for donor in donors:
+            if needed <= 1e-9:
+                break
+            demand = sum(v.effective_demand
+                         for v in f.vms_on(donor.host_id))
+            # Floor capacity: utilization stays strictly below the power-on
+            # trigger, and reservations stay whole; the cap never drops
+            # below idle (a powered-on host draws idle regardless).
+            floor_capacity = max(demand / dpm_config.high_util,
+                                 f.cpu_reserved(donor.host_id))
+            floor_cap = max(float(donor.spec.cap_for_managed_capacity(
+                floor_capacity)), donor.spec.power_idle)
+            avail = max(donor.power_cap - floor_cap, 0.0)
+            take = min(avail, needed)
+            if take > 0:
+                donor.power_cap -= take
+                granted += take
+                needed -= take
+
+    # The cap IS the budget allocation: never larger than what was granted.
+    # Below idle the host cannot even sit powered-on -- the caller (DPM
+    # protocol) treats that as power-on infeasible.
+    cand.power_cap = min(granted, spec.power_peak)
+    return f, cand.power_cap
+
+
+def redistribute_after_power_off(snapshot: ClusterSnapshot, off_id: str
+                                 ) -> ClusterSnapshot:
+    """Reabsorb ``off_id``'s budget into the remaining hosts' caps,
+    proportionally to each host's headroom to peak."""
+    f = snapshot.clone()
+    off = f.hosts[off_id]
+    off.powered_on = False
+    freed = off.power_cap
+    off.power_cap = 0.0
+
+    pool = freed + max(f.unallocated_power_budget() - freed, 0.0)
+    pool = min(pool, max(f.power_budget - f.total_allocated_power(), 0.0))
+    recipients = [h for h in f.powered_on_hosts()
+                  if h.power_cap < h.spec.power_peak - 1e-9]
+    total_headroom = sum(h.spec.power_peak - h.power_cap for h in recipients)
+    if total_headroom <= 0 or pool <= 0:
+        return f
+    grant_total = min(pool, total_headroom)
+    for h in recipients:
+        share = (h.spec.power_peak - h.power_cap) / total_headroom
+        h.power_cap = min(h.power_cap + grant_total * share,
+                          h.spec.power_peak)
+    f.validate()
+    return f
+
+
+def emit_actions(before: ClusterSnapshot, after: ClusterSnapshot,
+                 reason: str = "powercap-redistribute") -> list[act.Action]:
+    new_caps = {h.host_id: h.power_cap for h in after.hosts.values()
+                if h.powered_on or before.hosts[h.host_id].powered_on}
+    return act.order_cap_changes(before, new_caps, reason=reason)

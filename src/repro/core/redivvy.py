@@ -1,0 +1,97 @@
+"""Algorithm 1: RedivvyPowerCap -- proportional-share power redivvy.
+
+After constraint-correction moves change where reservations live, host caps
+are redistributed so that (a) every host can honor its resident reservations
+and (b) the remaining *unreserved* budget is spread by proportional sharing
+(Waldspurger-style, paper ref [23]) instead of stranding it on hosts that no
+longer need it.
+
+Note on the paper's pseudocode: Algorithm 1 line 15 as printed
+(``C_iF += r (C_iS - C_iF)`` with ``r = C_needed / C_excess``) would *grow*
+the total allocation by ``2*C_needed - C_excess``; budget conservation
+requires shrinking hosts to give up exactly ``r`` of their excess, i.e. keep
+``(1 - r)``.  We implement the conserving form and assert conservation.
+"""
+
+from __future__ import annotations
+
+from repro.drs import actions as act
+from repro.drs.snapshot import ClusterSnapshot
+
+
+def redivvy_power_cap(before: ClusterSnapshot, after: ClusterSnapshot,
+                      reason: str = "redivvy") -> dict[str, float]:
+    """Compute post-correction caps on ``after`` (mutating it) and return the
+    per-host cap map.
+
+    ``before`` holds pre-correction caps C_{i,S}.  ``after`` holds the
+    post-correction placements with caps set to each host's minimum
+    (reservation-respecting) cap C_{i,F} -- callers build it via
+    :func:`get_flexible_power` + placement.
+    """
+    needed = 0.0
+    excess = 0.0
+    for host_id, host in after.hosts.items():
+        if not host.powered_on:
+            continue
+        c_s = before.hosts[host_id].power_cap
+        c_f = host.power_cap
+        if c_f > c_s:
+            needed += c_f - c_s
+        else:
+            excess += c_s - c_f
+    if needed > 0 and excess > 0:
+        # Fraction of each shrinking host's excess that must be surrendered
+        # to fund the growing hosts; the rest is returned (fairness).
+        r = min(needed / excess, 1.0)
+        for host_id, host in after.hosts.items():
+            if not host.powered_on:
+                continue
+            c_s = before.hosts[host_id].power_cap
+            if host.power_cap <= c_s:
+                host.power_cap = host.power_cap + (1.0 - r) * (
+                    c_s - host.power_cap)
+    elif needed == 0.0:
+        # Nothing grew: every host keeps its original cap.
+        for host_id, host in after.hosts.items():
+            if host.powered_on:
+                host.power_cap = before.hosts[host_id].power_cap
+    total_before = sum(h.power_cap for h in before.hosts.values()
+                       if h.powered_on)
+    total_after = sum(h.power_cap for h in after.hosts.values()
+                      if h.powered_on)
+    assert total_after <= max(total_before, after.power_budget) + 1e-6, (
+        f"redivvy grew allocation {total_before:.1f} -> {total_after:.1f}")
+    return {h.host_id: h.power_cap for h in after.hosts.values()
+            if h.powered_on}
+
+
+def get_flexible_power(snapshot: ClusterSnapshot) -> ClusterSnapshot:
+    """Clone with every host's cap at its reserved floor (paper Fig. 3 step 1).
+
+    The clone exposes the cluster's full unreserved budget as *flexible*
+    headroom that constraint correction may spend.
+    """
+    flex = snapshot.clone()
+    for host in flex.powered_on_hosts():
+        host.power_cap = max(flex.reserved_power_cap(host.host_id),
+                             host.spec.power_idle)
+    return flex
+
+
+def fundable_capacity(flex: ClusterSnapshot, host_id: str) -> float:
+    """Max managed capacity ``host_id`` could reach if granted as much of the
+    unreserved budget as physics allows (used as the placement fit check's
+    capacity function during Powercap Allocation)."""
+    host = flex.hosts[host_id]
+    if not host.powered_on:
+        return 0.0
+    spare = max(flex.power_budget - sum(
+        h.power_cap for h in flex.powered_on_hosts()), 0.0)
+    cap = min(host.power_cap + spare, host.spec.power_peak)
+    return float(host.spec.managed_capacity(cap))
+
+
+def emit_actions(before: ClusterSnapshot, new_caps: dict[str, float],
+                 reason: str = "redivvy") -> list[act.Action]:
+    return act.order_cap_changes(before, new_caps, reason=reason)

@@ -1,0 +1,3 @@
+from repro.data.pipeline import SyntheticTokens, Batch
+
+__all__ = ["SyntheticTokens", "Batch"]

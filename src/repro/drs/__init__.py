@@ -1,0 +1,19 @@
+"""Resource-management substrate (the paper's DRS analogue).
+
+CloudPowerCap (repro.core) is designed to coordinate with an existing cluster
+resource manager.  The paper uses VMware DRS; we implement the equivalent
+substrate here: cluster snapshot datamodel, entitlement divvy
+(reservation/limit/shares water-filling), constraint rules + correction,
+greedy hill-climbing entitlement balancing with a risk-cost-benefit filter,
+and distributed power management (DPM).
+"""
+
+from repro.drs.snapshot import (ClusterSnapshot, Host, VirtualMachine)
+from repro.drs.actions import Action
+from repro.drs.entitlement import divvy, waterfill
+from repro.drs import rules, balancer, dpm, placement
+
+__all__ = [
+    "ClusterSnapshot", "Host", "VirtualMachine", "Action", "divvy",
+    "waterfill", "rules", "balancer", "dpm", "placement",
+]

@@ -1,0 +1,89 @@
+"""Greedy hill-climbing entitlement balancing (paper Sec. IV-A).
+
+DRS minimizes the stddev of hosts' normalized entitlements by migrating VMs,
+one greedy move at a time, each move passing a risk-cost-benefit filter.
+CloudPowerCap's BalancePowerCap (repro.core.balance) runs *before* this and
+removes as much imbalance as Watts can; whatever remains is fixed here by
+actual migrations.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.drs import placement
+from repro.drs.snapshot import ClusterSnapshot
+
+
+@dataclasses.dataclass
+class BalancerConfig:
+    imbalance_threshold: float = 0.05   # target stddev of N_h
+    max_moves: int = 16                 # per invocation (paper: 5-min budget)
+    min_goodness: float = 1e-3          # minimum imbalance reduction per move
+    # Risk-cost-benefit: a move must reduce imbalance by at least
+    # cost_per_gb * mem_demand_gb (stddev units per GB moved) to be worth the
+    # vMotion overhead.  Calibrated against the simulator's vMotion model.
+    cost_per_gb: float = 2e-4
+    # The benefit side of risk-cost-benefit: migrations only pay off when
+    # some host is actually straining against its capacity (otherwise every
+    # VM already receives its entitlement and the imbalance is cosmetic).
+    contention_threshold: float = 0.9
+
+
+def _imbalance(snapshot: ClusterSnapshot) -> float:
+    return snapshot.imbalance()
+
+
+def _candidate_moves(snapshot: ClusterSnapshot):
+    """(vm, dest) pairs from above-average-N hosts to below-average hosts."""
+    on = snapshot.powered_on_hosts()
+    ns = {h.host_id: snapshot.normalized_entitlement(h.host_id) for h in on}
+    mean_n = float(np.mean(list(ns.values()))) if ns else 0.0
+    donors = [h for h in on if ns[h.host_id] > mean_n]
+    receivers = [h for h in on if ns[h.host_id] <= mean_n]
+    for donor in donors:
+        for vm in snapshot.vms_on(donor.host_id):
+            if not vm.migratable:
+                continue
+            for recv in receivers:
+                if recv.host_id == donor.host_id:
+                    continue
+                if placement.fits(snapshot, vm.vm_id, recv.host_id):
+                    yield vm.vm_id, recv.host_id
+
+
+def balance(snapshot: ClusterSnapshot,
+            config: Optional[BalancerConfig] = None
+            ) -> list[tuple[str, str]]:
+    """Mutates ``snapshot`` (what-if) and returns the chosen moves."""
+    config = config or BalancerConfig()
+    moves: list[tuple[str, str]] = []
+    on = snapshot.powered_on_hosts()
+    if not on or max(snapshot.normalized_entitlement(h.host_id)
+                     for h in on) <= config.contention_threshold:
+        return moves  # no host strained: migration cost outweighs benefit
+    cur = _imbalance(snapshot)
+    while cur > config.imbalance_threshold and len(moves) < config.max_moves:
+        best: Optional[tuple[str, str]] = None
+        best_after = cur
+        for vm_id, dest in _candidate_moves(snapshot):
+            src = snapshot.vms[vm_id].host_id
+            snapshot.vms[vm_id].host_id = dest
+            after = _imbalance(snapshot)
+            snapshot.vms[vm_id].host_id = src
+            # Risk-cost-benefit filter: improvement must beat the migration
+            # cost proxy (scaled by the VM's in-memory state to move).
+            gain = cur - after
+            cost = config.min_goodness + config.cost_per_gb * (
+                snapshot.vms[vm_id].mem_demand / 1024.0)
+            if gain > cost and after < best_after:
+                best, best_after = (vm_id, dest), after
+        if best is None:
+            break
+        snapshot.vms[best[0]].host_id = best[1]
+        moves.append(best)
+        cur = best_after
+    return moves

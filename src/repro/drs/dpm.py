@@ -1,0 +1,109 @@
+"""Distributed Power Management (paper Sec. II-C, IV-D).
+
+DPM right-sizes powered-on capacity: consolidate VMs and power hosts off when
+utilization is low for a sustained period; power hosts back on when any host
+runs hot.  CloudPowerCap's Powercap Redistribution (repro.core.redistribute)
+coordinates: it frees the budget of powered-off hosts and funds the caps of
+powering-on hosts.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.drs import placement
+from repro.drs.snapshot import ClusterSnapshot
+
+
+@dataclasses.dataclass
+class DPMConfig:
+    high_util: float = 0.81        # power-on trigger
+    low_util: float = 0.45         # power-off consideration band
+    target_util: float = 0.45      # post-consolidation ceiling on targets
+    stable_window_s: float = 300.0 # utilization must be low this long
+
+
+@dataclasses.dataclass
+class DPMRecommendation:
+    power_on: Optional[str] = None
+    power_off: Optional[str] = None
+    evacuations: list = dataclasses.field(default_factory=list)  # (vm, dest)
+
+
+def capacity_at_util(snapshot: ClusterSnapshot, host_id: str,
+                     util: float) -> float:
+    """Managed capacity at which the host's current demand equals ``util``."""
+    demand = sum(v.effective_demand for v in snapshot.vms_on(host_id))
+    return demand / max(util, 1e-9)
+
+
+def run_dpm(snapshot: ClusterSnapshot, config: DPMConfig,
+            low_since: Optional[dict[str, float]] = None,
+            now: float = 0.0,
+            last_config_change: float = -1e18) -> DPMRecommendation:
+    """One DPM pass.  ``low_since[host]`` = sim time when the host's
+    utilization last *entered* the low band (for the stability window)."""
+    rec = DPMRecommendation()
+    on = snapshot.powered_on_hosts()
+    standby = [h for h in snapshot.hosts.values() if not h.powered_on]
+
+    # --- power-on path: any hot host? --------------------------------------
+    if any(snapshot.host_cpu_utilization(h.host_id) > config.high_util or
+           snapshot.host_mem_utilization(h.host_id) > config.high_util
+           for h in on):
+        if standby:
+            rec.power_on = standby[0].host_id
+        return rec
+
+    # --- power-off path: sustained cluster-wide low utilization ------------
+    if len(on) <= 1:
+        return rec
+    all_low = all(
+        snapshot.host_cpu_utilization(h.host_id) < config.low_util and
+        snapshot.host_mem_utilization(h.host_id) < config.low_util
+        for h in on)
+    if not all_low:
+        return rec
+    if low_since is not None:
+        oldest = max(max(low_since.get(h.host_id, now) for h in on),
+                     last_config_change)
+        if now - oldest < config.stable_window_s:
+            return rec
+
+    # Evacuate the least-utilized host if its VMs fit elsewhere without
+    # pushing any target above target_util.
+    victim = min(on, key=lambda h: snapshot.host_cpu_utilization(h.host_id))
+    trial = snapshot.clone()
+    evacuations: list[tuple[str, str]] = []
+    ok = True
+    for vm in sorted(trial.vms_on(victim.host_id),
+                     key=lambda v: -v.mem_demand):
+        if not vm.migratable:
+            ok = False
+            break
+        best, best_util = None, 1e18
+        for host in trial.powered_on_hosts():
+            if host.host_id == victim.host_id:
+                continue
+            if not placement.fits(trial, vm.vm_id, host.host_id):
+                continue
+            cap = host.managed_capacity
+            demand_after = sum(x.effective_demand
+                               for x in trial.vms_on(host.host_id)
+                               ) + vm.effective_demand
+            util_after = demand_after / max(cap, 1e-9)
+            mem_after = (sum(x.mem_demand for x in trial.vms_on(host.host_id))
+                         + vm.mem_demand) / max(host.memory_mb, 1e-9)
+            if util_after <= config.target_util and \
+                    mem_after <= config.target_util and util_after < best_util:
+                best, best_util = host.host_id, util_after
+        if best is None:
+            ok = False
+            break
+        trial.vms[vm.vm_id].host_id = best
+        evacuations.append((vm.vm_id, best))
+    if ok:
+        rec.power_off = victim.host_id
+        rec.evacuations = evacuations
+    return rec

@@ -1,0 +1,221 @@
+"""Cluster snapshot datamodel.
+
+DRS (and CloudPowerCap with it) operates on an internal snapshot of the
+VM/host inventory, executes candidate actions in what-if mode on clones of the
+snapshot, and finally emits recommendations.  This module is that datamodel.
+
+Capacity unit is MHz throughout the simulator plane (paper convention).
+"""
+
+from __future__ import annotations
+
+import copy
+import dataclasses
+import math
+from typing import TYPE_CHECKING, Iterable, Optional
+
+import numpy as np
+
+if TYPE_CHECKING:  # annotation-only: avoids a repro.core import cycle
+    from repro.core.power_model import HostPowerSpec
+
+
+@dataclasses.dataclass
+class VirtualMachine:
+    """A VM (simulator plane) or job shard (data plane)."""
+
+    vm_id: str
+    vcpus: int = 1
+    memory_mb: float = 8 * 1024
+    # Resource controls (paper Sec. II-C).
+    reservation: float = 0.0            # MHz, guaranteed
+    limit: float = math.inf             # MHz, hard upper bound
+    shares: Optional[float] = None      # default: 1000 per vCPU
+    mem_reservation: float = 0.0        # MB
+    # Current state.
+    demand: float = 0.0                 # MHz the VM would consume uncontended
+    mem_demand: float = 0.0             # MB
+    host_id: Optional[str] = None
+    powered_on: bool = True
+    migratable: bool = True
+    tags: frozenset = frozenset()
+
+    def __post_init__(self) -> None:
+        if self.shares is None:
+            self.shares = 1000.0 * self.vcpus
+        if self.limit < self.reservation:
+            raise ValueError(f"{self.vm_id}: limit < reservation")
+
+    @property
+    def effective_demand(self) -> float:
+        """Demand clamped into [reservation, limit].
+
+        Entitlement never falls below the reservation (it is guaranteed even
+        when idle, for admission-control purposes) and never exceeds the
+        limit.
+        """
+        return float(np.clip(self.demand, self.reservation, self.limit))
+
+
+@dataclasses.dataclass
+class Host:
+    host_id: str
+    spec: "HostPowerSpec"
+    power_cap: float                    # Watts; enforced by the baseboard
+    powered_on: bool = True
+    tags: frozenset = frozenset()
+
+    @property
+    def capped_capacity(self) -> float:
+        """Eq. 3: raw capacity reachable at the current power cap."""
+        if not self.powered_on:
+            return 0.0
+        return float(self.spec.capped_capacity(self.power_cap))
+
+    @property
+    def managed_capacity(self) -> float:
+        """Eq. 4: capacity the resource manager may allocate."""
+        if not self.powered_on:
+            return 0.0
+        return float(self.spec.managed_capacity(self.power_cap))
+
+    @property
+    def peak_managed_capacity(self) -> float:
+        return float(self.spec.managed_capacity(self.spec.power_peak))
+
+    @property
+    def memory_mb(self) -> float:
+        return self.spec.memory_mb if self.powered_on else 0.0
+
+
+class ClusterSnapshot:
+    """Hosts + VMs + the cluster power budget.
+
+    All DRS/CPC algorithms treat the snapshot as mutable working state and
+    clone it for what-if evaluation.
+    """
+
+    def __init__(self, hosts: Iterable[Host], vms: Iterable[VirtualMachine],
+                 power_budget: float, rules: Optional[list] = None):
+        self.hosts: dict[str, Host] = {h.host_id: h for h in hosts}
+        self.vms: dict[str, VirtualMachine] = {v.vm_id: v for v in vms}
+        self.power_budget = float(power_budget)
+        self.rules = list(rules or [])
+        self._check_placements()
+
+    # ------------------------------------------------------------------ util
+    def _check_placements(self) -> None:
+        for vm in self.vms.values():
+            if vm.host_id is not None and vm.host_id not in self.hosts:
+                raise ValueError(f"{vm.vm_id} placed on unknown host")
+
+    def clone(self) -> "ClusterSnapshot":
+        snap = ClusterSnapshot.__new__(ClusterSnapshot)
+        snap.hosts = {k: copy.copy(h) for k, h in self.hosts.items()}
+        snap.vms = {k: copy.copy(v) for k, v in self.vms.items()}
+        snap.power_budget = self.power_budget
+        snap.rules = list(self.rules)
+        return snap
+
+    def powered_on_hosts(self) -> list[Host]:
+        return [h for h in self.hosts.values() if h.powered_on]
+
+    def vms_on(self, host_id: str) -> list[VirtualMachine]:
+        return [v for v in self.vms.values()
+                if v.host_id == host_id and v.powered_on]
+
+    # ------------------------------------------------------- reservations
+    def cpu_reserved(self, host_id: str) -> float:
+        return sum(v.reservation for v in self.vms_on(host_id))
+
+    def mem_used(self, host_id: str) -> float:
+        return sum(v.memory_mb for v in self.vms_on(host_id))
+
+    def mem_reserved(self, host_id: str) -> float:
+        return sum(v.mem_reservation for v in self.vms_on(host_id))
+
+    def reserved_power_cap(self, host_id: str) -> float:
+        """Minimum power cap supporting the reservations of resident VMs.
+
+        This is the per-host floor below which a cap change would violate
+        admission-controlled guarantees (paper Sec. IV-B: `GetFlexiblePower`
+        clones the snapshot with every host at this floor).
+        """
+        host = self.hosts[host_id]
+        if not host.powered_on:
+            return 0.0
+        return float(host.spec.cap_for_managed_capacity(
+            self.cpu_reserved(host_id)))
+
+    def total_allocated_power(self) -> float:
+        return sum(h.power_cap for h in self.hosts.values() if h.powered_on)
+
+    def unreserved_power_budget(self) -> float:
+        """Budget minus the power needed for running VMs' reservations."""
+        reserved = sum(self.reserved_power_cap(h.host_id)
+                       for h in self.powered_on_hosts())
+        return self.power_budget - reserved
+
+    def unallocated_power_budget(self) -> float:
+        """Budget not currently assigned to any powered-on host's cap."""
+        return self.power_budget - self.total_allocated_power()
+
+    # ------------------------------------------------------- entitlements
+    def host_entitlements(self, host_id: str) -> dict[str, float]:
+        from repro.drs.entitlement import divvy  # local import, no cycle
+        host = self.hosts[host_id]
+        return divvy(host.managed_capacity, self.vms_on(host_id))
+
+    def normalized_entitlement(self, host_id: str) -> float:
+        """N_h = sum of VM entitlements / host managed capacity."""
+        host = self.hosts[host_id]
+        cap = host.managed_capacity
+        if cap <= 0.0:
+            return 0.0
+        return sum(self.host_entitlements(host_id).values()) / cap
+
+    def imbalance(self) -> float:
+        """DRS imbalance metric: stddev of normalized entitlements."""
+        on = self.powered_on_hosts()
+        if len(on) <= 1:
+            return 0.0
+        ns = np.array([self.normalized_entitlement(h.host_id) for h in on])
+        return float(ns.std())
+
+    def host_cpu_utilization(self, host_id: str) -> float:
+        host = self.hosts[host_id]
+        cap = host.managed_capacity
+        if cap <= 0:
+            return 0.0
+        demand = sum(v.effective_demand for v in self.vms_on(host_id))
+        return demand / cap
+
+    def host_mem_utilization(self, host_id: str) -> float:
+        """Active-memory utilization (demand-based, ESX-style)."""
+        host = self.hosts[host_id]
+        if not host.powered_on or host.memory_mb <= 0:
+            return 0.0
+        demand = sum(v.mem_demand for v in self.vms_on(host_id))
+        return demand / host.memory_mb
+
+    # -------------------------------------------------------------- checks
+    def reservations_respected(self, host_id: str) -> bool:
+        """Admission-control invariant: CPU and *memory reservations* fit.
+
+        Configured memory may be overcommitted (ESX semantics); demand-based
+        memory pressure is handled by placement fit checks and DPM, not here.
+        """
+        host = self.hosts[host_id]
+        return (self.cpu_reserved(host_id) <= host.managed_capacity + 1e-6
+                and self.mem_reserved(host_id) <= host.memory_mb + 1e-6)
+
+    def budget_respected(self) -> bool:
+        return self.total_allocated_power() <= self.power_budget + 1e-6
+
+    def validate(self) -> None:
+        assert self.budget_respected(), (
+            f"power budget violated: {self.total_allocated_power():.1f} W "
+            f"allocated > {self.power_budget:.1f} W budget")
+        for h in self.powered_on_hosts():
+            assert self.reservations_respected(h.host_id), (
+                f"{h.host_id}: reservations exceed managed capacity")

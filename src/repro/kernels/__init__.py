@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the data plane's compute hot spots.
+
+Each kernel is a subpackage with:
+  kernel.py -- pl.pallas_call + explicit BlockSpec VMEM tiling (TPU target)
+  ops.py    -- jit'd public wrapper (auto-interpret off-TPU)
+  ref.py    -- pure-jnp oracle the tests assert against
+
+CloudPowerCap itself is a control-plane technique (no kernel-level
+contribution in the paper); these kernels serve the training/serving data
+plane the power manager drives: flash attention (GQA causal, forward AND
+backward via custom VJP), flash-decoding (split-K single-token attention
+over ragged caches), the Mamba2 SSD intra-chunk scan, and the MoE grouped
+expert GEMM.
+"""

@@ -1,0 +1,108 @@
+"""Flash-decoding, Pallas TPU: one query token against a long (ragged) KV
+cache, split-K style.
+
+Unlike the training kernel (sequential online softmax over KV blocks), the
+decode kernel emits *independent per-KV-block partials* (o, m, l) -- the
+grid's KV dimension carries no cross-iteration state, so blocks can be
+scheduled across both TensorCores / sliced across devices, which is what
+hides HBM latency when the cache (not compute) is the bottleneck.  The tiny
+log-sum-exp combine over partials runs in plain JAX.
+
+Per-batch ``kv_len`` masks the unwritten cache tail (continuous batching:
+every row decodes at a different position).
+
+VMEM per cell at bk=512, d<=256, G<=48 f32:
+  k/v (512, d) + q (G, d) + s/p (G, 512) ~ 1.3 MB.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, len_ref, o_ref, m_ref, l_ref, *,
+                   scale: float, block_k: int, seq: int):
+    ik = pl.program_id(2)
+    q = q_ref[0, 0].astype(jnp.float32)            # (G, D)
+    k = k_ref[0, 0].astype(jnp.float32)            # (bk, D)
+    v = v_ref[0, 0].astype(jnp.float32)
+    kv_len = len_ref[0, 0]                         # scalar int32
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+    k_pos = ik * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, s.shape, 1)
+    s = jnp.where((k_pos < kv_len) & (k_pos < seq), s, NEG_INF)
+    m = s.max(axis=-1)                             # (G,)
+    p = jnp.exp(s - m[:, None])
+    # Fully-masked blocks (beyond kv_len): exp(NEG_INF - NEG_INF) = 1 junk;
+    # zero them via the mask on l and o.
+    p = jnp.where(m[:, None] <= NEG_INF / 2, 0.0, p)
+    l = p.sum(axis=-1)
+    o = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())))
+    o_ref[0, 0, 0] = o
+    m_ref[0, 0, 0] = m
+    l_ref[0, 0, 0] = l
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def decode_attention_kernel(q, k, v, kv_len, *, block_k: int = 512,
+                            interpret: bool = False):
+    """q: (B, Hq, D); k/v: (B, S, Hkv, D); kv_len: (B,) int32.
+
+    Returns (B, Hq, D) in q.dtype."""
+    b, hq, d = q.shape
+    s, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    scale = 1.0 / np.sqrt(d)
+    block_k = min(block_k, s)
+    nk = pl.cdiv(s, block_k)
+    pad = nk * block_k - s
+
+    qg = q.reshape(b, hkv, g, d)
+    kt = jnp.swapaxes(k, 1, 2)                     # (B, Hkv, S, D)
+    vt = jnp.swapaxes(v, 1, 2)
+    if pad:
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    len2 = kv_len.astype(jnp.int32).reshape(b, 1)
+
+    o_p, m_p, l_p = pl.pallas_call(
+        functools.partial(_decode_kernel, scale=scale, block_k=block_k,
+                          seq=s),
+        grid=(b, hkv, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda ib, ih, ik: (ib, ih, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda ib, ih, ik: (ib, ih, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda ib, ih, ik: (ib, ih, ik, 0)),
+            pl.BlockSpec((1, 1), lambda ib, ih, ik: (ib, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, g, d),
+                         lambda ib, ih, ik: (ib, ih, ik, 0, 0)),
+            pl.BlockSpec((1, 1, 1, g), lambda ib, ih, ik: (ib, ih, ik, 0)),
+            pl.BlockSpec((1, 1, 1, g), lambda ib, ih, ik: (ib, ih, ik, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, hkv, nk, g, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, hkv, nk, g), jnp.float32),
+            jax.ShapeDtypeStruct((b, hkv, nk, g), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, kt, vt, len2)
+
+    # Log-sum-exp combine across KV blocks (split-K reduction, tiny).
+    m_max = m_p.max(axis=2, keepdims=True)                 # (B,Hkv,1,G)
+    alpha = jnp.exp(m_p - m_max)
+    l_tot = (l_p * alpha).sum(axis=2)                      # (B,Hkv,G)
+    o_tot = (o_p * alpha[..., None]).sum(axis=2)           # (B,Hkv,G,D)
+    out = o_tot / jnp.maximum(l_tot, 1e-30)[..., None]
+    return out.reshape(b, hq, d).astype(q.dtype)

@@ -1,0 +1,23 @@
+"""Public flash-decoding op: Pallas on TPU, interpret elsewhere."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.decode_attention import ref as _ref
+from repro.kernels.decode_attention.kernel import decode_attention_kernel
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def decode_attention(q, k, v, kv_len, *, block_k: int = 512,
+                     interpret: bool | None = None):
+    if interpret is None:
+        interpret = not _on_tpu()
+    return decode_attention_kernel(q, k, v, kv_len, block_k=block_k,
+                                   interpret=interpret)
+
+
+decode_attention_ref = _ref.decode_attention_ref

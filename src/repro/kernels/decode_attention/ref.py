@@ -1,0 +1,24 @@
+"""Pure-jnp oracle: single-token attention over a ragged KV cache."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def decode_attention_ref(q, k, v, kv_len):
+    """q: (B, Hq, D); k/v: (B, S, Hkv, D); kv_len: (B,) valid prefix.
+
+    Returns (B, Hq, D) in q.dtype."""
+    b, hq, d = q.shape
+    s, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, d).astype(jnp.float32)
+    scores = jnp.einsum("bhgd,bshd->bhgs", qg,
+                        k.astype(jnp.float32)) / np.sqrt(d)
+    mask = jnp.arange(s)[None, :] < kv_len[:, None]          # (B, S)
+    scores = jnp.where(mask[:, None, None, :], scores, -1e30)
+    p = jnp.exp(scores - scores.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    o = jnp.einsum("bhgs,bshd->bhgd", p, v.astype(jnp.float32))
+    return o.reshape(b, hq, d).astype(q.dtype)

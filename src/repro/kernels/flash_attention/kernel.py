@@ -1,0 +1,143 @@
+"""Causal GQA flash attention, Pallas TPU.
+
+Tiling: grid (batch, q_heads, Sq/block_q, Skv/block_k); the KV axis is the
+innermost (sequential) grid dimension, so the online-softmax running state
+(m, l, acc) lives in VMEM scratch across KV iterations of one (b, h, iq)
+cell.  Block sizes default to MXU-aligned 128x128 tiles in the (q, k) plane;
+the head dim is kept whole (<= 256 for all assigned configs).
+
+VMEM working set per cell (bf16 in, f32 acc):
+  q (bq, d) + k/v (bk, d) + scores (bq, bk) + acc (bq, d)
+  ~ 0.25 MB at 128x128xd=128  << 16 MB v5e VMEM, leaving room for
+  double-buffered HBM->VMEM prefetch of the next KV block.
+
+Fully-masked KV blocks (k_start > q_end under the causal mask) are skipped
+via @pl.when -- the triangular schedule halves prefill FLOPs vs. the naive
+rectangle.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, m_scr, l_scr,
+                  acc_scr, *, scale: float, block_q: int, block_k: int,
+                  seq_q: int, seq_kv: int, causal: bool, q_offset: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = q_offset + iq * block_q
+    k_start = ik * block_k
+    live = True if not causal else k_start <= q_start + block_q - 1
+
+    @pl.when(live)
+    def compute():
+        q = q_ref[0, 0].astype(jnp.float32)          # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)          # (bk, d)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ()))) * scale  # (bq, bk)
+        q_pos = q_start + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1)
+        mask = k_pos < seq_kv
+        if causal:
+            mask = jnp.logical_and(mask, k_pos <= q_pos)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + p.sum(axis=-1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())))
+        m_scr[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+        lse_ref[0, 0] = m_scr[...] + jnp.log(l)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "q_offset", "block_q", "block_k", "interpret"))
+def flash_attention_kernel(q, k, v, *, causal: bool = True, q_offset: int = 0,
+                           block_q: int = 128, block_k: int = 128,
+                           interpret: bool = False):
+    """q: (B, Sq, Hq, D); k/v: (B, Skv, Hkv, D) -> (B, Sq, Hq, D)."""
+    b, sq, hq, d = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    if hq % hkv:
+        raise ValueError(f"Hq={hq} not a multiple of Hkv={hkv}")
+    groups = hq // hkv
+    scale = 1.0 / np.sqrt(d)
+
+    block_q = min(block_q, sq)
+    block_k = min(block_k, skv)
+    nq = pl.cdiv(sq, block_q)
+    nk = pl.cdiv(skv, block_k)
+    pad_q = nq * block_q - sq
+    pad_k = nk * block_k - skv
+
+    # Layout: (B, H, S, D); grid iterates KV innermost (sequential on TPU).
+    qt = jnp.swapaxes(q, 1, 2)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    if pad_q:
+        qt = jnp.pad(qt, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+
+    out, lse = pl.pallas_call(
+        functools.partial(_flash_kernel, scale=scale, block_q=block_q,
+                          block_k=block_k, seq_q=sq, seq_kv=skv,
+                          causal=causal, q_offset=q_offset),
+        grid=(b, hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d),
+                         lambda ib, ih, iq, ik: (ib, ih, iq, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda ib, ih, iq, ik, g=groups: (ib, ih // g,
+                                                           ik, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda ib, ih, iq, ik, g=groups: (ib, ih // g,
+                                                           ik, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, block_q, d),
+                         lambda ib, ih, iq, ik: (ib, ih, iq, 0)),
+            pl.BlockSpec((1, 1, block_q),
+                         lambda ib, ih, iq, ik: (ib, ih, iq)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, hq, nq * block_q, d), q.dtype),
+            jax.ShapeDtypeStruct((b, hq, nq * block_q), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),      # running max
+            pltpu.VMEM((block_q,), jnp.float32),      # running sum
+            pltpu.VMEM((block_q, d), jnp.float32),    # output accumulator
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return jnp.swapaxes(out, 1, 2)[:, :sq], lse[:, :, :sq]

@@ -1,0 +1,58 @@
+"""Public flash-attention op: Pallas forward + backward kernels wired into
+a custom VJP (interpret mode off-TPU), with the pure-jnp oracle exposed for
+tests."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.flash_attention import ref as _ref
+from repro.kernels.flash_attention.kernel import flash_attention_kernel
+from repro.kernels.flash_attention.kernel_bwd import \
+    flash_attention_bwd_kernel
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.lru_cache(maxsize=None)
+def _vjp_fn(causal: bool, q_offset: int, block_q: int, block_k: int,
+            interpret: bool):
+    kw = dict(causal=causal, q_offset=q_offset, block_q=block_q,
+              block_k=block_k, interpret=interpret)
+
+    @jax.custom_vjp
+    def f(q, k, v):
+        out, _ = flash_attention_kernel(q, k, v, **kw)
+        return out
+
+    def fwd(q, k, v):
+        out, lse = flash_attention_kernel(q, k, v, **kw)
+        return out, (q, k, v, out, lse)
+
+    def bwd(res, do):
+        q, k, v, out, lse = res
+        return flash_attention_bwd_kernel(q, k, v, out, lse, do, **kw)
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+def flash_attention(q, k, v, *, causal: bool = True, q_offset: int = 0,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool | None = None):
+    """Differentiable flash attention with GQA.
+
+    q: (B,Sq,Hq,D), k/v: (B,Skv,Hkv,D) -> (B,Sq,Hq,D).  Forward and
+    backward both run as Pallas kernels (O(block) VMEM working set, causal
+    block skipping); the LSE residual makes the backward exact.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    return _vjp_fn(causal, q_offset, block_q, block_k, interpret)(q, k, v)
+
+
+attention_ref = _ref.attention_ref

@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for causal GQA flash attention."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def attention_ref(q, k, v, *, causal: bool = True,
+                  q_offset: int = 0) -> jnp.ndarray:
+    """Naive softmax attention.
+
+    q: (B, Sq, Hq, D); k/v: (B, Skv, Hkv, D); Hq % Hkv == 0.
+    Returns (B, Sq, Hq, D) in q.dtype.
+    """
+    b, sq, hq, d = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    groups = hq // hkv
+    kk = jnp.repeat(k, groups, axis=2)
+    vv = jnp.repeat(v, groups, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) / np.sqrt(d)
+    if causal:
+        q_pos = q_offset + jnp.arange(sq)
+        k_pos = jnp.arange(skv)
+        mask = k_pos[None, :] <= q_pos[:, None]
+        s = jnp.where(mask[None, None], s, -1e30)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    o = jnp.einsum("bhqk,bkhd->bqhd", p, vv.astype(jnp.float32))
+    return o.astype(q.dtype)

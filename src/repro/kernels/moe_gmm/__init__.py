@@ -1,0 +1,3 @@
+from repro.kernels.moe_gmm.ops import grouped_matmul
+
+__all__ = ["grouped_matmul"]

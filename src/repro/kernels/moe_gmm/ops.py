@@ -1,0 +1,21 @@
+"""Public grouped-matmul op: Pallas on TPU, interpret elsewhere."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.moe_gmm.kernel import grouped_matmul_kernel
+from repro.kernels.moe_gmm import ref as _ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def grouped_matmul(x, w, *, interpret: bool | None = None, **blocks):
+    if interpret is None:
+        interpret = not _on_tpu()
+    return grouped_matmul_kernel(x, w, interpret=interpret, **blocks)
+
+
+grouped_matmul_ref = _ref.grouped_matmul_ref

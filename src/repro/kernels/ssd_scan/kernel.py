@@ -1,0 +1,116 @@
+"""SSD intra-chunk kernel, Pallas TPU.
+
+The SSD chunked algorithm splits the sequence into chunks of Q tokens:
+quadratic attention-like compute *within* a chunk (MXU-friendly), linear
+state carry *between* chunks.  This kernel computes, per (batch, chunk,
+head-block) grid cell, entirely in VMEM:
+
+  y_intra[t]    = sum_{s<=t} (C_t.B_s) exp(cum_t - cum_s) dt_s x_s
+  contrib[p,n]  = sum_s exp(cum_Q - cum_s) dt_s B_s x_s   (chunk state)
+  total[h]      = cum_Q                                    (chunk log-decay)
+
+The O(NC) inter-chunk recurrence and the rank-1 y_inter correction are done
+by the caller (ops.py) in plain JAX -- they are tiny (state is (H,P,N)).
+
+VMEM working set per cell at Q=256, HB=4, P=64, N=128, f32:
+  x 256KB + b/c 2x512KB + scores/decay 2x1MB + y 256KB + contrib 128KB
+  ~ 3.7 MB  -- fits v5e VMEM with double buffering.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, ld_ref, dt_ref, b_ref, c_ref,
+                y_ref, contrib_ref, total_ref, *, q: int):
+    # Blocks: x (1,Q,HB,P), ld/dt (1,Q,HB), b/c (1,Q,HB,N).
+    x = x_ref[0].astype(jnp.float32)              # (Q, HB, P)
+    ld = ld_ref[0].astype(jnp.float32)            # (Q, HB)
+    dt = dt_ref[0].astype(jnp.float32)
+    bm = b_ref[0].astype(jnp.float32)             # (Q, HB, N)
+    cm = c_ref[0].astype(jnp.float32)
+
+    cum = jnp.cumsum(ld, axis=0)                  # (Q, HB)
+
+    # scores[h, t, s] = C_t . B_s   (batched over heads on the MXU)
+    ct = jnp.swapaxes(cm, 0, 1)                   # (HB, Q, N)
+    bt = jnp.swapaxes(bm, 0, 1)
+    scores = jax.lax.dot_general(
+        ct, bt, (((2,), (2,)), ((0,), (0,))))     # (HB, Q, Q)
+
+    # decay[h, t, s] = exp(cum_t - cum_s) for s <= t, else 0
+    cum_h = jnp.swapaxes(cum, 0, 1)               # (HB, Q)
+    dec = cum_h[:, :, None] - cum_h[:, None, :]
+    tri = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    w = scores * jnp.where(tri[None], jnp.exp(dec), 0.0)
+    w = w * jnp.swapaxes(dt, 0, 1)[:, None, :]    # weight by dt_s
+
+    xt = jnp.swapaxes(x, 0, 1)                    # (HB, Q, P)
+    y = jax.lax.dot_general(
+        w, xt, (((2,), (1,)), ((0,), (0,))))      # (HB, Q, P)
+    y_ref[0] = jnp.swapaxes(y, 0, 1).astype(y_ref.dtype)
+
+    # Chunk state contribution: sum_s exp(cum_Q - cum_s) dt_s B_s (x) x_s.
+    rem = jnp.exp(cum_h[:, -1:] - cum_h)          # (HB, Q)
+    bw = bt * (rem * jnp.swapaxes(dt, 0, 1))[..., None]   # (HB, Q, N)
+    contrib = jax.lax.dot_general(
+        jnp.swapaxes(xt, 1, 2), bw, (((2,), (1,)), ((0,), (0,))))  # (HB,P,N)
+    contrib_ref[0, 0] = contrib.astype(contrib_ref.dtype)
+    total_ref[0, 0] = cum_h[:, -1].astype(total_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("chunk", "head_block", "interpret"))
+def ssd_chunk_kernel(x, log_decay, dt, b_mat, c_mat, *, chunk: int = 256,
+                     head_block: int = 4, interpret: bool = False):
+    """Per-chunk SSD quantities.
+
+    x: (B,L,H,P); log_decay/dt: (B,L,H); b/c: (B,L,H,N); L % chunk == 0.
+    Returns (y_intra (B,L,H,P) f32, contrib (B,NC,H,P,N) f32,
+             total (B,NC,H) f32).
+    """
+    bsz, l, h, p = x.shape
+    n = b_mat.shape[-1]
+    if l % chunk:
+        raise ValueError(f"L={l} not a multiple of chunk={chunk}")
+    hb = min(head_block, h)
+    if h % hb:
+        hb = 1
+    nc = l // chunk
+
+    grid = (bsz, nc, h // hb)
+    y, contrib, total = pl.pallas_call(
+        functools.partial(_ssd_kernel, q=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, hb, p),
+                         lambda ib, ic, ih: (ib, ic, ih, 0)),
+            pl.BlockSpec((1, chunk, hb), lambda ib, ic, ih: (ib, ic, ih)),
+            pl.BlockSpec((1, chunk, hb), lambda ib, ic, ih: (ib, ic, ih)),
+            pl.BlockSpec((1, chunk, hb, n),
+                         lambda ib, ic, ih: (ib, ic, ih, 0)),
+            pl.BlockSpec((1, chunk, hb, n),
+                         lambda ib, ic, ih: (ib, ic, ih, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, hb, p),
+                         lambda ib, ic, ih: (ib, ic, ih, 0)),
+            pl.BlockSpec((1, 1, hb, p, n),
+                         lambda ib, ic, ih: (ib, ic, ih, 0, 0)),
+            pl.BlockSpec((1, 1, hb), lambda ib, ic, ih: (ib, ic, ih)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, l, h, p), jnp.float32),
+            jax.ShapeDtypeStruct((bsz, nc, h, p, n), jnp.float32),
+            jax.ShapeDtypeStruct((bsz, nc, h), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, log_decay, dt, b_mat, c_mat)
+    return y, contrib, total

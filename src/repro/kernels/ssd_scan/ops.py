@@ -1,0 +1,69 @@
+"""Public SSD op: Pallas intra-chunk kernel + jnp inter-chunk combine."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan.kernel import ssd_chunk_kernel
+from repro.kernels.ssd_scan import ref as _ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, a_log, b_mat, c_mat, *, chunk: int = 256,
+             init_state=None, interpret: bool | None = None):
+    """Full SSD: y (B,L,H,P) f32 and final state (B,H,P,N) f32.
+
+    Same contract as ``ref.ssd_ref``; the quadratic intra-chunk work runs in
+    the Pallas kernel, the (tiny) inter-chunk recurrence in plain JAX.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    bsz, l, h, p = x.shape
+    n = b_mat.shape[-1]
+    q = min(chunk, l)
+    nc = (l + q - 1) // q
+    pad = nc * q - l
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_mat = jnp.pad(b_mat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c_mat = jnp.pad(c_mat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    a = -jnp.exp(a_log.astype(jnp.float32))
+    log_decay = dt.astype(jnp.float32) * a
+
+    y_intra, contrib, total = ssd_chunk_kernel(
+        x, log_decay, dt, b_mat, c_mat, chunk=q, interpret=interpret)
+
+    # Inter-chunk state recurrence: S_c = exp(total_c) S_{c-1} + contrib_c.
+    if init_state is None:
+        init_state = jnp.zeros((bsz, h, p, n), jnp.float32)
+
+    def carry(state, inp):
+        contrib_c, total_c = inp                   # (B,H,P,N), (B,H)
+        prev = state
+        state = state * jnp.exp(total_c)[..., None, None] + contrib_c
+        return state, prev
+
+    final, prev_states = jax.lax.scan(
+        carry, init_state,
+        (jnp.moveaxis(contrib, 1, 0), jnp.moveaxis(total, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)  # (B,NC,H,P,N)
+
+    # y_inter[t] = C_t . (exp(cum_t) * S_prev-of-chunk)
+    cum = jnp.cumsum(log_decay.reshape(bsz, nc, q, h), axis=2)
+    y_inter = jnp.einsum("bcqhn,bcqh,bchpn->bcqhp",
+                         c_mat.reshape(bsz, nc, q, h, n).astype(jnp.float32),
+                         jnp.exp(cum), prev_states)
+    y = y_intra.reshape(bsz, nc, q, h, p) + y_inter
+    return y.reshape(bsz, nc * q, h, p)[:, :l], final
+
+
+ssd_ref = _ref.ssd_ref

@@ -1,0 +1,42 @@
+"""Pure-jnp oracle for the SSD scan: the sequential recurrence.
+
+Deliberately the *naive* O(L) state recurrence (not the chunked algorithm),
+so kernel and model implementations are checked against an independent,
+obviously-correct formulation:
+
+    S_t = exp(dt_t * A) * S_{t-1} + dt_t * B_t (x) x_t
+    y_t = C_t . S_t
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x, dt, a_log, b_mat, c_mat, init_state=None):
+    """x: (B,L,H,P); dt: (B,L,H); a_log: (H,); b/c: (B,L,H,N).
+
+    Returns (y (B,L,H,P) f32, final_state (B,H,P,N) f32)."""
+    bsz, l, h, p = x.shape
+    n = b_mat.shape[-1]
+    a = -jnp.exp(a_log.astype(jnp.float32))
+
+    if init_state is None:
+        init_state = jnp.zeros((bsz, h, p, n), jnp.float32)
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp                      # (B,H,P), (B,H), (B,H,N)
+        decay = jnp.exp(dtt.astype(jnp.float32) * a)
+        contrib = jnp.einsum("bhn,bhp->bhpn",
+                             bt.astype(jnp.float32) *
+                             dtt[..., None].astype(jnp.float32),
+                             xt.astype(jnp.float32))
+        state = state * decay[..., None, None] + contrib
+        y = jnp.einsum("bhn,bhpn->bhp", ct.astype(jnp.float32), state)
+        return state, y
+
+    xs = (jnp.moveaxis(x, 1, 0), jnp.moveaxis(dt, 1, 0),
+          jnp.moveaxis(b_mat, 1, 0), jnp.moveaxis(c_mat, 1, 0))
+    final, ys = jax.lax.scan(step, init_state, xs)
+    return jnp.moveaxis(ys, 0, 1), final

@@ -1,0 +1,277 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware: jax.jit with
+explicit in_shardings over the production mesh, ``.lower().compile()`` must
+succeed, and the compiled artifact yields the roofline terms
+(cost_analysis FLOPs/bytes; collective bytes parsed from the partitioned
+HLO).  Results land in ``results/dryrun/<cell>.json`` for EXPERIMENTS.md.
+
+Run:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch granite_8b \
+      --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro import configs
+from repro.launch import inputs as inp
+from repro.launch import shardspecs as ss
+from repro.launch.costing import hlo_collective_bytes, jaxpr_cost
+from repro.launch.mesh import make_production_mesh
+from repro.models.config import SHAPES, shapes_for
+from repro.optim.adamw import AdamW
+from repro.runtime.sharding import sharding_context
+from repro.runtime.train_loop import make_train_step
+from repro.runtime.serve_loop import make_decode_step, make_prefill_step
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+# TPU v5e hardware model (roofline constants).
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+
+def _lower_cell(cfg, shape, mesh, rules):
+    """Build + lower the cell's step fn.  Returns (lowered, step, args)."""
+    if shape.kind == "train":
+        opt = AdamW(state_dtype=cfg.optimizer_state_dtype)
+        step = make_train_step(
+            cfg, opt, grad_shardings=ss.param_shardings(cfg, mesh, rules))
+        state_abs = ss.abstract_train_state(cfg)
+        batch_abs = inp.train_batch_specs(cfg, shape)
+        in_sh = (ss.train_state_shardings(cfg, mesh, rules),
+                 ss.batch_shardings(cfg, mesh, rules, batch_abs))
+        lowered = jax.jit(step, in_shardings=in_sh).lower(state_abs,
+                                                          batch_abs)
+        return lowered, step, (state_abs, batch_abs)
+    if shape.kind == "prefill":
+        step = make_prefill_step(cfg, max_len=shape.seq_len)
+        tokens_abs, extras_abs = inp.prefill_specs(cfg, shape)
+        in_sh = (ss.param_shardings(cfg, mesh, rules),
+                 ss.batch_shardings(cfg, mesh, rules, {"tokens": None}
+                                    )["tokens"],
+                 ss.batch_shardings(cfg, mesh, rules, extras_abs))
+        args = (ss_abstract_params(cfg), tokens_abs, extras_abs)
+        lowered = jax.jit(step, in_shardings=in_sh).lower(*args)
+        return lowered, step, args
+    # decode
+    step = make_decode_step(cfg)
+    state_abs = inp.decode_state_specs(cfg, shape)
+    tokens_abs = inp.decode_token_specs(shape)
+    in_sh = (ss.param_shardings(cfg, mesh, rules),
+             ss.decode_state_shardings(cfg, mesh, rules, state_abs),
+             ss.batch_shardings(cfg, mesh, rules,
+                                {"last_tokens": None})["last_tokens"])
+    args = (ss_abstract_params(cfg), state_abs, tokens_abs)
+    lowered = jax.jit(step, in_shardings=in_sh).lower(*args)
+    return lowered, step, args
+
+
+def ss_abstract_params(cfg):
+    from repro.models import transformer as tfm
+    return tfm.abstract_params(cfg)
+
+
+def score_tile_bytes(cfg, shape, n_chips: int) -> float:
+    """HBM traffic of attention-score / SSD-decay intermediates that the
+    Pallas kernels (repro.kernels, validated in interpret mode against the
+    jnp oracles) keep in VMEM on the TPU target.
+
+    The XLA fallback path materializes the whole f32 score chain
+    (scores -> mask -> exp, ~3 tensors per pass) between the two attention
+    dots; per (arch x shape) the analytic estimate is
+    passes x chain x B x H x Sq x Skv x 4 bytes (causal halves it), with
+    passes ~= 4 for training (fwd + remat recompute + ~2 bwd) and 1 for
+    prefill, chain ~= 3 (matching the jaxpr byte model, which charges each
+    elementwise output).  Subtracting it yields the kernel-path memory
+    roofline."""
+    b, s = shape.global_batch, shape.seq_len
+    passes = (4.0 if shape.kind == "train" else 1.0) * 3.0
+    total = 0.0
+    if cfg.attn_layers and cfg.n_heads and shape.kind != "decode":
+        total += (passes * b * cfg.n_heads * s * s * 4 * 0.5
+                  * cfg.attn_layers)
+    if cfg.ssm_layers and shape.kind != "decode":
+        q = cfg.ssm_chunk
+        total += (passes * b * cfg.n_ssm_heads * s * q * 4
+                  * cfg.ssm_layers)
+    return total / n_chips
+
+
+def _kernel_adjusted(cfg, shape, n_chips, bytes_dev, t_compute,
+                     t_collective) -> dict:
+    adj_bytes = max(bytes_dev - score_tile_bytes(cfg, shape, n_chips),
+                    bytes_dev * 0.1)
+    t_mem = adj_bytes / HBM_BW
+    dom = max((("compute", t_compute), ("memory", t_mem),
+               ("collective", t_collective)), key=lambda kv: kv[1])
+    return {"t_memory_s": t_mem, "dominant": dom[0], "bound_s": dom[1]}
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             out_dir: str = RESULTS_DIR, force: bool = False,
+             overrides: dict | None = None) -> dict:
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    cell = f"{configs.canonical(arch)}__{shape_name}__{mesh_name}"
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, cell + ".json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+
+    cfg = configs.get(arch)
+    if overrides:
+        import dataclasses
+        typed = {}
+        for k, v in overrides.items():
+            cur = getattr(cfg, k)
+            typed[k] = type(cur)(v) if cur is not None else v
+        cfg = dataclasses.replace(cfg, **typed)
+    shape = SHAPES[shape_name]
+    result = {"cell": cell, "arch": configs.canonical(arch),
+              "shape": shape_name, "mesh": mesh_name, "ok": False}
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        n_chips = int(mesh.devices.size)
+        rules = ss.rules_for(cfg, shape, mesh_size=n_chips)
+        cfg = ss.effective_config(cfg, shape, n_chips)
+        with sharding_context(mesh, rules):
+            lowered, step_fn, abstract_args = _lower_cell(cfg, shape, mesh,
+                                                          rules)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            mem = compiled.memory_analysis()
+            xla_cost = compiled.cost_analysis()
+            hlo_text = compiled.as_text()
+            coll_raw = hlo_collective_bytes(hlo_text)
+            coll = hlo_collective_bytes(hlo_text, f32_as_bf16=True)
+            del hlo_text
+            # Exact FLOPs/bytes from the jaxpr (scan trip counts included);
+            # global, so divide by chips for the per-device roofline terms.
+            jcost = jaxpr_cost(jax.make_jaxpr(step_fn)(*abstract_args))
+        flops_dev = jcost["flops"] / n_chips
+        bytes_dev = jcost["bytes"] / n_chips
+        t_compute = flops_dev / PEAK_FLOPS
+        t_memory = bytes_dev / HBM_BW
+        t_collective = coll.get("total", 0) / ICI_BW
+        dominant = max((("compute", t_compute), ("memory", t_memory),
+                        ("collective", t_collective)), key=lambda kv: kv[1])
+        model_flops = cfg.flops_per_token(shape.seq_len) * (
+            shape.global_batch * shape.seq_len if shape.kind == "train"
+            else 0)
+        result.update({
+            "ok": True,
+            "n_chips": n_chips,
+            "lower_s": round(t_lower, 1),
+            "compile_s": round(t_compile, 1),
+            "flops_per_device": flops_dev,
+            "bytes_per_device": bytes_dev,
+            "collective_bytes_per_device": coll,
+            "collective_bytes_raw_f32_legalized": coll_raw,
+            "xla_cost_analysis": {
+                "flops": float(xla_cost.get("flops", 0.0)),
+                "bytes_accessed": float(xla_cost.get("bytes accessed", 0.0)),
+                "note": "while bodies counted once by XLA; see costing.py",
+            },
+            "memory": {
+                "argument_bytes": mem.argument_size_in_bytes,
+                "output_bytes": mem.output_size_in_bytes,
+                "temp_bytes": mem.temp_size_in_bytes,
+                "alias_bytes": mem.alias_size_in_bytes,
+            },
+            "roofline": {
+                "t_compute_s": t_compute,
+                "t_memory_s": t_memory,
+                "t_collective_s": t_collective,
+                "dominant": dominant[0],
+                "bound_s": dominant[1],
+            },
+            "roofline_kernel_path": _kernel_adjusted(
+                cfg, shape, n_chips, bytes_dev, t_compute, t_collective),
+            "model_flops_global": model_flops,
+            "useful_flops_ratio": (model_flops / jcost["flops"]
+                                   if jcost["flops"] and model_flops
+                                   else None),
+        })
+    except Exception as e:  # record failures, they are bugs to fix
+        result["error"] = f"{type(e).__name__}: {e}"
+        result["traceback"] = traceback.format_exc()[-4000:]
+    result["wall_s"] = round(time.time() - t0, 1)
+    with open(path, "w") as f:
+        json.dump(result, f, indent=1)
+    return result
+
+
+def cells(mesh: str = "both"):
+    for arch in configs.ARCHS:
+        cfg = configs.get(arch)
+        for shape_name in shapes_for(cfg):
+            if mesh in ("single", "both"):
+                yield arch, shape_name, False
+            if mesh in ("multi", "both"):
+                yield arch, shape_name, True
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out-dir", default=RESULTS_DIR)
+    ap.add_argument("--overrides", default=None,
+                    help="comma-separated cfg overrides, e.g. "
+                         "microbatches=16,parallelism=tp (baseline runs)")
+    args = ap.parse_args()
+    overrides = None
+    if args.overrides:
+        overrides = dict(kv.split("=", 1) for kv in args.overrides.split(","))
+
+    todo = []
+    if args.all:
+        todo = list(cells(args.mesh))
+    else:
+        archs = [args.arch] if args.arch else configs.ARCHS
+        for arch in archs:
+            shapes = ([args.shape] if args.shape
+                      else shapes_for(configs.get(arch)))
+            for sh in shapes:
+                if args.mesh in ("single", "both"):
+                    todo.append((arch, sh, False))
+                if args.mesh in ("multi", "both"):
+                    todo.append((arch, sh, True))
+
+    failures = 0
+    for arch, shape_name, multi in todo:
+        r = run_cell(arch, shape_name, multi, force=args.force,
+                     out_dir=args.out_dir, overrides=overrides)
+        status = "OK " if r["ok"] else "FAIL"
+        extra = (f"flops/dev={r['flops_per_device']:.3e} "
+                 f"dominant={r['roofline']['dominant']}"
+                 if r["ok"] else r.get("error", ""))
+        print(f"[{status}] {r['cell']:55s} {r['wall_s']:7.1f}s  {extra}",
+              flush=True)
+        failures += 0 if r["ok"] else 1
+    print(f"\n{len(todo) - failures}/{len(todo)} cells compiled")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""ShapeDtypeStruct stand-ins for every lowered function's model inputs.
+
+Weak-type-correct, shardable, no device allocation -- the dry-run lowers
+directly from these.  Modality frontends are stubs: input_specs supplies
+precomputed patch/frame embeddings (the assigned-architecture contract).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as tfm
+from repro.models.config import ModelConfig, ShapeConfig
+
+PyTree = Any
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    s_text = s - cfg.n_prefix_embeds if cfg.family == "vlm" else s
+    specs = {
+        "tokens": jax.ShapeDtypeStruct((b, s_text), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((b, s_text), jnp.int32),
+        "weights": jax.ShapeDtypeStruct((b, s_text), jnp.float32),
+    }
+    if cfg.family == "vlm":
+        specs["vision_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.n_prefix_embeds, cfg.d_model), jnp.float32)
+    if cfg.family == "encdec":
+        specs["frames"] = jax.ShapeDtypeStruct(
+            (b, cfg.enc_seq, cfg.d_model), jnp.float32)
+    return specs
+
+
+def prefill_specs(cfg: ModelConfig, shape: ShapeConfig
+                  ) -> tuple[jax.ShapeDtypeStruct, dict]:
+    b, s = shape.global_batch, shape.seq_len
+    s_text = s - cfg.n_prefix_embeds if cfg.family == "vlm" else s
+    tokens = jax.ShapeDtypeStruct((b, s_text), jnp.int32)
+    extras = {}
+    if cfg.family == "vlm":
+        extras["vision_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.n_prefix_embeds, cfg.d_model), jnp.float32)
+    if cfg.family == "encdec":
+        extras["frames"] = jax.ShapeDtypeStruct(
+            (b, cfg.enc_seq, cfg.d_model), jnp.float32)
+    return tokens, extras
+
+
+def decode_state_specs(cfg: ModelConfig, shape: ShapeConfig) -> PyTree:
+    """Abstract serve state: caches sized to shape.seq_len."""
+    b, s = shape.global_batch, shape.seq_len
+
+    def build():
+        state = {"cache": tfm.init_decode_state(cfg, b, s),
+                 "pos": jnp.zeros((b,), jnp.int32)}
+        if cfg.family == "encdec":
+            state["enc_frames"] = jnp.zeros((b, cfg.enc_seq, cfg.d_model),
+                                            jnp.float32)
+        return state
+
+    return jax.eval_shape(build)
+
+
+def decode_token_specs(shape: ShapeConfig) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)

@@ -1,0 +1,39 @@
+"""Production meshes.
+
+Functions, not module-level constants: importing this module never touches
+jax device state (the dry-run must set XLA_FLAGS before first jax init).
+
+Single pod: 16x16 = 256 chips over ("data", "model").
+Multi-pod:  2x16x16 = 512 chips over ("pod", "data", "model"); the "pod"
+axis crosses the DCN, so cross-pod traffic is only data-parallel gradient
+reduction (optionally int8-compressed, repro.optim.compress).
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_pod_mesh(n_pods: int):
+    """Elastic-resize meshes: n_pods x 16 x 16 (n_pods=1 drops the axis)."""
+    if n_pods == 1:
+        return make_production_mesh(multi_pod=False)
+    return jax.make_mesh((n_pods, 16, 16), ("pod", "data", "model"),
+                         axis_types=(AxisType.Auto,) * 3)
+
+
+def make_host_mesh(shape=None, axes=("data", "model")):
+    """Small mesh over whatever devices exist (tests / examples)."""
+    n = len(jax.devices())
+    if shape is None:
+        shape = (n, 1) if len(axes) == 2 else (n,)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))

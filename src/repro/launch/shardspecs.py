@@ -1,0 +1,221 @@
+"""Build the concrete NamedShardings for every lowered function's inputs.
+
+All shardings derive from the logical-axis rule table (repro.runtime
+.sharding.Rules); per-(arch x shape) specializations -- e.g. the KV-cache
+sequence axis sharded over "data" for long_500k -- are picked in
+``rules_for``.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import transformer as tfm
+from repro.models.config import ModelConfig, ShapeConfig
+from repro.runtime.sharding import Rules
+
+PyTree = Any
+
+
+def dp_applicable(cfg: ModelConfig, shape: ShapeConfig,
+                  mesh_size: int) -> bool:
+    # MoE archs keep expert parallelism: without an expert axis the dispatch
+    # falls back to the GSPMD scatter path, whose bucket replication costs
+    # ~100x the EP shard_map collectives (measured; EXPERIMENTS.md SPerf).
+    return (cfg.parallelism == "dp" and shape.kind == "train"
+            and shape.global_batch % mesh_size == 0
+            and cfg.n_experts == 0)
+
+
+def effective_config(cfg: ModelConfig, shape: ShapeConfig,
+                     mesh_size: int) -> ModelConfig:
+    """Config adjustments implied by the chosen parallelism: pure DP puts
+    one example per chip, so gradient accumulation is unnecessary (and
+    would make the per-chip microbatch fractional)."""
+    import dataclasses
+    if dp_applicable(cfg, shape, mesh_size) and cfg.microbatches > 1:
+        return dataclasses.replace(cfg, microbatches=1)
+    return cfg
+
+
+def rules_for(cfg: ModelConfig, shape: ShapeConfig,
+              overrides: Optional[dict] = None,
+              model_axis: int = 16, mesh_size: int = 256) -> Rules:
+    """Per-(arch x shape) rule specialization.
+
+    Head counts that do not divide the model axis cannot be tensor-parallel
+    without resharding storms (GSPMD's "involuntary full rematerialization"),
+    so:
+      * odd q-head archs (minicpm 36H, whisper 6H) drop TP entirely and
+        divide compute over the *sequence* axis instead (Megatron-SP-style
+        activation sharding; weights FSDP over both data and model axes);
+      * odd kv-head archs (GQA kv=8 / MQA kv=1 on a 16-way axis) replicate
+        KV heads for train/prefill and shard the *cache sequence* for decode
+        (distributed flash-decode) -- otherwise a 32k MQA cache would be
+        replicated 16x and blow HBM.
+    """
+    kw: dict = {}
+    odd_heads = bool(cfg.n_heads) and cfg.n_heads % model_axis != 0
+    odd_kv = bool(cfg.n_kv_heads) and cfg.n_kv_heads % model_axis != 0
+
+    if dp_applicable(cfg, shape, mesh_size):
+        # Pure DP + ZeRO-3: one example per chip, no tensor parallelism --
+        # activation collectives vanish; the wire carries only per-layer
+        # parameter all-gathers and the gradient reduce-scatter.
+        kw.update(batch=("pod", "data", "model"), heads=None, kv_heads=None,
+                  ffn=None, vocab=None, expert=None,
+                  embed_p=("data", "model"))
+        if overrides:
+            kw.update(overrides)
+        return Rules(**kw)
+
+    if odd_heads:
+        kw.update(heads=None, kv_heads=None, ffn=None, vocab=None,
+                  embed_p=("data", "model"))
+        if shape.kind in ("train", "prefill"):
+            kw["seq"] = ("model",)
+            kw["inner_seq"] = ("model",)
+        else:
+            kw["kv_seq"] = ("model",)
+    elif cfg.shard_activation_seq and shape.kind == "train":
+        # Megatron-SP: between-block activations (and remat residuals)
+        # seq-sharded over "model"; blocks gather/scatter at their edges.
+        kw["seq"] = ("model",)
+    if not odd_heads and odd_kv:
+        kw["kv_heads"] = None
+        if shape.kind == "decode":
+            # Shard the cache over sequence; attention reduces over it.
+            kw["kv_seq"] = ("model",)
+            kw["heads"] = None
+
+    if shape.name == "long_500k":
+        # global_batch=1: the batch axis cannot absorb "data"; the KV/state
+        # sequence dim takes it (distributed flash-decode over 32 ways).
+        kw["kv_seq"] = ("pod", "data")
+        kw["batch"] = ()
+
+    if overrides:
+        kw.update(overrides)
+    return Rules(**kw)
+
+
+def _axis_size(mesh: Mesh, spec_entry) -> int:
+    if spec_entry is None:
+        return 1
+    if isinstance(spec_entry, str):
+        return mesh.shape[spec_entry]
+    out = 1
+    for a in spec_entry:
+        out *= mesh.shape[a]
+    return out
+
+
+def _sharding(mesh: Mesh, rules: Rules, axes, shape=None) -> NamedSharding:
+    """Logical axes -> NamedSharding; ``shape`` (if given) drops sharding on
+    dims the mesh axes do not divide (explicit in_shardings require exact
+    divisibility, unlike with_sharding_constraint)."""
+    entries = [rules.mesh_axes(a, mesh) for a in axes]
+    if shape is not None:
+        entries = [e if (e is None or shape[i] % _axis_size(mesh, e) == 0)
+                   else None
+                   for i, e in enumerate(entries)]
+    return NamedSharding(mesh, P(*entries))
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh, rules: Rules) -> PyTree:
+    from repro.models.transformer import param_specs
+    return jax.tree_util.tree_map(
+        lambda spec: _sharding(mesh, rules, spec[1], shape=spec[0]),
+        param_specs(cfg),
+        is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2
+        and isinstance(x[0], tuple))
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+def batch_shardings(cfg: ModelConfig, mesh: Mesh, rules: Rules,
+                    batch_specs: dict) -> dict:
+    out = {}
+    for k, spec in batch_specs.items():
+        shape = getattr(spec, "shape", None)
+        if k in ("tokens", "labels", "weights"):
+            out[k] = _sharding(mesh, rules, ("batch", None), shape)
+        elif k in ("vision_embeds", "frames"):
+            out[k] = _sharding(mesh, rules, ("batch", None, None), shape)
+        elif k in ("pos", "last_tokens"):
+            out[k] = _sharding(mesh, rules, ("batch",), shape)
+        else:
+            out[k] = replicated(mesh)
+    return out
+
+
+def opt_state_shardings(cfg: ModelConfig, mesh: Mesh, rules: Rules):
+    ps = param_shardings(cfg, mesh, rules)
+    from repro.optim.adamw import OptState
+    return OptState(m=ps, v=ps, count=replicated(mesh))
+
+
+def train_state_shardings(cfg: ModelConfig, mesh: Mesh, rules: Rules):
+    from repro.runtime.train_loop import TrainState
+    return TrainState(
+        params=param_shardings(cfg, mesh, rules),
+        opt_state=opt_state_shardings(cfg, mesh, rules),
+        step=replicated(mesh),
+        compress_residual=None)
+
+
+def decode_state_shardings(cfg: ModelConfig, mesh: Mesh, rules: Rules,
+                           state: PyTree) -> PyTree:
+    """Match init_decode_state's structure (stacked-layer caches)."""
+    def for_leaf(path, leaf):
+        names = [p.key if hasattr(p, "key") else str(getattr(p, "idx", p))
+                 for p in path]
+        name = names[-1]
+        joined = "/".join(str(n) for n in names)
+        nd = len(leaf.shape)
+        shp = tuple(leaf.shape)
+        if name in ("k", "v"):          # (L, B, S, Hkv, D)
+            return _sharding(mesh, rules,
+                             ("layer", "batch", "kv_seq", "kv_heads", None),
+                             shp)
+        if name == "cursor":
+            return replicated(mesh)
+        if name == "ssm":               # (L, B, H, P, N)
+            return _sharding(mesh, rules,
+                             ("layer", "batch", "heads", None, None), shp)
+        if "conv" in joined:            # (L, B, W-1, C): C sharded for x
+            return _sharding(mesh, rules,
+                             ("layer", "batch", None,
+                              "heads" if leaf.shape[-1] > 512 else None),
+                             shp)
+        if name == "pos":               # (B,)
+            return _sharding(mesh, rules, ("batch",), shp)
+        if name == "enc_frames":        # (B, S_enc, D)
+            return _sharding(mesh, rules, ("batch", None, None), shp)
+        return replicated(mesh) if nd == 0 else _sharding(
+            mesh, rules, ("batch",) + (None,) * (nd - 1), shp)
+    return jax.tree_util.tree_map_with_path(for_leaf, state)
+
+
+def abstract_opt_state(cfg: ModelConfig, params_abs: PyTree):
+    from repro.optim.adamw import OptState
+    dt = jnp.dtype(cfg.optimizer_state_dtype)
+    mv = jax.tree_util.tree_map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, dt), params_abs)
+    return OptState(m=mv, v=mv,
+                    count=jax.ShapeDtypeStruct((), jnp.int32))
+
+
+def abstract_train_state(cfg: ModelConfig):
+    from repro.runtime.train_loop import TrainState
+    params = tfm.abstract_params(cfg)
+    return TrainState(params=params,
+                      opt_state=abstract_opt_state(cfg, params),
+                      step=jax.ShapeDtypeStruct((), jnp.int32),
+                      compress_residual=None)

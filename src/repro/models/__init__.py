@@ -1,0 +1,8 @@
+"""Model zoo: configs, layers, and family forwards."""
+
+from repro.models.config import (ModelConfig, ShapeConfig, SHAPES,
+                                 shapes_for, sub_quadratic)
+from repro.models import layers, moe, ssd, transformer
+
+__all__ = ["ModelConfig", "ShapeConfig", "SHAPES", "shapes_for",
+           "sub_quadratic", "layers", "moe", "ssd", "transformer"]

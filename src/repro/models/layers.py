@@ -1,0 +1,302 @@
+"""Core model primitives: RMSNorm, RoPE, GQA attention, MLP, streamed xent.
+
+Attention uses an online-softmax formulation scanned over key blocks (the
+pure-JAX twin of the Pallas flash kernel in ``repro.kernels``): memory stays
+O(block) instead of O(seq^2), which is what lets the 32k prefill and 500k
+decode shapes compile within v5e HBM in the dry-run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.runtime.sharding import shard
+
+NEG_INF = -1e30
+
+
+# ----------------------------------------------------------------- normals
+@partial(jax.custom_vjp, nondiff_argnums=(2,))
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """RMSNorm with f32 internals and *narrow-dtype cotangents*.
+
+    The custom VJP computes dx in f32 but hands back a bf16 cotangent, so
+    under sequence-parallel sharding the backward reduce-scatter moves bf16
+    bytes -- with plain autodiff, GSPMD places the collective on the f32
+    upcast's cotangent and moves 2x the data (EXPERIMENTS.md SPerf,
+    nemotron iteration 4).
+    """
+    y, _ = _rms_norm_fwd(x, scale, eps)
+    return y
+
+
+def _rms_norm_fwd(x, scale, eps):
+    xf = x.astype(jnp.float32)
+    r = jax.lax.rsqrt(jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+                      + eps)
+    y = ((xf * r) * scale).astype(x.dtype)
+    return y, (x, scale, r)
+
+
+def _rms_norm_bwd(eps, res, dy):
+    x, scale, r = res
+    xf = x.astype(jnp.float32)
+    dyf = dy.astype(jnp.float32) * scale.astype(jnp.float32)
+    d = x.shape[-1]
+    dot = jnp.sum(dyf * xf, axis=-1, keepdims=True)
+    dx = r * (dyf - xf * (r * r) * dot / d)
+    dscale = jnp.sum(dy.astype(jnp.float32) * xf * r,
+                     axis=tuple(range(x.ndim - 1)))
+    return dx.astype(x.dtype), dscale.astype(scale.dtype)
+
+
+rms_norm.defvjp(_rms_norm_fwd, _rms_norm_bwd)
+
+
+# -------------------------------------------------------------------- RoPE
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    freqs = rope_frequencies(x.shape[-1], theta)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (.., s, hd/2)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------- attention
+def _block_attend(q, k, v, mask, scale):
+    """One (q-block x kv-block) online-softmax partial.
+
+    q: (B, Hq, Sq, D)  k/v: (B, Hkv, Bk, D)  mask: (Sq, Bk) or None
+    Returns (partial unnormalized out, row max, row sumexp).
+
+    GQA via grouped einsum -- K/V are *not* materialized per query head
+    (granite-20b MQA would otherwise 48x its KV traffic).
+    """
+    b, hq, sq, d = q.shape
+    hkv = k.shape[1]
+    groups = hq // hkv
+    qg = q.reshape(b, hkv, groups, sq, d)
+    # Narrow-dtype operands, f32 accumulation: the MXU accumulates in f32
+    # natively, and bf16 reads halve score-producing HBM traffic vs
+    # upcasting the operands first (EXPERIMENTS.md SPerf, granite iter. 2).
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, k,
+                   preferred_element_type=jnp.float32) * scale
+    if mask is not None:
+        s = jnp.where(mask[None, None, None, :, :], s, NEG_INF)
+    m = jnp.max(s, axis=-1)
+    p = jnp.exp(s - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    flat = lambda t: t.reshape((b, hq) + t.shape[3:])
+    return flat(o), flat(m), flat(l)
+
+
+def flash_attention_xla(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, q_offset: int = 0,
+                        kv_len: jax.Array | None = None,
+                        block_k: int = 1024) -> jax.Array:
+    """Online-softmax attention, scanned over KV blocks.
+
+    q: (B, Sq, Hq, D), k/v: (B, Skv, Hkv, D).  ``q_offset`` is the absolute
+    position of q[0] (prefill continuation / decode).  ``kv_len`` optionally
+    masks the tail of the KV buffer (ragged decode caches).
+    Returns (B, Sq, Hq, D) in q.dtype.
+    """
+    b, sq, hq, d = q.shape
+    skv = k.shape[1]
+    scale = 1.0 / np.sqrt(d)
+    qt = jnp.swapaxes(q, 1, 2)                       # (B, Hq, Sq, D)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    if sq <= 8:
+        # Decode fast path: one einsum over the whole (possibly seq-sharded)
+        # KV; the softmax reductions over the sharded axis become the
+        # cross-device combine of distributed flash-decode.
+        q_pos = q_offset + jnp.arange(sq)
+        k_pos = jnp.arange(skv)
+        mask = jnp.ones((sq, skv), bool)
+        if causal:
+            mask &= k_pos[None, :] <= q_pos[:, None]
+        if kv_len is not None:
+            mask &= (k_pos < kv_len)[None, :]
+        o, m, l = _block_attend(qt, kt, vt, mask, scale)
+        out = o / jnp.maximum(l, 1e-30)[..., None]
+        return jnp.swapaxes(out, 1, 2).astype(q.dtype)
+    block_k = min(block_k, skv)
+    n_blocks = (skv + block_k - 1) // block_k
+    pad = n_blocks * block_k - skv
+    if pad:
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    kt = kt.reshape(b, kt.shape[1], n_blocks, block_k, d)
+    vt = vt.reshape(b, vt.shape[1], n_blocks, block_k, d)
+    q_pos = q_offset + jnp.arange(sq)
+
+    def step(carry, blk):
+        o, m, l = carry
+        kb, vb, blk_idx = blk
+        k_pos = blk_idx * block_k + jnp.arange(block_k)
+        mask = jnp.ones((sq, block_k), dtype=bool)
+        if causal:
+            mask &= k_pos[None, :] <= q_pos[:, None]
+        mask &= (k_pos[None, :] < skv)
+        if kv_len is not None:
+            mask &= (k_pos[None, :] < kv_len)
+        ob, mb, lb = _block_attend(qt, kb, vb, mask, scale)
+        m_new = jnp.maximum(m, mb)
+        alpha = jnp.exp(m - m_new)
+        beta = jnp.exp(mb - m_new)
+        o = o * alpha[..., None] + ob * beta[..., None]
+        l = l * alpha + lb * beta
+        return (o, m_new, l), None
+
+    o0 = jnp.zeros((b, hq, sq, d), jnp.float32)
+    m0 = jnp.full((b, hq, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hq, sq), jnp.float32)
+    kb = jnp.moveaxis(kt, 2, 0)                      # (n_blocks, B, H, bk, D)
+    vb = jnp.moveaxis(vt, 2, 0)
+    (o, m, l), _ = jax.lax.scan(
+        step, (o0, m0, l0), (kb, vb, jnp.arange(n_blocks)))
+    out = o / jnp.maximum(l, 1e-30)[..., None]
+    return jnp.swapaxes(out, 1, 2).astype(q.dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class AttentionParamsSpec:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+
+
+def attention_param_specs(cfg) -> dict:
+    d, hq, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    return {
+        "wq": ((d, hq * hd), ("embed_p", "heads")),
+        "wk": ((d, hkv * hd), ("embed_p", "kv_heads")),
+        "wv": ((d, hkv * hd), ("embed_p", "kv_heads")),
+        "wo": ((hq * hd, d), ("heads", "embed_p")),
+    }
+
+
+def attention(params: dict, x: jax.Array, cfg, *, causal: bool = True,
+              positions: jax.Array | None = None,
+              kv_cache: dict | None = None,
+              cross_kv: tuple | None = None,
+              attn_impl: str = "xla") -> tuple[jax.Array, dict | None]:
+    """GQA attention with optional KV cache (decode) or cross-KV (enc-dec).
+
+    x: (B, S, D).  Returns (out, updated_cache).
+    """
+    b, s, _ = x.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+
+    q = (x @ params["wq"]).reshape(b, s, hq, hd)
+    if cross_kv is not None:
+        k, v = cross_kv
+        q = shard(q, "batch", "inner_seq", "heads", None)
+        out = flash_attention_xla(q, k, v, causal=False)
+    else:
+        k = (x @ params["wk"]).reshape(b, s, hkv, hd)
+        v = (x @ params["wv"]).reshape(b, s, hkv, hd)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        q = shard(q, "batch", "inner_seq", "heads", None)
+        k = shard(k, "batch", "kv_seq", "kv_heads", None)
+        v = shard(v, "batch", "kv_seq", "kv_heads", None)
+        if kv_cache is not None:
+            # Decode: append at cursor, attend over the filled prefix.
+            cur = kv_cache["cursor"]           # scalar int32
+            ck = jax.lax.dynamic_update_slice_in_dim(
+                kv_cache["k"], k.astype(kv_cache["k"].dtype), cur, axis=1)
+            cv = jax.lax.dynamic_update_slice_in_dim(
+                kv_cache["v"], v.astype(kv_cache["v"].dtype), cur, axis=1)
+            ck = shard(ck, "batch", "kv_seq", "kv_heads", None)
+            cv = shard(cv, "batch", "kv_seq", "kv_heads", None)
+            kv_cache = {"k": ck, "v": cv, "cursor": cur + s}
+            out = flash_attention_xla(q, ck, cv, causal=True, q_offset=cur,
+                                      kv_len=cur + s)
+        else:
+            out = flash_attention_xla(q, k, v, causal=causal)
+    out = shard(out, "batch", "inner_seq", "heads", None)
+    out = out.reshape(b, s, hq * hd) @ params["wo"]
+    return out, kv_cache
+
+
+# --------------------------------------------------------------------- MLP
+def mlp_param_specs(cfg, d_ff: int | None = None) -> dict:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    if cfg.activation == "swiglu":
+        return {
+            "w_gate": ((d, f), ("embed_p", "ffn")),
+            "w_up": ((d, f), ("embed_p", "ffn")),
+            "w_down": ((f, d), ("ffn", "embed_p")),
+        }
+    return {
+        "w_up": ((d, f), ("embed_p", "ffn")),
+        "w_down": ((f, d), ("ffn", "embed_p")),
+    }
+
+
+def mlp(params: dict, x: jax.Array, cfg) -> jax.Array:
+    if cfg.activation == "swiglu":
+        h = jax.nn.silu(x @ params["w_gate"]) * (x @ params["w_up"])
+    elif cfg.activation == "squared_relu":
+        h = jnp.square(jax.nn.relu(x @ params["w_up"]))
+    else:
+        h = jax.nn.gelu(x @ params["w_up"])
+    h = shard(h, "batch", "inner_seq", "ffn")
+    return h @ params["w_down"]
+
+
+# -------------------------------------------------- streamed cross-entropy
+def streamed_xent(h: jax.Array, w_out: jax.Array, labels: jax.Array,
+                  weights: jax.Array, chunk: int = 2048
+                  ) -> tuple[jax.Array, jax.Array]:
+    """Cross-entropy without materializing (B, S, V) logits.
+
+    Scans over sequence chunks: each step computes (B, chunk, V) logits,
+    reduces to per-token loss, and discards them.  Returns (sum loss, sum
+    weights).  h: (B, S, D), w_out: (D, V), labels/weights: (B, S).
+    """
+    b, s, d = h.shape
+    chunk = min(chunk, s)
+    n = (s + chunk - 1) // chunk
+    pad = n * chunk - s
+    if pad:
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        weights = jnp.pad(weights, ((0, 0), (0, pad)))
+    hc = jnp.moveaxis(h.reshape(b, n, chunk, d), 1, 0)
+    lc = jnp.moveaxis(labels.reshape(b, n, chunk), 1, 0)
+    wc = jnp.moveaxis(weights.reshape(b, n, chunk), 1, 0)
+
+    def step(carry, xs):
+        loss_sum, w_sum = carry
+        hh, ll, ww = xs
+        logits = (hh @ w_out).astype(jnp.float32)
+        logits = shard(logits, "batch", None, "vocab")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, ll[..., None], axis=-1)[..., 0]
+        loss = (lse - gold) * ww
+        return (loss_sum + loss.sum(), w_sum + ww.sum()), None
+
+    (loss_sum, w_sum), _ = jax.lax.scan(
+        step, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (hc, lc, wc))
+    return loss_sum, w_sum

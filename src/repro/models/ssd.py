@@ -1,0 +1,206 @@
+"""Mamba2 / SSD (state-space duality) mixer, chunked-scan formulation.
+
+Training/prefill uses the SSD chunked algorithm (arXiv:2405.21060): quadratic
+attention-like compute *within* chunks of length Q, linear state carry
+*between* chunks -- the same structure the Pallas ``ssd_scan`` kernel tiles
+for VMEM.  Decode is the O(1) recurrent update on a (B, H, P, N) state.
+
+Shapes: x (B,L,H,P), dt (B,L,H), B/C (B,L,G,N) with G groups broadcast over
+heads (G=1 for the assigned configs).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.runtime.sharding import shard
+
+
+# --------------------------------------------------------------- SSD core
+def ssd_chunked(x, dt, a_log, b_mat, c_mat, chunk: int,
+                init_state=None) -> tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan.
+
+    x: (B, L, H, P); dt: (B, L, H) (post-softplus); a_log: (H,) with
+    A = -exp(a_log); b_mat/c_mat: (B, L, H, N) (already head-expanded).
+    Returns (y (B,L,H,P), final_state (B,H,P,N)).
+    """
+    bsz, l, h, p = x.shape
+    n = b_mat.shape[-1]
+    q = min(chunk, l)
+    nc = (l + q - 1) // q
+    pad = nc * q - l
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_mat = jnp.pad(b_mat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c_mat = jnp.pad(c_mat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    a = -jnp.exp(a_log.astype(jnp.float32))                  # (H,)
+    log_decay = dt.astype(jnp.float32) * a                   # (B, L', H) <= 0
+
+    def reshape_chunks(t):
+        return jnp.moveaxis(
+            t.reshape((bsz, nc, q) + t.shape[2:]), 1, 0)     # (nc, B, q, ...)
+
+    xc, dtc, bc, cc = map(reshape_chunks, (x, dt, b_mat, c_mat))
+    ldc = reshape_chunks(log_decay)
+
+    if init_state is None:
+        init_state = jnp.zeros((bsz, h, p, n), jnp.float32)
+
+    def chunk_step(state, inputs):
+        xq, dtq, bq, cq, ld = inputs                         # per-chunk
+        cum = jnp.cumsum(ld, axis=1)                         # (B, q, H)
+        # ---- intra-chunk (quadratic within the chunk) ----------------
+        # decay(t,s) = exp(cum_t - cum_s) for s <= t
+        dec = cum[:, :, None, :] - cum[:, None, :, :]        # (B, q, q, H)
+        tri = jnp.tril(jnp.ones((q, q), bool))
+        dec = jnp.where(tri[None, :, :, None], dec, -jnp.inf)
+        lmat = jnp.exp(dec)
+        scores = jnp.einsum("bthn,bshn->btsh", cq.astype(jnp.float32),
+                            bq.astype(jnp.float32))
+        w = scores * lmat * dtq[:, None, :, :].astype(jnp.float32)
+        y_intra = jnp.einsum("btsh,bshp->bthp", w,
+                             xq.astype(jnp.float32))
+        # ---- inter-chunk (carry state) --------------------------------
+        y_inter = jnp.einsum("bthn,bhpn->bthp",
+                             cq.astype(jnp.float32) *
+                             jnp.exp(cum)[..., None],
+                             state)
+        # ---- state update ---------------------------------------------
+        total = cum[:, -1:, :]                               # (B, 1, H)
+        rem = jnp.exp(total - cum)                           # decay to end
+        contrib = jnp.einsum(
+            "bshn,bshp->bhpn",
+            (bq.astype(jnp.float32) * (rem * dtq)[..., None]),
+            xq.astype(jnp.float32))
+        state = state * jnp.exp(total[:, 0, :])[:, :, None, None] + contrib
+        return state, (y_intra + y_inter)
+
+    state, yc = jax.lax.scan(chunk_step, init_state, (xc, dtc, bc, cc, ldc))
+    y = jnp.moveaxis(yc, 0, 1).reshape(bsz, nc * q, h, p)[:, :l]
+    return y.astype(x.dtype), state
+
+
+def ssd_decode_step(state, x, dt, a_log, b_mat, c_mat):
+    """One-token recurrent update.
+
+    state: (B,H,P,N); x: (B,1,H,P); dt: (B,1,H); b/c: (B,1,H,N).
+    Returns (y (B,1,H,P), new state).
+    """
+    a = -jnp.exp(a_log.astype(jnp.float32))
+    decay = jnp.exp(dt[:, 0].astype(jnp.float32) * a)        # (B, H)
+    contrib = jnp.einsum("bhn,bhp->bhpn",
+                         b_mat[:, 0].astype(jnp.float32) *
+                         dt[:, 0, :, None].astype(jnp.float32),
+                         x[:, 0].astype(jnp.float32))
+    new_state = state * decay[:, :, None, None] + contrib
+    y = jnp.einsum("bhn,bhpn->bhp", c_mat[:, 0].astype(jnp.float32),
+                   new_state)
+    return y[:, None].astype(x.dtype), new_state
+
+
+# ----------------------------------------------------------- Mamba2 block
+def ssd_param_specs(cfg) -> dict:
+    """Separate projections per component (z, x, B, C, dt).
+
+    A single fused in_proj would put the z|x|B|C|dt split boundaries inside
+    tensor-parallel shards (resharding copies every layer); separate
+    matmuls keep each output axis cleanly sharded -- z/x over "heads"
+    (d_inner = heads*head_dim), B/C/dt replicated (tiny).
+    """
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    w = cfg.ssm_conv_width
+    return {
+        "in_z": ((d, di), ("embed_p", "heads")),
+        "in_x": ((d, di), ("embed_p", "heads")),
+        "in_b": ((d, n), ("embed_p", None)),
+        "in_c": ((d, n), ("embed_p", None)),
+        "in_dt": ((d, h), ("embed_p", "heads")),
+        "conv_x_w": ((w, di), (None, "heads")),
+        "conv_x_b": ((di,), ("heads",)),
+        "conv_b_w": ((w, n), (None, None)),
+        "conv_b_b": ((n,), (None,)),
+        "conv_c_w": ((w, n), (None, None)),
+        "conv_c_b": ((n,), (None,)),
+        "a_log": ((h,), ("heads",)),
+        "d_skip": ((h,), ("heads",)),
+        "dt_bias": ((h,), ("heads",)),
+        "norm_scale": ((di,), ("heads",)),
+        "out_proj": ((di, d), ("heads", "embed_p")),
+    }
+
+
+def _causal_conv(x, w, b, state=None):
+    """Depthwise causal conv, width W.  x: (B, L, C); w: (W, C).
+
+    ``state``: (B, W-1, C) trailing context for decode; returns (y, new
+    state)."""
+    width = w.shape[0]
+    if state is None:
+        ctx = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    else:
+        ctx = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = sum(ctx[:, i:i + x.shape[1]] * w[i] for i in range(width)) + b
+    new_state = ctx[:, -(width - 1):] if width > 1 else None
+    return jax.nn.silu(y), new_state
+
+
+def ssd_block(params, x, cfg, *, state=None):
+    """Full Mamba2 mixer.  x: (B, L, D).
+
+    ``state``: None (train/prefill from zeros) or dict(ssm, conv) for decode.
+    Returns (out (B,L,D), new_state_dict).
+    """
+    bsz, l, _ = x.shape
+    di, n, h, p = (cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads,
+                   cfg.ssm_head_dim)
+    z = x @ params["in_z"]                                   # (B, L, di)
+    xs = x @ params["in_x"]
+    b_raw = x @ params["in_b"]                               # (B, L, N)
+    c_raw = x @ params["in_c"]
+    dt_raw = x @ params["in_dt"]                             # (B, L, H)
+    xs = shard(xs, "batch", "inner_seq", "heads")
+
+    cs = (None, None, None) if state is None else state["conv"]
+    xs, new_cx = _causal_conv(xs, params["conv_x_w"], params["conv_x_b"],
+                              cs[0])
+    b_raw, new_cb = _causal_conv(b_raw, params["conv_b_w"],
+                                 params["conv_b_b"], cs[1])
+    c_raw, new_cc = _causal_conv(c_raw, params["conv_c_w"],
+                                 params["conv_c_b"], cs[2])
+    new_conv = (new_cx, new_cb, new_cc)
+
+    xh = xs.reshape(bsz, l, h, p)
+    xh = shard(xh, "batch", "inner_seq", "heads", None)
+    dt = jax.nn.softplus(dt_raw + params["dt_bias"])         # (B, L, H)
+    bh = jnp.broadcast_to(b_raw[:, :, None, :], (bsz, l, h, n))
+    ch = jnp.broadcast_to(c_raw[:, :, None, :], (bsz, l, h, n))
+
+    if state is None or l > 1:
+        init = None if state is None else state["ssm"]
+        y, new_ssm = ssd_chunked(xh, dt, params["a_log"], bh, ch,
+                                 cfg.ssm_chunk, init_state=init)
+    else:
+        y, new_ssm = ssd_decode_step(state["ssm"], xh, dt, params["a_log"],
+                                     bh, ch)
+    y = y + xh * params["d_skip"][:, None].astype(y.dtype)
+    y = y.reshape(bsz, l, di)
+    y = layers.rms_norm(y * jax.nn.silu(z), params["norm_scale"],
+                        cfg.norm_eps)
+    out = y @ params["out_proj"]
+    return out, {"ssm": new_ssm, "conv": new_conv}
+
+
+def ssd_init_state(cfg, batch: int) -> dict:
+    h, p, n = cfg.n_ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    w = cfg.ssm_conv_width - 1
+    return {
+        "ssm": jnp.zeros((batch, h, p, n), jnp.float32),
+        "conv": (jnp.zeros((batch, w, cfg.d_inner), jnp.float32),
+                 jnp.zeros((batch, w, n), jnp.float32),
+                 jnp.zeros((batch, w, n), jnp.float32)),
+    }

@@ -1,0 +1,408 @@
+"""Model zoo: decoder-only LM (dense / MoE / VLM-prefix), Mamba2 SSM,
+Zamba2-style hybrid, and Whisper-style encoder-decoder.
+
+Functional JAX throughout: parameters are pytrees of arrays; repeated layers
+are stacked on a leading "layer" axis and applied with ``jax.lax.scan`` so
+even 96-layer/340B configs lower to compact HLO.  Every parameter carries
+logical sharding axes (see ``param_specs``) consumed by the launcher.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers, moe, ssd
+from repro.models.config import ModelConfig
+from repro.runtime.sharding import shard
+
+PyTree = Any
+
+
+# =========================================================== param specs
+def _stack(specs: dict, n: int) -> dict:
+    """Prepend a stacked-layer axis to every spec in ``specs``."""
+    return {k: ((n,) + shape, ("layer",) + axes)
+            for k, (shape, axes) in specs.items()}
+
+
+def block_param_specs(cfg: ModelConfig) -> dict:
+    """One decoder block (attention + FFN/MoE) including norms."""
+    specs = {
+        "ln1": ((cfg.d_model,), (None,)),
+        "ln2": ((cfg.d_model,), (None,)),
+    }
+    specs.update(layers.attention_param_specs(cfg))
+    if cfg.family == "moe":
+        specs.update(moe.moe_param_specs(cfg))
+    else:
+        specs.update(layers.mlp_param_specs(cfg))
+    return specs
+
+
+def param_specs(cfg: ModelConfig) -> dict:
+    """Full pytree of (shape, logical_axes) for the model."""
+    specs: dict = {
+        "embed": {"table": ((cfg.vocab_size, cfg.d_model),
+                            ("vocab", "embed_p"))},
+        "final_norm": {"scale": ((cfg.d_model,), (None,))},
+    }
+    if not cfg.tie_embeddings:
+        specs["unembed"] = {"table": ((cfg.d_model, cfg.vocab_size),
+                                      ("embed_p", "vocab"))}
+    if cfg.family in ("dense", "moe", "vlm"):
+        specs["blocks"] = _stack(block_param_specs(cfg), cfg.n_layers)
+        if cfg.family == "vlm":
+            specs["vision_proj"] = {
+                "w": ((cfg.d_model, cfg.d_model), ("embed_p", None))}
+    elif cfg.family == "ssm":
+        blk = {"ln": ((cfg.d_model,), (None,))}
+        blk.update(ssd.ssd_param_specs(cfg))
+        specs["blocks"] = _stack(blk, cfg.n_layers)
+    elif cfg.family == "hybrid":
+        blk = {"ln": ((cfg.d_model,), (None,))}
+        blk.update(ssd.ssd_param_specs(cfg))
+        specs["blocks"] = _stack(blk, cfg.n_layers)
+        specs["shared_attn"] = block_param_specs(cfg)
+    elif cfg.family == "encdec":
+        enc_blk = {
+            "ln1": ((cfg.d_model,), (None,)),
+            "ln2": ((cfg.d_model,), (None,)),
+        }
+        enc_blk.update(layers.attention_param_specs(cfg))
+        enc_blk.update(layers.mlp_param_specs(cfg))
+        specs["enc_blocks"] = _stack(enc_blk, cfg.enc_layers)
+        dec_blk = dict(block_param_specs(cfg))
+        dec_blk["ln_cross"] = ((cfg.d_model,), (None,))
+        dec_blk.update({f"cross_{k}": v for k, v in
+                        layers.attention_param_specs(cfg).items()})
+        specs["dec_blocks"] = _stack(dec_blk, cfg.n_layers)
+        specs["enc_norm"] = {"scale": ((cfg.d_model,), (None,))}
+    else:
+        raise ValueError(f"unknown family {cfg.family}")
+    return specs
+
+
+def init_params(key: jax.Array, cfg: ModelConfig) -> PyTree:
+    """Truncated-normal init honoring each spec's shape (smoke/examples)."""
+    specs = param_specs(cfg)
+    flat, treedef = jax.tree_util.tree_flatten(
+        specs, is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2
+        and isinstance(x[0], tuple))
+    keys = jax.random.split(key, len(flat))
+    dtype = jnp.dtype(cfg.param_dtype)
+
+    def init_one(k, spec):
+        shape, _ = spec
+        fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+        if len(shape) == 1 or shape[-1] == 1:
+            # Norm scales / scalars start at one; biases at zero handled
+            # by name below is unnecessary -- scales dominate 1D params.
+            return jnp.ones(shape, dtype)
+        std = 1.0 / np.sqrt(fan_in)
+        return (jax.random.truncated_normal(k, -2, 2, shape, jnp.float32)
+                * std).astype(dtype)
+
+    leaves = [init_one(k, s) for k, s in zip(keys, flat)]
+    params = jax.tree_util.tree_unflatten(treedef, leaves)
+    # Fix-ups: a_log ~ log(uniform[1,16]), dt_bias small, conv bias zero.
+    def fixup(path, x):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        if name == "a_log":
+            return jnp.log(jnp.linspace(1.0, 16.0, x.shape[-1])
+                           ).astype(x.dtype) * jnp.ones_like(x)
+        if name in ("dt_bias", "conv_b"):
+            return jnp.zeros_like(x)
+        if name == "d_skip":
+            return jnp.ones_like(x)
+        return x
+    return jax.tree_util.tree_map_with_path(fixup, params)
+
+
+def abstract_params(cfg: ModelConfig) -> PyTree:
+    """ShapeDtypeStructs for the dry-run (no allocation)."""
+    dtype = jnp.dtype(cfg.param_dtype)
+    return jax.tree_util.tree_map(
+        lambda spec: jax.ShapeDtypeStruct(spec[0], dtype),
+        param_specs(cfg),
+        is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2
+        and isinstance(x[0], tuple))
+
+
+def param_logical_axes(cfg: ModelConfig) -> PyTree:
+    return jax.tree_util.tree_map(
+        lambda spec: spec[1], param_specs(cfg),
+        is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2
+        and isinstance(x[0], tuple))
+
+
+# ============================================================== forward
+def _remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)
+
+
+def _attn_block(blk, h, cfg, positions, cache, cross=None):
+    # Norm outputs are constrained to the *inner* (full-seq) layout so the
+    # SP all-gather happens on the bf16 normed tensor, not on the f32
+    # upcast inside rms_norm (GSPMD otherwise hoists the gather above the
+    # downcast and moves 2x the bytes).
+    hn1 = shard(layers.rms_norm(h, blk["ln1"], cfg.norm_eps),
+                "batch", "inner_seq", "embed")
+    a, cache = layers.attention(blk, hn1, cfg, positions=positions,
+                                kv_cache=cache)
+    # Constrain block outputs back to the between-block layout *before* the
+    # residual add: under SP (seq sharded over "model") this lets GSPMD fuse
+    # the TP partial-sum all-reduce + slice into a reduce-scatter.
+    a = shard(a, "batch", "seq", "embed")
+    h = h + a
+    if cross is not None:
+        c, _ = layers.attention(
+            {k[len("cross_"):]: v for k, v in blk.items()
+             if k.startswith("cross_")},
+            layers.rms_norm(h, blk["ln_cross"], cfg.norm_eps), cfg,
+            cross_kv=cross)
+        h = h + shard(c, "batch", "seq", "embed")
+    hn = shard(layers.rms_norm(h, blk["ln2"], cfg.norm_eps),
+               "batch", "inner_seq", "embed")
+    if cfg.family == "moe":
+        f, aux = moe.moe_ffn(blk, hn, cfg)
+    else:
+        f, aux = layers.mlp(blk, hn, cfg), jnp.zeros((), jnp.float32)
+    f = shard(f, "batch", "seq", "embed")
+    return h + f, cache, aux
+
+
+def _make_cache(cfg: ModelConfig, n_layers: int, batch: int, max_len: int,
+                stacked: bool = True) -> dict:
+    hkv, hd = cfg.n_kv_heads, cfg.head_dim
+    shape = (n_layers, batch, max_len, hkv, hd) if stacked else \
+        (batch, max_len, hkv, hd)
+    cursor = jnp.zeros((n_layers,) if stacked else (), jnp.int32)
+    return {
+        "k": jnp.zeros(shape, jnp.dtype(cfg.param_dtype)),
+        "v": jnp.zeros(shape, jnp.dtype(cfg.param_dtype)),
+        "cursor": cursor,
+    }
+
+
+@dataclasses.dataclass
+class ForwardResult:
+    hidden: jax.Array                  # (B, S, D) final hidden states
+    aux_loss: jax.Array                # MoE auxiliary loss
+    cache: Optional[PyTree] = None     # updated decode state
+
+
+def decoder_forward(params: PyTree, tokens: jax.Array, cfg: ModelConfig, *,
+                    vision_embeds: Optional[jax.Array] = None,
+                    cache: Optional[PyTree] = None,
+                    positions: Optional[jax.Array] = None) -> ForwardResult:
+    """Dense/MoE/VLM decoder-only forward (scan over stacked blocks)."""
+    h = params["embed"]["table"][tokens].astype(jnp.dtype(cfg.param_dtype))
+    if cfg.family == "vlm" and vision_embeds is not None:
+        ve = vision_embeds.astype(h.dtype) @ params["vision_proj"]["w"]
+        h = jnp.concatenate([ve, h], axis=1)
+    h = shard(h, "batch", "seq", "embed")
+    s = h.shape[1]
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+
+    def body(carry, xs):
+        hh, aux = carry
+        blk, layer_cache = xs
+        hh, new_cache, aux_i = _attn_block(blk, hh, cfg, positions,
+                                           layer_cache)
+        hh = shard(hh, "batch", "seq", "embed")
+        return (hh, aux + aux_i), new_cache
+
+    body = _remat(body, cfg)
+    layer_caches = None if cache is None else cache
+    (h, aux), new_caches = jax.lax.scan(
+        body, (h, jnp.zeros((), jnp.float32)),
+        (params["blocks"], layer_caches))
+    h = layers.rms_norm(h, params["final_norm"]["scale"], cfg.norm_eps)
+    return ForwardResult(hidden=h, aux_loss=aux, cache=new_caches)
+
+
+def ssm_forward(params: PyTree, tokens: jax.Array, cfg: ModelConfig, *,
+                cache: Optional[PyTree] = None, **_) -> ForwardResult:
+    h = params["embed"]["table"][tokens].astype(jnp.dtype(cfg.param_dtype))
+    h = shard(h, "batch", "seq", "embed")
+
+    def body(carry, xs):
+        hh = carry
+        blk, st = xs
+        out, new_st = ssd.ssd_block(
+            blk, layers.rms_norm(hh, blk["ln"], cfg.norm_eps), cfg, state=st)
+        hh = shard(hh + out, "batch", "seq", "embed")
+        return hh, new_st
+
+    body = _remat(body, cfg)
+    h, new_states = jax.lax.scan(body, h, (params["blocks"], cache))
+    h = layers.rms_norm(h, params["final_norm"]["scale"], cfg.norm_eps)
+    return ForwardResult(hidden=h, aux_loss=jnp.zeros((), jnp.float32),
+                         cache=new_states)
+
+
+def hybrid_forward(params: PyTree, tokens: jax.Array, cfg: ModelConfig, *,
+                   cache: Optional[PyTree] = None,
+                   positions: Optional[jax.Array] = None, **_
+                   ) -> ForwardResult:
+    """Zamba2-style: Mamba2 backbone + one shared attention block applied
+    every ``attn_every`` layers (its KV caches are per application site)."""
+    h = params["embed"]["table"][tokens].astype(jnp.dtype(cfg.param_dtype))
+    h = shard(h, "batch", "seq", "embed")
+    s = h.shape[1]
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    k = cfg.attn_every
+    n_groups = cfg.n_layers // k          # shared-attn application sites
+    rem = cfg.n_layers - n_groups * k
+    aux = jnp.zeros((), jnp.float32)
+
+    def slice_blocks(lo, hi):
+        return jax.tree_util.tree_map(lambda x: x[lo:hi], params["blocks"])
+
+    def mamba_body(carry, xs):
+        hh = carry
+        blk, st = xs
+        out, new_st = ssd.ssd_block(
+            blk, layers.rms_norm(hh, blk["ln"], cfg.norm_eps), cfg, state=st)
+        hh = shard(hh + out, "batch", "seq", "embed")
+        return hh, new_st
+
+    mamba_body = _remat(mamba_body, cfg)
+    new_ssm, new_kv = [], []
+    cache = cache or {"ssm": None, "kv": None}
+    for g in range(n_groups):
+        st = None if cache["ssm"] is None else jax.tree_util.tree_map(
+            lambda x: x[g * k:(g + 1) * k], cache["ssm"])
+        h, ssm_g = jax.lax.scan(mamba_body, h,
+                                (slice_blocks(g * k, (g + 1) * k), st))
+        kv_g = None if cache["kv"] is None else jax.tree_util.tree_map(
+            lambda x: x[g], cache["kv"])
+        h2, kv_g, aux_g = _attn_block(params["shared_attn"], h, cfg,
+                                      positions, kv_g)
+        h, aux = h2, aux + aux_g
+        new_ssm.append(ssm_g)
+        new_kv.append(kv_g)
+    if rem:
+        st = None if cache["ssm"] is None else jax.tree_util.tree_map(
+            lambda x: x[n_groups * k:], cache["ssm"])
+        h, ssm_r = jax.lax.scan(mamba_body, h,
+                                (slice_blocks(n_groups * k, cfg.n_layers),
+                                 st))
+        new_ssm.append(ssm_r)
+    h = layers.rms_norm(h, params["final_norm"]["scale"], cfg.norm_eps)
+    new_cache = {
+        "ssm": jax.tree_util.tree_map(
+            lambda *xs: jnp.concatenate(xs, axis=0), *new_ssm),
+        "kv": None if new_kv[0] is None else jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs, axis=0), *new_kv),
+    }
+    return ForwardResult(hidden=h, aux_loss=aux, cache=new_cache)
+
+
+def encdec_forward(params: PyTree, tokens: jax.Array, cfg: ModelConfig, *,
+                   frames: Optional[jax.Array] = None,
+                   cache: Optional[PyTree] = None,
+                   enc_out: Optional[jax.Array] = None,
+                   positions: Optional[jax.Array] = None, **_
+                   ) -> ForwardResult:
+    """Whisper-style: encoder over precomputed frame embeddings (frontend
+    stub), decoder with self + cross attention."""
+    if enc_out is None:
+        e = frames.astype(jnp.dtype(cfg.param_dtype))
+        e = shard(e, "batch", "seq", "embed")
+        enc_pos = jnp.arange(e.shape[1])[None, :]
+
+        def enc_body(carry, blk):
+            hh = carry
+            a, _ = layers.attention(
+                blk, layers.rms_norm(hh, blk["ln1"], cfg.norm_eps), cfg,
+                causal=False, positions=enc_pos)
+            hh = hh + a
+            f = layers.mlp(blk, layers.rms_norm(hh, blk["ln2"],
+                                                cfg.norm_eps), cfg)
+            return shard(hh + f, "batch", "seq", "embed"), None
+
+        e, _ = jax.lax.scan(_remat(enc_body, cfg), e, params["enc_blocks"])
+        enc_out = layers.rms_norm(e, params["enc_norm"]["scale"],
+                                  cfg.norm_eps)
+    # Precompute per-layer cross K/V from encoder output.
+    hkv, hd = cfg.n_kv_heads, cfg.head_dim
+    b, se, _ = enc_out.shape
+
+    h = params["embed"]["table"][tokens].astype(jnp.dtype(cfg.param_dtype))
+    h = shard(h, "batch", "seq", "embed")
+    s = h.shape[1]
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+
+    def dec_body(carry, xs):
+        hh = carry
+        blk, layer_cache = xs
+        ck = (enc_out @ blk["cross_wk"]).reshape(b, se, hkv, hd)
+        cv = (enc_out @ blk["cross_wv"]).reshape(b, se, hkv, hd)
+        hh, new_cache, _ = _attn_block(blk, hh, cfg, positions, layer_cache,
+                                       cross=(ck, cv))
+        return shard(hh, "batch", "seq", "embed"), new_cache
+
+    h, new_caches = jax.lax.scan(_remat(dec_body, cfg), h,
+                                 (params["dec_blocks"], cache))
+    h = layers.rms_norm(h, params["final_norm"]["scale"], cfg.norm_eps)
+    return ForwardResult(hidden=h, aux_loss=jnp.zeros((), jnp.float32),
+                         cache=new_caches)
+
+
+FORWARDS = {
+    "dense": decoder_forward,
+    "moe": decoder_forward,
+    "vlm": decoder_forward,
+    "ssm": ssm_forward,
+    "hybrid": hybrid_forward,
+    "encdec": encdec_forward,
+}
+
+
+def forward(params: PyTree, cfg: ModelConfig, **kwargs) -> ForwardResult:
+    return FORWARDS[cfg.family](params, kwargs.pop("tokens"), cfg, **kwargs)
+
+
+def unembed_weight(params: PyTree, cfg: ModelConfig) -> jax.Array:
+    if cfg.tie_embeddings:
+        return params["embed"]["table"].T
+    return params["unembed"]["table"]
+
+
+# ======================================================== decode caches
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int) -> PyTree:
+    """Family-appropriate decode state (KV caches / SSM states)."""
+    if cfg.family in ("dense", "moe", "vlm"):
+        return _make_cache(cfg, cfg.n_layers, batch, max_len)
+    if cfg.family == "ssm":
+        st = ssd.ssd_init_state(cfg, batch)
+        return jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x[None], (cfg.n_layers,) + x.shape),
+            st)
+    if cfg.family == "hybrid":
+        st = ssd.ssd_init_state(cfg, batch)
+        n_groups = cfg.n_layers // cfg.attn_every
+        return {
+            "ssm": jax.tree_util.tree_map(
+                lambda x: jnp.broadcast_to(
+                    x[None], (cfg.n_layers,) + x.shape), st),
+            "kv": _make_cache(cfg, n_groups, batch, max_len),
+        }
+    if cfg.family == "encdec":
+        return _make_cache(cfg, cfg.n_layers, batch, max_len)
+    raise ValueError(cfg.family)

@@ -1,0 +1,10 @@
+"""Optimizer substrate: AdamW (configurable state dtype), LR schedules
+(cosine, WSD), gradient clipping and compression."""
+
+from repro.optim.adamw import AdamW, OptState
+from repro.optim.schedule import cosine_schedule, wsd_schedule
+from repro.optim.compress import (quantize_int8, dequantize_int8,
+                                  ErrorFeedbackCompressor)
+
+__all__ = ["AdamW", "OptState", "cosine_schedule", "wsd_schedule",
+           "quantize_int8", "dequantize_int8", "ErrorFeedbackCompressor"]

@@ -1,0 +1,87 @@
+"""AdamW, functional, with configurable state dtype.
+
+Large configs (nemotron-4-340b) set ``optimizer_state_dtype=bfloat16`` so
+m/v fit HBM on the single-pod mesh -- the memory/precision trade-off is
+recorded in EXPERIMENTS.md.  Updates are always computed in f32.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class OptState:
+    m: PyTree
+    v: PyTree
+    count: jax.Array
+
+
+jax.tree_util.register_pytree_node(
+    OptState,
+    lambda s: ((s.m, s.v, s.count), None),
+    lambda aux, ch: OptState(*ch))
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    learning_rate: Callable[[jax.Array], jax.Array] | float = 1e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip_norm: Optional[float] = 1.0
+    state_dtype: str = "float32"
+
+    def init(self, params: PyTree) -> OptState:
+        dt = jnp.dtype(self.state_dtype)
+        zeros = lambda p: jnp.zeros(p.shape, dt)
+        return OptState(m=jax.tree_util.tree_map(zeros, params),
+                        v=jax.tree_util.tree_map(zeros, params),
+                        count=jnp.zeros((), jnp.int32))
+
+    def _lr(self, count):
+        if callable(self.learning_rate):
+            return self.learning_rate(count)
+        return self.learning_rate
+
+    def update(self, grads: PyTree, state: OptState, params: PyTree
+               ) -> tuple[PyTree, OptState]:
+        g32 = jax.tree_util.tree_map(lambda g: g.astype(jnp.float32), grads)
+        if self.grad_clip_norm is not None:
+            gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g))
+                                 for g in jax.tree_util.tree_leaves(g32)))
+            scale = jnp.minimum(1.0, self.grad_clip_norm
+                                / jnp.maximum(gnorm, 1e-12))
+            g32 = jax.tree_util.tree_map(lambda g: g * scale, g32)
+        count = state.count + 1
+        b1c = 1.0 - self.b1 ** count.astype(jnp.float32)
+        b2c = 1.0 - self.b2 ** count.astype(jnp.float32)
+        lr = self._lr(count)
+        dt = jnp.dtype(self.state_dtype)
+
+        def upd(p, g, m, v):
+            m32 = self.b1 * m.astype(jnp.float32) + (1 - self.b1) * g
+            v32 = self.b2 * v.astype(jnp.float32) + (1 - self.b2) * g * g
+            mhat = m32 / b1c
+            vhat = v32 / b2c
+            step = mhat / (jnp.sqrt(vhat) + self.eps)
+            decay = self.weight_decay * p.astype(jnp.float32) \
+                if p.ndim >= 2 else 0.0
+            new_p = p.astype(jnp.float32) - lr * (step + decay)
+            return new_p.astype(p.dtype), m32.astype(dt), v32.astype(dt)
+
+        out = jax.tree_util.tree_map(upd, params, g32, state.m, state.v)
+        new_params = jax.tree_util.tree_map(
+            lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree_util.tree_map(
+            lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree_util.tree_map(
+            lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, OptState(m=new_m, v=new_v, count=count)

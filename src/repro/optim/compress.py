@@ -1,0 +1,70 @@
+"""Gradient compression for cross-pod data parallelism.
+
+Int8 quantization with per-tensor scale plus error feedback (the residual of
+each round is added back the next round, preserving convergence).  On a
+multi-pod mesh the cross-pod gradient reduction is the slowest collective
+(DCN, not ICI); 4x fewer bytes directly scales that term down -- see
+EXPERIMENTS.md SPerf.
+
+``compressed_cross_pod_mean`` is the shard_map building block: quantize the
+local (per-pod) partial gradient, all_gather the int8 payload over the "pod"
+axis, dequantize and average locally.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def quantize_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-30
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+class ErrorFeedbackCompressor:
+    """Stateful wrapper: compress(grads) with residual carry."""
+
+    def init(self, params: PyTree) -> PyTree:
+        return jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def compress(self, grads: PyTree, residual: PyTree
+                 ) -> tuple[PyTree, PyTree]:
+        def one(g, r):
+            g = g.astype(jnp.float32) + r
+            q, s = quantize_int8(g)
+            deq = dequantize_int8(q, s)
+            return deq, g - deq
+        out = jax.tree_util.tree_map(one, grads, residual)
+        deq = jax.tree_util.tree_map(lambda t: t[0], out,
+                                     is_leaf=lambda x: isinstance(x, tuple))
+        res = jax.tree_util.tree_map(lambda t: t[1], out,
+                                     is_leaf=lambda x: isinstance(x, tuple))
+        return deq, res
+
+
+def compressed_cross_pod_mean(g: jax.Array, axis_name: str = "pod"
+                              ) -> jax.Array:
+    """Inside shard_map: int8 all_gather over ``axis_name`` + local mean.
+
+    Moves 1/4 the bytes of an fp32 psum (1/2 of bf16) across the cross-pod
+    links at the cost of one quantization error per step (bounded by error
+    feedback at the caller).
+    """
+    q, scale = quantize_int8(g)
+    qs = jax.lax.all_gather(q, axis_name)            # (pods, ...)
+    scales = jax.lax.all_gather(scale, axis_name)    # (pods,)
+    deq = qs.astype(jnp.float32) * scales.reshape(
+        (-1,) + (1,) * g.ndim)
+    return deq.mean(axis=0)

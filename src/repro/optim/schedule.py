@@ -1,0 +1,38 @@
+"""LR schedules: cosine and WSD (warmup-stable-decay, MiniCPM arXiv:2404.06395).
+
+MiniCPM is one of the assigned architectures; its WSD schedule is implemented
+here for fidelity (warmup -> long stable plateau -> short exponential-ish
+decay), alongside the standard cosine used by the other configs.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(peak_lr: float, warmup_steps: int, total_steps: int,
+                    final_frac: float = 0.1):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / max(warmup_steps, 1)
+        progress = jnp.clip((step - warmup_steps) /
+                            max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = final_frac * peak_lr + (1 - final_frac) * peak_lr * 0.5 * (
+            1 + jnp.cos(jnp.pi * progress))
+        return jnp.where(step < warmup_steps, warm, cos)
+    return lr
+
+
+def wsd_schedule(peak_lr: float, warmup_steps: int, stable_steps: int,
+                 decay_steps: int, final_frac: float = 0.01):
+    """Warmup-Stable-Decay: plateau at peak, then fast decay."""
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / max(warmup_steps, 1)
+        decay_start = warmup_steps + stable_steps
+        progress = jnp.clip((step - decay_start) / max(decay_steps, 1),
+                            0.0, 1.0)
+        decayed = peak_lr * (final_frac ** progress)
+        return jnp.where(step < warmup_steps, warm,
+                         jnp.where(step < decay_start, peak_lr, decayed))
+    return lr

@@ -1,0 +1,2 @@
+"""Distributed runtime: sharding rules, train/serve steps, power-cap
+integration, straggler mitigation, elastic resize."""

@@ -1,0 +1,74 @@
+"""Elastic resize: DPM-driven scale-up/down via checkpoint-reshard.
+
+When CloudPowerCap's DPM path powers pods off (sustained low demand) or on
+(hot cluster), the training job resizes: the controller checkpoints, builds
+the new mesh, restores every leaf onto the new shardings (global arrays ->
+any mesh), rebuilds the power-aware batch plan, and resumes.  The same path
+is the *failure* path: losing a pod is a scale-down whose checkpoint is the
+last completed async save.
+
+The controller is deliberately synchronous and explicit -- resize is a rare,
+heavyweight transition; correctness (no budget violation, no lost optimizer
+state, reproducible data cursor) matters more than overlap.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+
+from repro.checkpoint import Checkpointer
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class ResizeEvent:
+    step: int
+    from_pods: int
+    to_pods: int
+    reason: str                    # "dpm-poweroff" | "dpm-poweron" | "failure"
+
+
+class ElasticController:
+    """Owns the resize protocol.
+
+    make_mesh(n_pods) and make_shardings(mesh, target) are injected so the
+    controller is independent of model/config specifics.
+    """
+
+    def __init__(self, checkpointer: Checkpointer,
+                 make_mesh: Callable[[int], Any],
+                 make_shardings: Callable[[Any, PyTree], PyTree]):
+        self.checkpointer = checkpointer
+        self.make_mesh = make_mesh
+        self.make_shardings = make_shardings
+        self.history: list[ResizeEvent] = []
+
+    def resize(self, state: PyTree, step: int, from_pods: int, to_pods: int,
+               reason: str, extra_metadata: Optional[dict] = None
+               ) -> tuple[Any, PyTree]:
+        """Checkpoint -> new mesh -> restore resharded.  Returns
+        (new_mesh, new_state)."""
+        self.checkpointer.save(step, state, extra_metadata)
+        mesh = self.make_mesh(to_pods)
+        target = jax.tree_util.tree_map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)
+        shardings = self.make_shardings(mesh, target)
+        new_state = self.checkpointer.restore(step, target, shardings)
+        self.history.append(ResizeEvent(step, from_pods, to_pods, reason))
+        return mesh, new_state
+
+    def recover(self, target: PyTree, to_pods: int, reason: str = "failure"
+                ) -> tuple[Any, PyTree, int]:
+        """Restart from the last completed checkpoint onto ``to_pods``."""
+        step = self.checkpointer.latest_step()
+        if step is None:
+            raise RuntimeError("no checkpoint to recover from")
+        mesh = self.make_mesh(to_pods)
+        shardings = self.make_shardings(mesh, target)
+        state = self.checkpointer.restore(step, target, shardings)
+        self.history.append(ResizeEvent(step, -1, to_pods, reason))
+        return mesh, state, step

@@ -1,0 +1,124 @@
+"""Serving: prefill + decode steps and a capacity-aware request router.
+
+``decode_step`` is the function the decode_32k / long_500k dry-run cells
+lower: one new token against a full-length cache, with the cache sequence
+axis sharded over "data" for the long-context cell (distributed
+flash-decode: XLA inserts the cross-device softmax combine).
+
+The router is the serving-plane face of CloudPowerCap: replica throughput is
+proportional to power-capped capacity, so dispatch weights follow the caps
+the manager sets, and DPM power-on/off of replicas flows through the same
+budget redistribution as the training plane.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as tfm
+from repro.models.config import ModelConfig
+
+PyTree = Any
+
+
+def make_prefill_step(cfg: ModelConfig, max_len: int):
+    def prefill(params, tokens, extras: Optional[dict] = None):
+        extras = extras or {}
+        b, s = tokens.shape
+        cache = tfm.init_decode_state(cfg, b, max_len)
+        kwargs = {}
+        if cfg.family == "vlm" and "vision_embeds" in extras:
+            kwargs["vision_embeds"] = extras["vision_embeds"]
+        enc_out = None
+        if cfg.family == "encdec":
+            kwargs["frames"] = extras["frames"]
+        res = tfm.forward(params, cfg, tokens=tokens, cache=cache, **kwargs)
+        w_out = tfm.unembed_weight(params, cfg)
+        logits = (res.hidden[:, -1] @ w_out).astype(jnp.float32)
+        state = {"cache": res.cache, "pos": jnp.full((b,), s, jnp.int32)}
+        if cfg.family == "encdec":
+            # Cross-attention source is fixed after prefill.
+            state["enc_frames"] = extras["frames"]
+        return logits, state
+    return prefill
+
+
+def make_decode_step(cfg: ModelConfig, sample: str = "greedy"):
+    def decode(params, state, tokens):
+        """tokens: (B,) last emitted tokens -> (next_logits, new state)."""
+        b = tokens.shape[0]
+        pos = state["pos"]
+        kwargs = {}
+        if cfg.family == "encdec":
+            kwargs["frames"] = state["enc_frames"]
+        res = tfm.forward(params, cfg, tokens=tokens[:, None],
+                          cache=state["cache"],
+                          positions=pos[:, None], **kwargs)
+        w_out = tfm.unembed_weight(params, cfg)
+        logits = (res.hidden[:, -1] @ w_out).astype(jnp.float32)
+        new_state = dict(state)
+        new_state["cache"] = res.cache
+        new_state["pos"] = pos + 1
+        return logits, new_state
+    return decode
+
+
+def greedy_generate(cfg: ModelConfig, params, prompt, steps: int,
+                    max_len: int, extras: Optional[dict] = None):
+    """Convenience: prefill + N greedy decode steps (examples/tests)."""
+    prefill = make_prefill_step(cfg, max_len)
+    decode = jax.jit(make_decode_step(cfg))
+    logits, state = prefill(params, prompt, extras)
+    out = [jnp.argmax(logits, -1)]
+    for _ in range(steps - 1):
+        logits, state = decode(params, state, out[-1])
+        out.append(jnp.argmax(logits, -1))
+    return jnp.stack(out, axis=1)
+
+
+# ------------------------------------------------------------------ router
+@dataclasses.dataclass
+class Replica:
+    replica_id: str
+    host_id: str                  # host in the CPC cluster snapshot
+    queue: int = 0                # outstanding requests
+
+
+class CapacityAwareRouter:
+    """Weighted least-loaded dispatch, weights = power-capped capacity.
+
+    ``sync_capacities`` reads the capacities straight from the CloudPowerCap
+    snapshot, so a cap redistribution (e.g. after a DPM power-off) shifts
+    traffic within one control-loop period with no further coordination.
+    """
+
+    def __init__(self, replicas: list[Replica]):
+        self.replicas = {r.replica_id: r for r in replicas}
+        self.capacity: dict[str, float] = {r: 1.0 for r in self.replicas}
+
+    def sync_capacities(self, snapshot) -> None:
+        for rid, rep in self.replicas.items():
+            host = snapshot.hosts[rep.host_id]
+            self.capacity[rid] = max(host.managed_capacity, 0.0)
+
+    def route(self, n_requests: int = 1) -> list[str]:
+        """Assign requests to replicas; returns replica ids (one per req)."""
+        out = []
+        for _ in range(n_requests):
+            live = [(rid, rep) for rid, rep in self.replicas.items()
+                    if self.capacity.get(rid, 0.0) > 0.0]
+            if not live:
+                raise RuntimeError("no replica has capacity")
+            rid, rep = min(
+                live,
+                key=lambda kv: (kv[1].queue + 1) / self.capacity[kv[0]])
+            rep.queue += 1
+            out.append(rid)
+        return out
+
+    def complete(self, replica_id: str) -> None:
+        self.replicas[replica_id].queue -= 1

@@ -1,0 +1,98 @@
+"""Logical-axis sharding: rules, context, and constraint helpers.
+
+Model code annotates tensors with *logical* axis names; the launcher binds a
+mesh plus a rule table mapping logical names to mesh axes.  Outside a bound
+context every annotation is a no-op, so the same model code runs in CPU smoke
+tests, the 512-device dry-run, and on real pods.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class Rules:
+    """Logical axis -> mesh axes (None = replicated)."""
+    batch: tuple = ("pod", "data")       # data parallel (pods x hosts)
+    seq: Optional[tuple] = None          # sequence of between-block activations
+    inner_seq: Optional[tuple] = None    # sequence *inside* attention/MLP
+    kv_seq: Optional[tuple] = None       # KV-cache sequence (long-context)
+    heads: tuple = ("model",)            # attention heads / tensor parallel
+    kv_heads: tuple = ("model",)
+    ffn: tuple = ("model",)              # MLP hidden
+    vocab: tuple = ("model",)
+    expert: tuple = ("model",)           # MoE expert parallelism
+    fsdp: Optional[tuple] = ("data",)    # parameter storage sharding
+    embed: Optional[tuple] = None        # d_model activations
+    embed_p: Optional[tuple] = ("data",) # d_model axis of *parameters* (FSDP)
+    layer: Optional[tuple] = None        # stacked-layer axis of parameters
+
+    def lookup(self, name: Optional[str]):
+        if name is None:
+            return None
+        axes = getattr(self, name)
+        return axes
+
+    def mesh_axes(self, name: Optional[str], mesh: Mesh):
+        axes = self.lookup(name)
+        if axes is None:
+            return None
+        present = tuple(a for a in axes if a in mesh.axis_names)
+        if not present:
+            return None
+        return present if len(present) > 1 else present[0]
+
+
+_CTX: contextvars.ContextVar = contextvars.ContextVar(
+    "sharding_ctx", default=None)
+
+
+@contextlib.contextmanager
+def sharding_context(mesh: Mesh, rules: Rules):
+    token = _CTX.set((mesh, rules))
+    try:
+        with mesh:
+            yield
+    finally:
+        _CTX.reset(token)
+
+
+def current_context() -> Optional[tuple[Mesh, Rules]]:
+    return _CTX.get()
+
+
+def logical_spec(*names: Optional[str]) -> Optional[P]:
+    ctx = _CTX.get()
+    if ctx is None:
+        return None
+    mesh, rules = ctx
+    return P(*(rules.mesh_axes(n, mesh) for n in names))
+
+
+def shard(x, *names: Optional[str]):
+    """with_sharding_constraint by logical axis names (no-op w/o context)."""
+    spec = logical_spec(*names)
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def named_sharding(*names: Optional[str]) -> Optional[NamedSharding]:
+    ctx = _CTX.get()
+    if ctx is None:
+        return None
+    mesh, _ = ctx
+    spec = logical_spec(*names)
+    return NamedSharding(mesh, spec)
+
+
+def spec_to_sharding(mesh: Mesh, rules: Rules, names) -> NamedSharding:
+    return NamedSharding(
+        mesh, P(*(rules.mesh_axes(n, mesh) for n in names)))

@@ -1,0 +1,12 @@
+"""Trace-driven cluster simulator (the paper's DRS-simulator equivalent).
+
+Provides a realistic execution environment for the CloudPowerCap + DRS
+pipeline: per-tick host scheduling (waterfill delivery), a vMotion cost model
+(copy duration from memory footprint + CPU overhead on source and target),
+host power-on/off latencies, Eq. 1 power accounting, and payload metrics.
+"""
+
+from repro.sim.cluster import Simulator, SimConfig, SimResult
+from repro.sim import workloads, metrics
+
+__all__ = ["Simulator", "SimConfig", "SimResult", "workloads", "metrics"]

@@ -1,0 +1,255 @@
+"""Simulator core: tick-driven execution of the DRS + CloudPowerCap pipeline.
+
+Mirrors the role of the DRS simulator in the paper's evaluation (Sec. V-A):
+ESX-like host scheduling (waterfill delivery bounded by power-capped
+capacity), vMotion with copy duration proportional to VM memory plus CPU
+overhead on both endpoints, DPM power-on/off latencies, and Eq. 1 power
+accounting.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.drs.entitlement import deliver
+from repro.drs.snapshot import ClusterSnapshot
+from repro.sim.metrics import Accumulators
+from repro.sim.workloads import DemandTrace
+
+
+@dataclasses.dataclass
+class SimConfig:
+    duration_s: float = 2100.0
+    tick_s: float = 10.0
+    drs_period_s: float = 300.0
+    drs_first_at_s: float = 300.0
+    vmotion_rate_mb_s: float = 128.0      # effective copy rate incl. recopy
+    vmotion_overhead_mhz: float = 1500.0  # burned on src AND dst during copy
+    max_concurrent_migrations: int = 4
+    power_on_latency_s: float = 120.0
+    power_off_latency_s: float = 30.0
+    record_timeline: bool = True
+
+
+@dataclasses.dataclass
+class SimResult:
+    acc: Accumulators
+    timeline: list                         # (t, {host: (cap_w, util, n_vms)})
+    events: list                           # (t, str)
+    final: ClusterSnapshot
+    window_acc: Optional[Accumulators] = None
+
+
+class _Pending:
+    def __init__(self, action):
+        self.action = action
+        self.state = "waiting"             # waiting | running | done
+        self.end_time = 0.0
+
+
+class Simulator:
+    def __init__(self, snapshot: ClusterSnapshot, manager,
+                 traces: dict[str, DemandTrace],
+                 config: Optional[SimConfig] = None,
+                 window: Optional[tuple[float, float]] = None):
+        self.live = snapshot
+        self.manager = manager
+        self.traces = traces
+        self.config = config or SimConfig()
+        self.window = window               # optional payload sub-window
+        self.acc = Accumulators()
+        self.window_acc = Accumulators() if window else None
+        self.pending: list[_Pending] = []
+        self.done_ids: set[int] = set()
+        self.low_since: dict[str, float] = {}
+        self.last_config_change = -1e18
+        self.timeline: list = []
+        self.events: list = []
+
+    # ------------------------------------------------------------------
+    def _update_demands(self, t: float) -> None:
+        for vm_id, trace in self.traces.items():
+            cpu, mem = trace(t)
+            vm = self.live.vms[vm_id]
+            vm.demand, vm.mem_demand = cpu, mem
+
+    def _migration_duration(self, vm) -> float:
+        mb = max(vm.mem_demand, 64.0)
+        return max(mb / self.config.vmotion_rate_mb_s, self.config.tick_s)
+
+    def _prereqs_done(self, p: _Pending) -> bool:
+        return all(pid in self.done_ids for pid in p.action.prereqs)
+
+    def _running_migrations(self) -> list:
+        return [p for p in self.pending
+                if p.state == "running" and p.action.kind == "migrate"]
+
+    def _host_migration_overhead(self, host_id: str) -> float:
+        n = 0
+        for p in self._running_migrations():
+            vm = self.live.vms[p.action.target]
+            if vm.host_id == host_id or p.action.dest == host_id:
+                n += 1
+        return n * self.config.vmotion_overhead_mhz
+
+    # ------------------------------------------------------------------
+    def _complete_actions(self, t: float) -> None:
+        for p in self.pending:
+            if p.state != "running" or p.end_time > t:
+                continue
+            a = p.action
+            if a.kind == "migrate":
+                self.live.vms[a.target].host_id = a.dest
+                self.acc.vmotions += 1
+                if self.window_acc is not None and self._in_window(t):
+                    self.window_acc.vmotions += 1
+            elif a.kind == "power_on":
+                self.live.hosts[a.target].powered_on = True
+                self.acc.power_ons += 1
+                self.last_config_change = t
+                self.events.append((t, f"power_on {a.target}"))
+            elif a.kind == "power_off":
+                self.live.hosts[a.target].powered_on = False
+                self.acc.power_offs += 1
+                self.last_config_change = t
+                self.events.append((t, f"power_off {a.target}"))
+            p.state = "done"
+            self.done_ids.add(a.action_id)
+
+    def _start_actions(self, t: float) -> None:
+        running_migrations = len(self._running_migrations())
+        for p in self.pending:
+            if p.state != "waiting" or not self._prereqs_done(p):
+                continue
+            a = p.action
+            if a.kind == "set_power_cap":
+                # <1 ms on the baseboard: effectively instantaneous.
+                self.live.hosts[a.target].power_cap = a.value
+                self.acc.cap_changes += 1
+                p.state = "done"
+                self.done_ids.add(a.action_id)
+                self.events.append((t, f"cap {a.target}={a.value:.0f}W"))
+            elif a.kind == "migrate":
+                if running_migrations >= self.config.max_concurrent_migrations:
+                    continue
+                vm = self.live.vms[a.target]
+                if vm.host_id == a.dest:   # already there (stale rec)
+                    p.state = "done"
+                    self.done_ids.add(a.action_id)
+                    continue
+                p.state = "running"
+                p.end_time = t + self._migration_duration(vm)
+                running_migrations += 1
+            elif a.kind == "power_on":
+                p.state = "running"
+                p.end_time = t + self.config.power_on_latency_s
+            elif a.kind == "power_off":
+                p.state = "running"
+                p.end_time = t + self.config.power_off_latency_s
+
+    def _actions_outstanding(self) -> bool:
+        return any(p.state != "done" for p in self.pending)
+
+    # ------------------------------------------------------------------
+    def _in_window(self, t: float) -> bool:
+        return (self.window is not None and
+                self.window[0] <= t < self.window[1])
+
+    def _deliver_and_account(self, t: float) -> None:
+        dt = self.config.tick_s
+        snap = self.live
+        per_host = {}
+        for host in snap.hosts.values():
+            hid = host.host_id
+            if not host.powered_on:
+                per_host[hid] = (host.power_cap, 0.0, 0)
+                continue
+            vms = snap.vms_on(hid)
+            overhead = self._host_migration_overhead(hid)
+            capacity = max(host.managed_capacity - overhead, 0.0)
+            alloc = deliver(capacity, vms)
+            delivered = sum(alloc.values())
+            demand = sum(min(v.demand, v.limit) for v in vms)
+            self.acc.cpu_payload_mhz_s += delivered * dt
+            self.acc.cpu_demand_mhz_s += demand * dt
+            for v in vms:
+                for tag in v.tags:
+                    self.acc.tag_payload[tag] = (
+                        self.acc.tag_payload.get(tag, 0.0)
+                        + alloc[v.vm_id] * dt)
+                    self.acc.tag_demand[tag] = (
+                        self.acc.tag_demand.get(tag, 0.0)
+                        + min(v.demand, v.limit) * dt)
+            # Memory: proportional delivery under overcommit.
+            mem_demand = sum(v.mem_demand for v in vms)
+            mem_deliv = (mem_demand if mem_demand <= host.memory_mb
+                         else host.memory_mb)
+            self.acc.mem_payload_mb_s += mem_deliv * dt
+            self.acc.mem_demand_mb_s += mem_demand * dt
+            # Eq. 1 power, utilization measured against peak capacity.
+            util = min((delivered + overhead) / host.spec.capacity_peak, 1.0)
+            power = host.spec.power_consumed(util)
+            self.acc.energy_j += power * dt
+            if self.window_acc is not None and self._in_window(t):
+                self.window_acc.cpu_payload_mhz_s += delivered * dt
+                self.window_acc.cpu_demand_mhz_s += demand * dt
+                self.window_acc.mem_payload_mb_s += mem_deliv * dt
+                self.window_acc.mem_demand_mb_s += mem_demand * dt
+                self.window_acc.energy_j += power * dt
+            # DPM low-utilization tracking.
+            cpu_util = snap.host_cpu_utilization(hid)
+            mem_util = snap.host_mem_utilization(hid)
+            low = (cpu_util < self.manager.config.dpm.low_util and
+                   mem_util < self.manager.config.dpm.low_util)
+            if low:
+                self.low_since.setdefault(hid, t)
+            else:
+                self.low_since.pop(hid, None)
+            per_host[hid] = (host.power_cap, cpu_util, len(vms))
+        if self.config.record_timeline:
+            self.timeline.append((t, per_host))
+
+    def _budget_invariant(self) -> None:
+        on_or_pending = {h.host_id for h in self.live.hosts.values()
+                         if h.powered_on}
+        for p in self.pending:
+            if p.action.kind == "power_on" and p.state in ("waiting",
+                                                           "running"):
+                on_or_pending.add(p.action.target)
+        total = sum(self.live.hosts[h].power_cap for h in on_or_pending)
+        assert total <= self.live.power_budget + 1e-6, (
+            f"budget violated during execution: {total:.1f} W > "
+            f"{self.live.power_budget:.1f} W")
+
+    # ------------------------------------------------------------------
+    def run(self) -> SimResult:
+        cfg = self.config
+        next_drs = cfg.drs_first_at_s
+        t = 0.0
+        while t < cfg.duration_s:
+            self._update_demands(t)
+            self._complete_actions(t)
+            self._start_actions(t)
+            if t >= next_drs and not self._actions_outstanding():
+                result = self.manager.run_invocation(
+                    self.live.clone(), now=t, low_since=self.low_since,
+                    last_config_change=self.last_config_change)
+                for a in result.actions:
+                    self.pending.append(_Pending(a))
+                if result.actions:
+                    self.events.append(
+                        (t, f"drs: {len(result.actions)} actions "
+                            f"({'; '.join(result.notes)})"))
+                next_drs = t + cfg.drs_period_s
+            elif t >= next_drs:
+                next_drs = t + cfg.tick_s   # defer while actions in flight
+            self._start_actions(t)
+            self._deliver_and_account(t)
+            self._budget_invariant()
+            t += cfg.tick_s
+        return SimResult(acc=self.acc, timeline=self.timeline,
+                         events=self.events, final=self.live,
+                         window_acc=self.window_acc)

@@ -1,0 +1,170 @@
+"""The paper's three evaluation scenarios (Sec. V-B/C/D), policy-swappable.
+
+Each builder returns (snapshot, traces, sim_config); ``run_policies`` executes
+CloudPowerCap / Static / StaticHigh and produces the Table III/IV/V metrics.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+from repro.core.manager import (CloudPowerCapManager, ManagerConfig,
+                                static_manager)
+from repro.core.power_model import PAPER_HOST, HostPowerSpec
+from repro.drs import dpm as dpm_mod
+from repro.drs.rules import VMHostRule
+from repro.drs.snapshot import ClusterSnapshot, Host, VirtualMachine
+from repro.sim.cluster import SimConfig, Simulator, SimResult
+from repro.sim import workloads
+
+
+@dataclasses.dataclass
+class Scenario:
+    name: str
+    build: Callable[[str], tuple[ClusterSnapshot, dict, SimConfig,
+                                 Optional[tuple[float, float]]]]
+
+
+def _mk_hosts(n: int, cap_w: float, spec: HostPowerSpec = PAPER_HOST
+              ) -> list[Host]:
+    return [Host(host_id=f"host{i}", spec=spec, power_cap=cap_w)
+            for i in range(n)]
+
+
+def _manager(policy: str, dpm_enabled: bool) -> CloudPowerCapManager:
+    cfg = ManagerConfig(powercap_enabled=(policy == "cpc"),
+                        dpm_enabled=dpm_enabled)
+    cfg.dpm = dpm_mod.DPMConfig(stable_window_s=150.0)
+    return CloudPowerCapManager(cfg)
+
+
+# --------------------------------------------------------------- Sec. V-B
+def build_headroom(policy: str):
+    """30 VMs / 3 hosts; one host's VMs spike 1.0 -> 2.4 GHz at t=750 s."""
+    cap = 320.0 if policy == "statichigh" else 250.0
+    hosts = _mk_hosts(3, cap)
+    budget = 3 * cap
+    vms, traces = [], {}
+    for i in range(30):
+        host = f"host{i // 10}"
+        vm = VirtualMachine(vm_id=f"vm{i}", vcpus=1, memory_mb=8 * 1024,
+                            host_id=host)
+        vms.append(vm)
+        if i < 10:   # the spiking host's VMs
+            traces[vm.vm_id] = workloads.burst(
+                base_cpu=1000.0, burst_cpu=2400.0, mem_mb=2 * 1024,
+                t_start=750.0, t_end=1400.0)
+        else:
+            traces[vm.vm_id] = workloads.constant(1000.0, 2 * 1024)
+    snap = ClusterSnapshot(hosts, vms, power_budget=budget)
+    cfg = SimConfig(duration_s=2100.0, drs_first_at_s=300.0)
+    return snap, traces, cfg, (750.0, 1400.0)
+
+
+# --------------------------------------------------------------- Sec. V-C
+def build_standby(policy: str):
+    """Demand 1.2 GHz -> 0.4 GHz at 750 s (DPM consolidates), spike back at
+    1400 s.  CPC reallocates the powered-off host's budget; Static must power
+    the host back on."""
+    cap = 320.0 if policy == "statichigh" else 250.0
+    hosts = _mk_hosts(3, cap)
+    budget = 3 * cap
+    vms, traces = [], {}
+    for i in range(30):
+        host = f"host{i // 10}"
+        vm = VirtualMachine(vm_id=f"vm{i}", vcpus=1, memory_mb=8 * 1024,
+                            host_id=host)
+        vms.append(vm)
+        traces[vm.vm_id] = workloads.step_trace([
+            (0.0, 1200.0, 2 * 1024),
+            (750.0, 400.0, 2 * 1024),
+            (1400.0, 1200.0, 2 * 1024),
+        ])
+    snap = ClusterSnapshot(hosts, vms, power_budget=budget)
+    cfg = SimConfig(duration_s=2100.0, drs_first_at_s=300.0)
+    return snap, traces, cfg, None
+
+
+# --------------------------------------------------------------- Sec. V-D
+def build_flexible(policy: str):
+    """Trading (prime-time bursty, storage-constrained to 8 hosts) + hadoop
+    (steady, pinned) across a rack-scale cluster.
+
+    Static/CPC: 32 hosts @ 250 W;  StaticHigh: 25 hosts @ 320 W  (8 kW rack).
+    """
+    if policy == "statichigh":
+        n_hosts, cap = 25, 320.0
+    else:
+        n_hosts, cap = 32, 250.0
+    hosts = _mk_hosts(n_hosts, cap)
+    budget = 8000.0
+    storage_hosts = [f"host{i}" for i in range(8)]
+    vms, traces, rules = [], {}, []
+    day = 21600.0  # compressed "day" (6 h) to keep the sim cheap; phases scale
+    prime = (0.25, 0.5)  # prime from 0.25*day to 0.75*day
+
+    vid = 0
+    for h in range(n_hosts):
+        host_id = f"host{h}"
+        is_storage = host_id in storage_hosts
+        if is_storage:
+            for _ in range(6):   # trading VMs
+                vm = VirtualMachine(vm_id=f"trd{vid}", vcpus=2,
+                                    memory_mb=8 * 1024, host_id=host_id,
+                                    tags=frozenset({"trading"}))
+                vms.append(vm)
+                traces[vm.vm_id] = workloads.prime_time(
+                    off_cpu=200.0, prime_cpu=5200.0,
+                    off_mem=2 * 1024, prime_mem=7 * 1024,
+                    period_s=day, prime_start_frac=prime[0],
+                    prime_frac=prime[1])
+                rules.append(VMHostRule(vm.vm_id, frozenset(storage_hosts)))
+                vid += 1
+            n_hadoop = 3
+        else:
+            n_hadoop = 6
+        for _ in range(n_hadoop):
+            vm = VirtualMachine(vm_id=f"hdp{vid}", vcpus=2,
+                                memory_mb=16 * 1024, host_id=host_id,
+                                migratable=False,
+                                tags=frozenset({"hadoop"}))
+            vms.append(vm)
+            if is_storage:
+                # Elastic scheduler: no hadoop tasks on trading hosts in prime.
+                traces[vm.vm_id] = workloads.prime_time(
+                    off_cpu=2500.0, prime_cpu=0.0,
+                    off_mem=14 * 1024, prime_mem=14 * 1024,
+                    period_s=day, prime_start_frac=prime[0],
+                    prime_frac=prime[1])
+            else:
+                traces[vm.vm_id] = workloads.constant(2500.0, 14 * 1024)
+            vid += 1
+    snap = ClusterSnapshot(hosts, vms, power_budget=budget, rules=rules)
+    cfg = SimConfig(duration_s=day, tick_s=60.0, drs_first_at_s=300.0,
+                    record_timeline=False)
+    return snap, traces, cfg, None
+
+
+SCENARIOS = {
+    "headroom": Scenario("headroom", build_headroom),
+    "standby": Scenario("standby", build_standby),
+    "flexible": Scenario("flexible", build_flexible),
+}
+
+POLICIES = ("cpc", "static", "statichigh")
+
+
+def run_policy(scenario: str, policy: str,
+               dpm_enabled: Optional[bool] = None) -> SimResult:
+    build = SCENARIOS[scenario].build
+    snap, traces, cfg, window = build(policy)
+    if dpm_enabled is None:
+        dpm_enabled = scenario == "standby"
+    manager = _manager(policy, dpm_enabled)
+    sim = Simulator(snap, manager, traces, cfg, window=window)
+    return sim.run()
+
+
+def run_all(scenario: str) -> dict[str, SimResult]:
+    return {p: run_policy(scenario, p) for p in POLICIES}

@@ -1,0 +1,51 @@
+"""Payload / power / migration accounting (paper Tables III-V)."""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass
+class Accumulators:
+    cpu_payload_mhz_s: float = 0.0     # useful cycles delivered to VMs
+    cpu_demand_mhz_s: float = 0.0      # cycles VMs wanted
+    mem_payload_mb_s: float = 0.0
+    mem_demand_mb_s: float = 0.0
+    energy_j: float = 0.0              # integral of Eq. 1 power
+    vmotions: int = 0
+    cap_changes: int = 0
+    power_ons: int = 0
+    power_offs: int = 0
+    # Per-VM-tag payload (e.g. "trading" vs "hadoop" in Table V).
+    tag_payload: dict = dataclasses.field(default_factory=dict)
+    tag_demand: dict = dataclasses.field(default_factory=dict)
+
+    def cpu_satisfaction(self) -> float:
+        return (self.cpu_payload_mhz_s / self.cpu_demand_mhz_s
+                if self.cpu_demand_mhz_s else 1.0)
+
+    def tag_satisfaction(self, tag: str) -> float:
+        d = self.tag_demand.get(tag, 0.0)
+        return self.tag_payload.get(tag, 0.0) / d if d else 1.0
+
+
+def ratio_table(results: dict[str, "Accumulators"], baseline: str
+                ) -> dict[str, dict[str, float]]:
+    """Normalize each policy's metrics against ``baseline`` (paper convention:
+    StaticHigh = 1.00)."""
+    base = results[baseline]
+    out = {}
+    for name, acc in results.items():
+        out[name] = {
+            "cpu_payload_ratio": (acc.cpu_payload_mhz_s /
+                                  base.cpu_payload_mhz_s
+                                  if base.cpu_payload_mhz_s else 0.0),
+            "mem_payload_ratio": (acc.mem_payload_mb_s /
+                                  base.mem_payload_mb_s
+                                  if base.mem_payload_mb_s else 0.0),
+            "power_ratio": (acc.energy_j / base.energy_j
+                            if base.energy_j else 0.0),
+            "vmotions": acc.vmotions,
+            "cpu_satisfaction": acc.cpu_satisfaction(),
+        }
+    return out

@@ -1,0 +1,45 @@
+"""Demand-trace generators for the paper's three experiments."""
+
+from __future__ import annotations
+
+from typing import Callable
+
+DemandTrace = Callable[[float], tuple[float, float]]  # t -> (cpu MHz, mem MB)
+
+
+def constant(cpu_mhz: float, mem_mb: float) -> DemandTrace:
+    return lambda t: (cpu_mhz, mem_mb)
+
+
+def step_trace(segments: list[tuple[float, float, float]]) -> DemandTrace:
+    """``segments``: [(t_start, cpu_mhz, mem_mb), ...] sorted by t_start."""
+    def trace(t: float) -> tuple[float, float]:
+        cpu, mem = segments[0][1], segments[0][2]
+        for t0, c, m in segments:
+            if t >= t0:
+                cpu, mem = c, m
+            else:
+                break
+        return cpu, mem
+    return trace
+
+
+def burst(base_cpu: float, burst_cpu: float, mem_mb: float,
+          t_start: float, t_end: float) -> DemandTrace:
+    """Paper Sec. V-B: flat, spike in [t_start, t_end), flat again."""
+    return step_trace([(0.0, base_cpu, mem_mb),
+                       (t_start, burst_cpu, mem_mb),
+                       (t_end, base_cpu, mem_mb)])
+
+
+def prime_time(off_cpu: float, prime_cpu: float, off_mem: float,
+               prime_mem: float, period_s: float = 86400.0,
+               prime_start_frac: float = 0.0,
+               prime_frac: float = 0.5) -> DemandTrace:
+    """Paper Sec. V-D: trading VMs idle half the day, heavy the other half."""
+    def trace(t: float) -> tuple[float, float]:
+        phase = (t % period_s) / period_s
+        in_prime = (prime_start_frac <= phase <
+                    prime_start_frac + prime_frac)
+        return ((prime_cpu, prime_mem) if in_prime else (off_cpu, off_mem))
+    return trace

@@ -1,0 +1,7 @@
+import os
+
+# Smoke tests and benches must see the real (single) CPU device; only the
+# dry-run sets xla_force_host_platform_device_count (and only in its own
+# process).
+assert "xla_force_host_platform_device_count" not in os.environ.get(
+    "XLA_FLAGS", "")

@@ -1,0 +1,120 @@
+"""CloudPowerCap Algorithms 1-3: safety + fairness properties."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.balance import BalanceConfig, balance_power_cap
+from repro.core.power_model import PAPER_HOST
+from repro.core.redistribute import (redistribute_after_power_off,
+                                     redistribute_for_power_on)
+from repro.core.redivvy import get_flexible_power, redivvy_power_cap
+from repro.drs.snapshot import ClusterSnapshot, Host, VirtualMachine
+
+
+@st.composite
+def clusters(draw):
+    n_hosts = draw(st.integers(2, 6))
+    cap = draw(st.floats(200.0, 320.0))
+    hosts = [Host(f"h{i}", PAPER_HOST, power_cap=cap)
+             for i in range(n_hosts)]
+    vms = []
+    for i in range(draw(st.integers(1, 14))):
+        host = f"h{draw(st.integers(0, n_hosts - 1))}"
+        res = draw(st.floats(0.0, 3000.0))
+        demand = draw(st.floats(0.0, 12000.0))
+        vms.append(VirtualMachine(
+            vm_id=f"vm{i}", reservation=res, demand=demand,
+            memory_mb=8 * 1024, mem_demand=2 * 1024, host_id=host))
+    snap = ClusterSnapshot(hosts, vms, power_budget=n_hosts * cap)
+    # Admission control: drop VMs whose reservations overflow their host.
+    for h in hosts:
+        while snap.cpu_reserved(h.host_id) > h.managed_capacity:
+            victim = max(snap.vms_on(h.host_id), key=lambda v: v.reservation)
+            del snap.vms[victim.vm_id]
+    return snap
+
+
+@settings(max_examples=60, deadline=None)
+@given(clusters())
+def test_balance_safety(snap):
+    before_total = snap.total_allocated_power()
+    balanced, did = balance_power_cap(snap, BalanceConfig())
+    # Budget conserved (never grows), reservations respected.
+    assert balanced.total_allocated_power() <= before_total + 1e-6
+    for h in balanced.powered_on_hosts():
+        assert balanced.reservations_respected(h.host_id)
+    # Imbalance never increases.
+    assert balanced.imbalance() <= snap.imbalance() + 1e-9
+
+
+@settings(max_examples=60, deadline=None)
+@given(clusters())
+def test_redivvy_conservation(snap):
+    flex = get_flexible_power(snap)
+    new_caps = redivvy_power_cap(snap, flex)
+    total = sum(new_caps.values())
+    assert total <= snap.power_budget + 1e-6
+    for host_id, cap in new_caps.items():
+        # Reservations still supported at the new cap.
+        host = flex.hosts[host_id]
+        assert host.spec.managed_capacity(cap) >= \
+            flex.cpu_reserved(host_id) - 1e-6
+
+
+@settings(max_examples=60, deadline=None)
+@given(clusters())
+def test_power_on_funding(snap):
+    # Add a standby host, then fund it.
+    standby = Host("standby", PAPER_HOST, power_cap=0.0, powered_on=False)
+    snap.hosts["standby"] = standby
+    snap.power_budget += 0.0  # budget unchanged: funding must come from peers
+    funded, granted = redistribute_for_power_on(snap, "standby")
+    total = sum(h.power_cap for h in funded.hosts.values()
+                if h.powered_on or h.host_id == "standby")
+    assert total <= funded.power_budget + 1e-6
+    assert granted <= PAPER_HOST.power_peak + 1e-9
+    for h in funded.powered_on_hosts():
+        assert funded.reservations_respected(h.host_id)
+
+
+@settings(max_examples=60, deadline=None)
+@given(clusters())
+def test_power_off_reabsorption(snap):
+    victim = snap.powered_on_hosts()[0]
+    # Evacuate it first (reservations must not be stranded).
+    others = [h.host_id for h in snap.powered_on_hosts()[1:]]
+    if not others:
+        return
+    for vm in snap.vms_on(victim.host_id):
+        vm.host_id = others[0]
+    for h in snap.powered_on_hosts():
+        if not snap.reservations_respected(h.host_id):
+            return  # inadmissible scenario after forced evacuation
+    out = redistribute_after_power_off(snap, victim.host_id)
+    assert not out.hosts[victim.host_id].powered_on
+    assert out.hosts[victim.host_id].power_cap == 0.0
+    assert out.total_allocated_power() <= out.power_budget + 1e-6
+    # Freed Watts flow to hosts below peak.
+    before = {h.host_id: snap.hosts[h.host_id].power_cap
+              for h in out.powered_on_hosts()}
+    assert all(out.hosts[k].power_cap >= v - 1e-9
+               for k, v in before.items())
+
+
+def test_balance_paper_headroom_example():
+    """Fig. 1b-style: 24 GHz demand against a 19.575 GHz capped host."""
+    hosts = [Host(f"h{i}", PAPER_HOST, power_cap=250.0) for i in range(3)]
+    vms = []
+    for i in range(30):
+        demand = 2400.0 if i < 10 else 1000.0
+        vms.append(VirtualMachine(vm_id=f"vm{i}", demand=demand,
+                                  host_id=f"h{i // 10}"))
+    snap = ClusterSnapshot(hosts, vms, power_budget=750.0)
+    balanced, did = balance_power_cap(snap, BalanceConfig())
+    assert did
+    # The hot host's capacity now covers its demand; donors still cover
+    # theirs; Watts conserved.
+    assert balanced.hosts["h0"].managed_capacity >= 24000.0 - 50.0
+    for h in ("h1", "h2"):
+        assert balanced.hosts[h].managed_capacity >= 10000.0 - 50.0
+    assert balanced.total_allocated_power() <= 750.0 + 1e-6

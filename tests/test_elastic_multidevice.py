@@ -1,0 +1,22 @@
+"""Elastic resize on a real multi-device mesh (subprocess: 8 fake devices).
+
+Exercises the full DPM-driven path: train on 2 pods -> checkpoint ->
+rebuild 1-pod mesh -> restore resharded -> continue -> scale back up,
+asserting loss continuity (the examples/elastic_training.py flow)."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+@pytest.mark.slow
+def test_elastic_training_example():
+    env = os.environ.copy()
+    env["PYTHONPATH"] = "src"
+    out = subprocess.run(
+        [sys.executable, "examples/elastic_training.py"],
+        capture_output=True, text=True, timeout=900, env=env)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "OK: loss continuous across both elastic transitions" in out.stdout

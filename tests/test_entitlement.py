@@ -1,0 +1,69 @@
+"""Waterfill / divvy properties (hypothesis)."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.drs.entitlement import waterfill, divvy
+from repro.drs.snapshot import VirtualMachine
+
+
+@st.composite
+def fill_problem(draw):
+    n = draw(st.integers(1, 12))
+    floors = np.array(draw(st.lists(st.floats(0, 50), min_size=n,
+                                    max_size=n)))
+    extra = np.array(draw(st.lists(st.floats(0, 100), min_size=n,
+                                   max_size=n)))
+    ceilings = floors + extra
+    weights = np.array(draw(st.lists(st.floats(0.1, 10), min_size=n,
+                                     max_size=n)))
+    capacity = draw(st.floats(float(floors.sum()), float(ceilings.sum())
+                              + 100.0))
+    return capacity, floors, ceilings, weights
+
+
+@settings(max_examples=300, deadline=None)
+@given(fill_problem())
+def test_waterfill_invariants(problem):
+    capacity, floors, ceilings, weights = problem
+    x = waterfill(capacity, floors, ceilings, weights)
+    assert np.all(x >= floors - 1e-6), "floors are guaranteed"
+    assert np.all(x <= ceilings + 1e-6), "ceilings are hard limits"
+    target = min(capacity, ceilings.sum())
+    assert np.isclose(x.sum(), target, rtol=1e-6, atol=1e-5), \
+        "capacity fully used (up to total demand)"
+
+
+@settings(max_examples=200, deadline=None)
+@given(fill_problem())
+def test_waterfill_weighted_fairness(problem):
+    """Max-min: among VMs strictly inside (floor, ceiling), allocation is
+    proportional to weight (same water level)."""
+    capacity, floors, ceilings, weights = problem
+    x = waterfill(capacity, floors, ceilings, weights)
+    inside = (x > floors + 1e-4) & (x < ceilings - 1e-4)
+    levels = x[inside] / weights[inside]
+    if levels.size >= 2:
+        assert np.ptp(levels) <= 1e-2 * max(levels.max(), 1.0)
+
+
+def test_divvy_reservation_priority():
+    vms = [
+        VirtualMachine(vm_id="a", reservation=2000.0, demand=500.0,
+                       shares=1000),
+        VirtualMachine(vm_id="b", demand=5000.0, shares=1000),
+    ]
+    ents = divvy(3000.0, vms)
+    # Reserved-but-idle VM keeps its full reservation as entitlement.
+    assert ents["a"] >= 2000.0 - 1e-6
+    assert ents["b"] <= 1000.0 + 1e-6
+
+
+def test_divvy_shares_split_contention():
+    vms = [
+        VirtualMachine(vm_id="a", demand=4000.0, shares=3000),
+        VirtualMachine(vm_id="b", demand=4000.0, shares=1000),
+    ]
+    ents = divvy(4000.0, vms)
+    assert np.isclose(ents["a"], 3000.0, atol=1.0)
+    assert np.isclose(ents["b"], 1000.0, atol=1.0)

@@ -1,0 +1,89 @@
+"""Heterogeneous clusters: the paper assumes homogeneous racks and sketches
+normalization as future work -- our algorithms operate in capacity space
+with per-spec Watts<->capacity maps, so mixed fleets work.  Property-test
+the safety invariants under heterogeneity."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.balance import BalanceConfig, balance_power_cap
+from repro.core.power_model import HostPowerSpec
+from repro.core.redistribute import redistribute_for_power_on
+from repro.drs.snapshot import ClusterSnapshot, Host, VirtualMachine
+
+SPECS = [
+    HostPowerSpec(capacity_peak=34_800.0, power_idle=160.0,
+                  power_peak=320.0, memory_mb=96 * 1024),
+    HostPowerSpec(capacity_peak=52_000.0, power_idle=210.0,
+                  power_peak=450.0, memory_mb=192 * 1024),   # newer gen
+    HostPowerSpec(capacity_peak=20_000.0, power_idle=90.0,
+                  power_peak=200.0, memory_mb=64 * 1024),    # low-power
+]
+
+
+@st.composite
+def hetero_clusters(draw):
+    n = draw(st.integers(2, 6))
+    hosts = []
+    for i in range(n):
+        spec = SPECS[draw(st.integers(0, len(SPECS) - 1))]
+        frac = draw(st.floats(0.3, 1.0))
+        cap = spec.power_idle + frac * (spec.power_peak - spec.power_idle)
+        hosts.append(Host(f"h{i}", spec, power_cap=cap))
+    vms = []
+    for j in range(draw(st.integers(2, 12))):
+        host = hosts[draw(st.integers(0, n - 1))]
+        demand = draw(st.floats(0.0, 0.9)) * host.managed_capacity
+        vms.append(VirtualMachine(vm_id=f"v{j}", demand=demand,
+                                  mem_demand=1024.0, host_id=host.host_id))
+    budget = sum(h.power_cap for h in hosts)
+    return ClusterSnapshot(hosts, vms, power_budget=budget)
+
+
+@settings(max_examples=60, deadline=None)
+@given(hetero_clusters())
+def test_hetero_balance_safety(snap):
+    before_watts = snap.total_allocated_power()
+    before_imb = snap.imbalance()
+    balanced, did = balance_power_cap(snap, BalanceConfig())
+    assert balanced.total_allocated_power() <= before_watts + 1e-6, \
+        "heterogeneous Watts<->capacity maps must not mint power"
+    assert balanced.imbalance() <= before_imb + 1e-9
+    for h in balanced.powered_on_hosts():
+        assert balanced.reservations_respected(h.host_id)
+        spec = h.spec
+        assert spec.power_idle - 1e-9 <= h.power_cap <= \
+            spec.power_peak + 1e-9
+
+
+@settings(max_examples=40, deadline=None)
+@given(hetero_clusters())
+def test_hetero_power_on_funding(snap):
+    standby = Host("standby", SPECS[1], power_cap=0.0, powered_on=False)
+    snap.hosts["standby"] = standby
+    funded, granted = redistribute_for_power_on(snap, "standby")
+    total = sum(h.power_cap for h in funded.hosts.values()
+                if h.powered_on or h.host_id == "standby")
+    assert total <= funded.power_budget + 1e-6
+    for h in funded.powered_on_hosts():
+        assert funded.reservations_respected(h.host_id)
+
+
+def test_hetero_balance_prefers_efficient_watts():
+    """Watts flow where they buy the most capacity: the efficient host can
+    serve the same demand at fewer Watts, so a saturated efficient host
+    pulls budget from an idle inefficient one."""
+    eff = SPECS[1]    # 52 GHz / (450-210) W  -> 217 MHz/W
+    ineff = SPECS[0]  # 34.8 GHz / 160 W      -> 217 MHz/W... use low-power
+    hosts = [Host("eff", eff, power_cap=eff.power_idle + 60.0),
+             Host("idle", ineff, power_cap=320.0)]
+    vms = [VirtualMachine(vm_id="hot", demand=30_000.0, mem_demand=1024,
+                          host_id="eff"),
+           VirtualMachine(vm_id="cold", demand=1_000.0, mem_demand=1024,
+                          host_id="idle")]
+    snap = ClusterSnapshot(hosts, vms,
+                           power_budget=sum(h.power_cap for h in hosts))
+    balanced, did = balance_power_cap(snap, BalanceConfig())
+    assert did
+    assert balanced.hosts["eff"].power_cap > hosts[0].power_cap
+    assert balanced.total_allocated_power() <= snap.power_budget + 1e-6

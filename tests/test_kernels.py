@@ -1,0 +1,131 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode), with shape sweeps
+and hypothesis-driven randomized shapes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.moe_gmm import grouped_matmul
+from repro.kernels.moe_gmm.ref import grouped_matmul_ref
+from repro.kernels.ssd_scan import ssd_scan
+from repro.kernels.ssd_scan.ref import ssd_ref
+from repro.models.ssd import ssd_chunked
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else \
+        dict(rtol=2e-5, atol=2e-5)
+
+
+# ------------------------------------------------------------ flash attn
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,sq,skv,hq,hkv,d,causal,qoff",
+    [
+        (2, 128, 128, 4, 2, 64, True, 0),
+        (1, 256, 256, 8, 1, 128, True, 0),     # MQA
+        (2, 100, 100, 4, 4, 32, True, 0),      # non-multiple of block
+        (1, 1, 384, 4, 2, 64, True, 383),      # decode
+        (2, 64, 64, 4, 2, 64, False, 0),       # bidirectional
+        (1, 96, 160, 2, 2, 16, True, 64),      # continuation prefill
+    ])
+def test_flash_attention_matches_ref(b, sq, skv, hq, hkv, d, causal, qoff,
+                                     dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, sq, hq, d), dtype)
+    k = jax.random.normal(ks[1], (b, skv, hkv, d), dtype)
+    v = jax.random.normal(ks[2], (b, skv, hkv, d), dtype)
+    out = flash_attention(q, k, v, causal=causal, q_offset=qoff,
+                          block_q=64, block_k=64)
+    ref = attention_ref(q, k, v, causal=causal, q_offset=qoff)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+@settings(max_examples=10, deadline=None)
+@given(b=st.integers(1, 2), sq=st.integers(1, 96), hkv=st.sampled_from([1, 2]),
+       groups=st.sampled_from([1, 3]), d=st.sampled_from([16, 32]))
+def test_flash_attention_hypothesis(b, sq, hkv, groups, d):
+    ks = jax.random.split(jax.random.PRNGKey(sq * 7 + d), 3)
+    hq = hkv * groups
+    q = jax.random.normal(ks[0], (b, sq, hq, d))
+    k = jax.random.normal(ks[1], (b, sq, hkv, d))
+    v = jax.random.normal(ks[2], (b, sq, hkv, d))
+    out = flash_attention(q, k, v, causal=True, block_q=32, block_k=32)
+    ref = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+# -------------------------------------------------------------- SSD scan
+@pytest.mark.parametrize(
+    "b,l,h,p,n,chunk",
+    [(2, 64, 4, 16, 32, 16), (1, 128, 8, 32, 16, 32), (2, 48, 2, 8, 8, 16),
+     (1, 40, 4, 16, 16, 16)])  # ragged tail
+def test_ssd_kernel_matches_sequential_ref(b, l, h, p, n, chunk):
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (b, l, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, l, h)))
+    a_log = jax.random.normal(ks[2], (h,)) * 0.5
+    bm = jax.random.normal(ks[3], (b, l, h, n)) * 0.3
+    cm = jax.random.normal(ks[4], (b, l, h, n)) * 0.3
+    y, st_ = ssd_scan(x, dt, a_log, bm, cm, chunk=chunk)
+    yr, str_ = ssd_ref(x, dt, a_log, bm, cm)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(st_), np.asarray(str_),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_model_ssd_chunked_matches_sequential_ref():
+    """The model's own chunked SSD (XLA path) against the same oracle."""
+    ks = jax.random.split(KEY, 5)
+    b, l, h, p, n = 2, 96, 4, 16, 24
+    x = jax.random.normal(ks[0], (b, l, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, l, h)))
+    a_log = jax.random.normal(ks[2], (h,)) * 0.5
+    bm = jax.random.normal(ks[3], (b, l, h, n)) * 0.3
+    cm = jax.random.normal(ks[4], (b, l, h, n)) * 0.3
+    y, st_ = ssd_chunked(x, dt, a_log, bm, cm, chunk=32)
+    yr, str_ = ssd_ref(x, dt, a_log, bm, cm)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(st_), np.asarray(str_),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_ssd_scan_with_initial_state():
+    ks = jax.random.split(KEY, 6)
+    b, l, h, p, n = 1, 32, 2, 8, 8
+    x = jax.random.normal(ks[0], (b, l, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, l, h)))
+    a_log = jax.random.normal(ks[2], (h,)) * 0.5
+    bm = jax.random.normal(ks[3], (b, l, h, n)) * 0.3
+    cm = jax.random.normal(ks[4], (b, l, h, n)) * 0.3
+    init = jax.random.normal(ks[5], (b, h, p, n)) * 0.2
+    y, st_ = ssd_scan(x, dt, a_log, bm, cm, chunk=16, init_state=init)
+    yr, str_ = ssd_ref(x, dt, a_log, bm, cm, init_state=init)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------- grouped GEMM
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("e,c,d,f", [(4, 64, 128, 96), (8, 100, 60, 70),
+                                     (2, 16, 512, 256), (1, 8, 8, 8)])
+def test_grouped_matmul_matches_ref(e, c, d, f, dtype):
+    k1, k2 = jax.random.split(KEY)
+    x = jax.random.normal(k1, (e, c, d), dtype)
+    w = jax.random.normal(k2, (e, d, f), dtype)
+    out = grouped_matmul(x, w, block_c=32, block_d=64, block_f=32)
+    ref = grouped_matmul_ref(x, w)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=2e-2 if dtype == jnp.bfloat16 else 1e-4,
+                               atol=2e-2 if dtype == jnp.bfloat16 else 1e-3)

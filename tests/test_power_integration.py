@@ -1,0 +1,98 @@
+"""Power-cap <-> data-plane integration: batch scheduler, straggler
+mitigation, serving router."""
+
+import numpy as np
+
+from repro.core.power_model import PAPER_HOST
+from repro.drs.snapshot import ClusterSnapshot, Host, VirtualMachine
+from repro.runtime.power_integration import (PowerAwareBatchScheduler,
+                                             StragglerMitigator,
+                                             StragglerReport)
+from repro.runtime.serve_loop import CapacityAwareRouter, Replica
+
+
+def _snapshot(caps):
+    hosts = [Host(f"h{i}", PAPER_HOST, power_cap=c)
+             for i, c in enumerate(caps)]
+    vms = [VirtualMachine(vm_id=f"job{i}", demand=8000.0, host_id=f"h{i}")
+           for i in range(len(caps))]
+    return ClusterSnapshot(hosts, vms, power_budget=sum(caps))
+
+
+def test_batch_plan_proportional_to_caps():
+    snap = _snapshot([320.0, 250.0])
+    sched = PowerAwareBatchScheduler(global_batch=64,
+                                     pod_hosts=[["h0"], ["h1"]],
+                                     hysteresis=0.0)
+    plan = sched.plan(snap)
+    cap0 = PAPER_HOST.capped_capacity(320.0)
+    cap1 = PAPER_HOST.capped_capacity(250.0)
+    # Pod 0's fair share (0.64 * 64 = 41) exceeds its 32 slots: clamped.
+    assert plan.examples_per_pod[0] == 32
+    # Pod 1 gets its proportional share of the batch.
+    expect1 = 64 * cap1 / (cap0 + cap1)
+    assert abs(plan.examples_per_pod[1] - expect1) <= 1.0
+    assert plan.examples_per_pod.sum() <= 64
+    # Weight mask: pod 0's slots [0:32), pod 1's [32:64).
+    assert plan.weights[:plan.examples_per_pod[0]].all()
+    assert plan.weights[32 + plan.examples_per_pod[1]:].sum() == 0
+
+
+def test_batch_plan_equal_caps_full_batch():
+    snap = _snapshot([320.0, 320.0])
+    sched = PowerAwareBatchScheduler(64, [["h0"], ["h1"]], hysteresis=0.0)
+    plan = sched.plan(snap)
+    assert list(plan.examples_per_pod) == [32, 32]
+    assert plan.weights.sum() == 64
+
+
+def test_hysteresis_suppresses_small_changes():
+    snap = _snapshot([320.0, 320.0])
+    sched = PowerAwareBatchScheduler(64, [["h0"], ["h1"]], hysteresis=0.05)
+    p1 = sched.plan(snap)
+    snap.hosts["h0"].power_cap = 316.0      # ~1% capacity change
+    p2 = sched.plan(snap)
+    assert np.array_equal(p1.examples_per_pod, p2.examples_per_pod)
+
+
+def test_apply_masks_batch():
+    import jax.numpy as jnp
+    snap = _snapshot([320.0, 250.0])
+    sched = PowerAwareBatchScheduler(8, [["h0"], ["h1"]], hysteresis=0.0)
+    plan = sched.plan(snap)
+    batch = {"weights": jnp.ones((8, 4))}
+    out = sched.apply(batch, plan)
+    assert float(out["weights"].sum()) == plan.weights.sum() * 4
+
+
+def test_straggler_detect_and_mitigate():
+    snap = _snapshot([250.0, 250.0, 250.0])
+    mit = StragglerMitigator(threshold=0.15, patience=2)
+    report = StragglerReport(step_times={"h0": 1.4, "h1": 1.0, "h2": 1.0})
+    assert mit.detect(report) == []            # first strike
+    assert mit.detect(report) == ["h0"]        # patience reached
+    balanced = mit.mitigate(snap.clone(), report)
+    assert balanced is not None
+    # Watts moved toward the straggler.
+    assert balanced.hosts["h0"].power_cap > 250.0
+    assert balanced.total_allocated_power() <= snap.power_budget + 1e-6
+
+
+def test_router_weights_by_capacity():
+    snap = _snapshot([320.0, 250.0])
+    router = CapacityAwareRouter([Replica("r0", "h0"), Replica("r1", "h1")])
+    router.sync_capacities(snap)
+    assigned = router.route(13)
+    n0 = assigned.count("r0")
+    cap0 = PAPER_HOST.capped_capacity(320.0)
+    cap1 = PAPER_HOST.capped_capacity(250.0)
+    # Weighted least-loaded: shares track capacity ratio.
+    assert abs(n0 / 13 - cap0 / (cap0 + cap1)) < 0.15
+
+
+def test_router_skips_powered_off_replica():
+    snap = _snapshot([320.0, 250.0])
+    snap.hosts["h1"].powered_on = False
+    router = CapacityAwareRouter([Replica("r0", "h0"), Replica("r1", "h1")])
+    router.sync_capacities(snap)
+    assert set(router.route(5)) == {"r0"}

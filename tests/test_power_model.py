@@ -1,0 +1,75 @@
+"""Power model (paper Eqs. 1-4) unit + property tests, and Table II."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.power_model import (HostPowerSpec, PAPER_HOST,
+                                    deployment_table)
+
+
+def test_paper_host_capped_capacity():
+    # 250 W on the Table I server -> 19.575 GHz (Sec. II-B numbers).
+    assert np.isclose(PAPER_HOST.capped_capacity(250.0), 19575.0)
+    assert np.isclose(PAPER_HOST.capped_capacity(320.0), 34800.0)
+    assert np.isclose(PAPER_HOST.capped_capacity(160.0), 0.0)
+
+
+def test_cap_clipping():
+    assert PAPER_HOST.capped_capacity(500.0) == 34800.0   # above peak
+    assert PAPER_HOST.capped_capacity(100.0) == 0.0       # below idle
+
+
+def test_table2_deployments():
+    rows = deployment_table(PAPER_HOST, 8000.0, [400, 320, 285, 250])
+    expect = [  # (count, capacity GHz, cpu ratio, mem ratio) -- paper Table II
+        (20, 696.0, 1.00, 1.00),
+        (25, 870.0, 1.25, 1.25),
+        (28, 761.25, 1.09, 1.40),
+        (32, 626.4, 0.90, 1.60),
+    ]
+    for row, (count, ghz, cr, mr) in zip(rows, expect):
+        assert row["host_count"] == count
+        assert np.isclose(row["capacity"] / 1000.0, ghz, atol=0.3)
+        assert np.isclose(row["capacity_ratio"], cr, atol=0.01)
+        assert np.isclose(row["memory_ratio"], mr, atol=0.01)
+
+
+host_specs = st.builds(
+    HostPowerSpec,
+    capacity_peak=st.floats(1e3, 1e6),
+    power_idle=st.floats(10.0, 300.0),
+    power_peak=st.floats(301.0, 1000.0),
+)
+
+
+@settings(max_examples=200, deadline=None)
+@given(spec=host_specs, cap=st.floats(0.0, 1200.0))
+def test_roundtrip_and_monotonicity(spec, cap):
+    c = spec.capped_capacity(cap)
+    assert 0.0 <= c <= spec.capacity_peak
+    # Inverting capacity must give back a clipped cap.
+    cap_back = spec.cap_for_capacity(c)
+    assert np.isclose(spec.capped_capacity(cap_back), c, rtol=1e-9,
+                      atol=1e-6)
+    # Monotone: more Watts never less capacity.
+    assert spec.capped_capacity(cap + 10.0) >= c - 1e-9
+
+
+@settings(max_examples=100, deadline=None)
+@given(spec=host_specs, u=st.floats(0.0, 1.0))
+def test_power_consumed_bounds(spec, u):
+    p = spec.power_consumed(u)
+    assert spec.power_idle - 1e-9 <= p <= spec.power_peak + 1e-9
+    # Consuming at capped utilization never exceeds the cap (Eq. 2).
+    cap = spec.power_idle + u * (spec.power_peak - spec.power_idle)
+    c = spec.capped_capacity(cap)
+    assert spec.power_consumed(c / spec.capacity_peak) <= cap + 1e-6
+
+
+@settings(max_examples=100, deadline=None)
+@given(spec=host_specs, overhead=st.floats(0.0, 500.0), cap=st.floats(0, 1e4))
+def test_managed_capacity_never_negative(spec, overhead, cap):
+    import dataclasses
+    spec = dataclasses.replace(spec, hypervisor_overhead=overhead)
+    assert spec.managed_capacity(cap) >= 0.0

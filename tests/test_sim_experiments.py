@@ -1,0 +1,95 @@
+"""End-to-end reproduction of the paper's three experiments (Tables III-V).
+
+Assertions target the paper's *claims* (orderings and zero/non-zero
+structure); exact payload percentages depend on unpublished simulator
+internals and are recorded in EXPERIMENTS.md instead.
+"""
+
+import pytest
+
+from repro.sim.experiments import run_all, run_policy
+from repro.sim.metrics import ratio_table
+
+
+@pytest.fixture(scope="module")
+def headroom():
+    return run_all("headroom")
+
+
+@pytest.fixture(scope="module")
+def standby():
+    return run_all("standby")
+
+
+class TestHeadroomRebalancing:  # paper Sec. V-B, Table III
+    def test_cpc_avoids_all_migrations(self, headroom):
+        assert headroom["cpc"].acc.vmotions == 0
+        assert headroom["cpc"].acc.cap_changes > 0
+
+    def test_static_migrates(self, headroom):
+        assert headroom["static"].acc.vmotions >= 3
+
+    def test_statichigh_no_action_needed(self, headroom):
+        assert headroom["statichigh"].acc.vmotions == 0
+
+    def test_payload_ordering(self, headroom):
+        t = ratio_table({k: v.acc for k, v in headroom.items()},
+                        "statichigh")
+        assert t["cpc"]["cpu_payload_ratio"] >= \
+            t["static"]["cpu_payload_ratio"] - 1e-6
+        assert t["cpc"]["cpu_payload_ratio"] >= 0.97   # paper: 0.99
+
+    def test_caps_track_burst(self, headroom):
+        events = [e for _, e in headroom["cpc"].events if e.startswith("cap")]
+        # Raised for the burst, restored after.
+        assert any("host0" in e for e in events)
+
+
+class TestStandbyReallocation:  # paper Sec. V-C, Table IV
+    def test_consolidation_happens_everywhere(self, standby):
+        for policy in ("cpc", "static", "statichigh"):
+            assert standby[policy].acc.power_offs == 1
+
+    def test_cpc_absorbs_spike_without_poweron(self, standby):
+        assert standby["cpc"].acc.power_ons == 0
+        assert standby["cpc"].acc.vmotions == 10   # evacuation only
+
+    def test_static_needs_poweron(self, standby):
+        assert standby["static"].acc.power_ons == 1
+        assert standby["static"].acc.vmotions > 10
+
+    def test_power_ratio(self, standby):
+        t = ratio_table({k: v.acc for k, v in standby.items()}, "statichigh")
+        assert t["static"]["power_ratio"] > 1.02    # paper: 1.36
+        assert abs(t["cpc"]["power_ratio"] - 1.0) < 0.02
+
+    def test_cpc_caps_raised_after_poweroff(self, standby):
+        events = [e for _, e in standby["cpc"].events if "cap" in e]
+        assert any("=320W" in e for e in events)
+
+
+@pytest.mark.slow
+class TestFlexibleCapacity:  # paper Sec. V-D, Table V
+    @pytest.fixture(scope="class")
+    def flexible(self):
+        return run_all("flexible")
+
+    def test_trading_fully_served_under_cpc(self, flexible):
+        assert flexible["cpc"].acc.tag_satisfaction("trading") >= 0.97
+
+    def test_trading_starved_under_static(self, flexible):
+        sat = flexible["static"].acc.tag_satisfaction("trading")
+        assert 0.55 <= sat <= 0.72                  # paper: 0.62
+
+    def test_memory_ratio(self, flexible):
+        t = ratio_table({k: v.acc for k, v in flexible.items()},
+                        "statichigh")
+        assert t["cpc"]["mem_payload_ratio"] > 1.2  # paper: 1.28
+        assert t["static"]["mem_payload_ratio"] > 1.2
+
+    def test_cpu_payload_ordering(self, flexible):
+        t = ratio_table({k: v.acc for k, v in flexible.items()},
+                        "statichigh")
+        assert t["cpc"]["cpu_payload_ratio"] > \
+            t["static"]["cpu_payload_ratio"]
+        assert t["cpc"]["cpu_payload_ratio"] > 1.2  # paper: 1.24

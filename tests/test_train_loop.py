@@ -1,0 +1,101 @@
+"""Training loop end-to-end: loss decreases, schedules, compression."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.data.pipeline import SyntheticTokens
+from repro.optim.adamw import AdamW
+from repro.optim.compress import (ErrorFeedbackCompressor, dequantize_int8,
+                                  quantize_int8)
+from repro.optim.schedule import cosine_schedule, wsd_schedule
+from repro.runtime.train_loop import init_train_state, make_train_step
+
+
+def test_loss_decreases_dense():
+    cfg = configs.get_smoke("granite_8b")
+    data = SyntheticTokens(vocab_size=cfg.vocab_size, seq_len=32,
+                           global_batch=8, seed=7)
+    opt = AdamW(learning_rate=3e-3)
+    state = init_train_state(jax.random.PRNGKey(0), cfg, opt)
+    step = jax.jit(make_train_step(cfg, opt))
+    losses = []
+    for _ in range(30):
+        b = data.next_batch()
+        batch = {"tokens": b.tokens, "labels": b.labels,
+                 "weights": b.weights}
+        state, metrics = step(state, batch)
+        losses.append(float(metrics["loss"]))
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.2, losses
+
+
+def test_weight_mask_excludes_examples():
+    """Power-aware masking: zero-weight examples do not affect the loss."""
+    cfg = configs.get_smoke("granite_8b")
+    opt = AdamW(learning_rate=1e-3)
+    state = init_train_state(jax.random.PRNGKey(0), cfg, opt)
+    step = jax.jit(make_train_step(cfg, opt))
+    key = jax.random.PRNGKey(5)
+    tokens = jax.random.randint(key, (4, 32), 0, cfg.vocab_size)
+    labels = jax.random.randint(key, (4, 32), 0, cfg.vocab_size)
+    w_mask = jnp.ones((4, 32)).at[2:].set(0.0)
+    _, m1 = step(state, {"tokens": tokens, "labels": labels,
+                         "weights": w_mask})
+    # Replacing the masked-out rows with junk must not change the loss.
+    junk_tokens = tokens.at[2:].set((tokens[2:] + 17) % cfg.vocab_size)
+    junk_labels = labels.at[2:].set((labels[2:] + 5) % cfg.vocab_size)
+    _, m2 = step(state, {"tokens": junk_tokens, "labels": junk_labels,
+                         "weights": w_mask})
+    assert abs(float(m1["loss"]) - float(m2["loss"])) < 1e-5
+    assert float(m1["tokens"]) == 64.0
+
+
+def test_schedules():
+    cos = cosine_schedule(1e-3, warmup_steps=10, total_steps=100)
+    assert float(cos(0)) == 0.0
+    assert np.isclose(float(cos(10)), 1e-3, rtol=1e-3)
+    assert float(cos(100)) < float(cos(50))
+    wsd = wsd_schedule(1e-3, warmup_steps=10, stable_steps=50,
+                       decay_steps=20)
+    assert np.isclose(float(wsd(30)), 1e-3)       # stable plateau
+    assert np.isclose(float(wsd(59)), 1e-3)
+    assert float(wsd(80)) < 2e-5                  # decayed
+
+
+def test_int8_quantization_roundtrip():
+    x = jax.random.normal(jax.random.PRNGKey(0), (128, 64)) * 3.0
+    q, s = quantize_int8(x)
+    err = jnp.abs(dequantize_int8(q, s) - x)
+    assert float(err.max()) <= float(s) * 0.51 + 1e-6
+
+
+def test_error_feedback_compensates():
+    """Sum of compressed grads converges to sum of true grads."""
+    comp = ErrorFeedbackCompressor()
+    g = {"w": jax.random.normal(jax.random.PRNGKey(1), (64,))}
+    residual = comp.init(g)
+    total_true = jnp.zeros(64)
+    total_sent = jnp.zeros(64)
+    for i in range(20):
+        gi = {"w": jax.random.normal(jax.random.PRNGKey(i + 2), (64,))}
+        sent, residual = comp.compress(gi, residual)
+        total_true += gi["w"]
+        total_sent += sent["w"]
+    # Residual bounds the cumulative error.
+    gap = float(jnp.max(jnp.abs(total_true - total_sent)))
+    assert gap <= float(jnp.max(jnp.abs(residual["w"]))) + 1e-4
+
+
+def test_data_pipeline_determinism_and_state():
+    d1 = SyntheticTokens(vocab_size=1000, seq_len=16, global_batch=4,
+                         seed=3)
+    b1 = d1.next_batch()
+    b2 = d1.next_batch()
+    # Restore from checkpointed cursor -> identical stream.
+    d2 = SyntheticTokens(vocab_size=1000, seq_len=16, global_batch=4,
+                         seed=3)
+    d2.load_state_dict({"seed": 3, "step": 1})
+    b2r = d2.next_batch()
+    assert jnp.array_equal(b2.tokens, b2r.tokens)
+    assert not jnp.array_equal(b1.tokens, b2.tokens)
