@@ -9,6 +9,8 @@ live in EXPERIMENTS.md.
   table4_standby       -- paper Table IV   (standby reallocation, Sec. V-C)
   table5_flexible      -- paper Table V    (flexible capacity, Sec. V-D)
   powercap_latency     -- cap-change vs vMotion cost asymmetry (Sec. II-D)
+  sweep_scale          -- vectorized-engine scenario sweep at 10/100/1000
+                          hosts (ticks/sec + CPC-vs-Static satisfaction delta)
   roofline_summary     -- per-(arch x shape) roofline terms from the dry-run
 
 Run: PYTHONPATH=src python -m benchmarks.run [--skip-slow]
@@ -83,6 +85,28 @@ def powercap_latency():
             f"ratio:{vmotion_s * 1000 / cap_ms:.0f}x")
 
 
+def sweep_scale():
+    """Scenario sweep on the vectorized engine: 10/100/1000 hosts.
+
+    Each cell is a host-correlated burst scenario (10 VMs per host) run
+    under all three policies; reports the vector engine's throughput in
+    ticks/sec, the CPC-vs-Static payload-satisfaction delta, and CPC's cap
+    changes.  The 1,000-host cell simulates 10,000 VMs end-to-end."""
+    from repro.sim.sweep import run_sweep, scale_ladder
+    specs = scale_ladder(sizes=(10, 100, 1000), spike="burst",
+                         duration_s=600.0)
+    res = run_sweep(specs, policies=("cpc", "static"))
+    parts = []
+    for spec in specs:
+        cpc = res[spec.name]["cpc"]
+        static = res[spec.name]["static"]
+        parts.append(
+            f"{spec.n_hosts}h:{cpc.ticks_per_s:.0f}tps"
+            f"/dsat{cpc.cpu_satisfaction - static.cpu_satisfaction:+.3f}"
+            f"/caps{cpc.cap_changes}")
+    return ";".join(parts)
+
+
 def roofline_summary():
     pats = os.path.join(os.path.dirname(__file__), "..", "results",
                         "dryrun", "*.json")
@@ -116,6 +140,7 @@ BENCHES = [
     ("table4_standby", table4_standby, False),
     ("table5_flexible", table5_flexible, True),
     ("powercap_latency", powercap_latency, False),
+    ("sweep_scale", sweep_scale, True),
     ("kernel_microbenches", kernel_microbenches, False),
     ("roofline_summary", roofline_summary, False),
 ]

@@ -33,91 +33,95 @@ class BalanceConfig:
     min_transfer: float = 1e-3      # capacity units; below this we stop
 
 
-def _normalized_entitlements(snapshot: ClusterSnapshot) -> dict[str, float]:
-    return {h.host_id: snapshot.normalized_entitlement(h.host_id)
-            for h in snapshot.powered_on_hosts()}
-
-
 def balance_power_cap(snapshot: ClusterSnapshot,
                       config: BalanceConfig | None = None
                       ) -> tuple[ClusterSnapshot, bool]:
-    """Returns (what-if snapshot with rebalanced caps, did-anything flag)."""
+    """Returns (what-if snapshot with rebalanced caps, did-anything flag).
+
+    The whole loop runs in array space: placements are frozen for its
+    duration, so the struct-of-arrays view is built once and only the
+    ``power_cap`` column evolves.  Each round costs one batched-waterfill
+    pass over every VM plus O(hosts) arithmetic, independent of cluster
+    size in Python-interpreter terms.
+    """
     config = config or BalanceConfig()
     f = snapshot.clone()
     did_balance = False
 
-    for _ in range(config.max_iters):
-        hosts_on = f.powered_on_hosts()
-        ns = _normalized_entitlements(f)
-        if len(ns) < 2:
-            break
-        imbalance = float(np.std(list(ns.values())))
-        if imbalance <= config.imbalance_threshold:
-            break
-        # Cluster-average normalized entitlement: the water level every host
-        # would sit at if capacity were perfectly divisible.
-        ents = {h.host_id: sum(f.host_entitlements(h.host_id).values())
-                for h in hosts_on}
-        total_cap = sum(h.managed_capacity for h in hosts_on)
-        if total_cap <= 0:
-            break
-        n_avg = sum(ents.values()) / total_cap
-        if n_avg <= 1e-12:
-            break
+    av = f.as_arrays()
+    on = av.host_on
+    caps = av.power_cap.copy()
+    if int(on.sum()) >= 2:
+        cpu_res = av.cpu_reserved()
+        peak_managed = av.peak_managed_capacity()
+        managed = av.managed_capacity(caps)
+        ents = av.entitlement_sums(caps)
+        ns = np.where(managed > 0.0, ents / np.maximum(managed, 1e-300), 0.0)
+        for _ in range(config.max_iters):
+            imbalance = float(ns[on].std())
+            if imbalance <= config.imbalance_threshold:
+                break
+            total_cap = float(managed[on].sum())
+            if total_cap <= 0:
+                break
+            # Cluster-average normalized entitlement: the water level every
+            # host would sit at if capacity were perfectly divisible.
+            n_avg = float(ents[on].sum()) / total_cap
+            if n_avg <= 1e-12:
+                break
 
-        # Batched progressive filling: every host above the average level is
-        # a recipient (bounded by its physical peak), every host below is a
-        # donor (bounded by the average level and by its reservations).  One
-        # batch round moves the same total capacity as many pairwise rounds
-        # of the paper's Algorithm 2 and converges to the same max-min fixed
-        # point.
-        need, avail = {}, {}
-        for h in hosts_on:
-            hid = h.host_id
-            cbar = ents[hid] / n_avg   # capacity at which N_h == n_avg
-            cur = h.managed_capacity
-            if ns[hid] > n_avg:
-                need[hid] = max(min(h.peak_managed_capacity, cbar) - cur, 0.0)
-            elif ns[hid] < n_avg:
-                donor_floor = max(cbar, f.cpu_reserved(hid))
-                avail[hid] = max(cur - donor_floor, 0.0)
-        total_need, total_avail = sum(need.values()), sum(avail.values())
-        transfer = min(total_need, total_avail)
-        if transfer <= config.min_transfer:
-            break  # powercap range exhausted -> DRS migration handles rest
+            # Batched progressive filling: every host above the average
+            # level is a recipient (bounded by its physical peak), every
+            # host below is a donor (bounded by the average level and by its
+            # reservations).  One batch round moves the same total capacity
+            # as many pairwise rounds of the paper's Algorithm 2 and
+            # converges to the same max-min fixed point.
+            cbar = ents / n_avg        # capacity at which N_h == n_avg
+            recipients = on & (ns > n_avg)
+            donors = on & (ns < n_avg)
+            need = np.where(
+                recipients,
+                np.maximum(np.minimum(peak_managed, cbar) - managed, 0.0),
+                0.0)
+            avail = np.where(
+                donors,
+                np.maximum(managed - np.maximum(cbar, cpu_res), 0.0),
+                0.0)
+            total_need, total_avail = float(need.sum()), float(avail.sum())
+            transfer = min(total_need, total_avail)
+            if transfer <= config.min_transfer:
+                break  # powercap range exhausted -> DRS migration handles it
 
-        prev_caps = {h.host_id: h.power_cap for h in f.powered_on_hosts()}
-        for hid, n in need.items():
-            if n <= 0.0:
-                continue
-            h = f.hosts[hid]
-            h.power_cap = float(h.spec.cap_for_managed_capacity(
-                h.managed_capacity + transfer * n / total_need))
-        for hid, a in avail.items():
-            if a <= 0.0:
-                continue
-            h = f.hosts[hid]
-            h.power_cap = float(h.spec.cap_for_managed_capacity(
-                h.managed_capacity - transfer * a / total_avail))
-        # Watts conservation under heterogeneous specs: trim recipients if
-        # the budget would be exceeded (linear maps conserve exactly for
-        # homogeneous specs; this is a safety net).
-        over = sum(h.power_cap for h in f.powered_on_hosts()
-                   ) - snapshot.power_budget
-        if over > 1e-6:
-            for hid in need:
-                h = f.hosts[hid]
-                h.power_cap = max(h.power_cap - over / len(need),
-                                  h.spec.power_idle)
-        # Heterogeneous Watts<->capacity maps (plus the trim above) can make
-        # a round non-improving near convergence: revert it and stop rather
-        # than oscillate.
-        if f.imbalance() > imbalance + 1e-12:
-            for hid, cap in prev_caps.items():
-                f.hosts[hid].power_cap = cap
-            break
-        did_balance = True
+            prev_caps = caps.copy()
+            grow = recipients & (need > 0.0)
+            caps = np.where(grow, av.cap_for_managed_capacity(
+                managed + transfer * need / max(total_need, 1e-300)), caps)
+            shrink = donors & (avail > 0.0)
+            caps = np.where(shrink, av.cap_for_managed_capacity(
+                managed - transfer * avail / max(total_avail, 1e-300)), caps)
+            # Watts conservation under heterogeneous specs: trim recipients
+            # if the budget would be exceeded (linear maps conserve exactly
+            # for homogeneous specs; this is a safety net).
+            over = float(caps[on].sum()) - snapshot.power_budget
+            if over > 1e-6:
+                caps = np.where(
+                    recipients,
+                    np.maximum(caps - over / int(recipients.sum()),
+                               av.power_idle),
+                    caps)
+            managed = av.managed_capacity(caps)
+            ents = av.entitlement_sums(caps)
+            ns = np.where(managed > 0.0,
+                          ents / np.maximum(managed, 1e-300), 0.0)
+            # Heterogeneous Watts<->capacity maps (plus the trim above) can
+            # make a round non-improving near convergence: revert it and
+            # stop rather than oscillate.
+            if float(ns[on].std()) > imbalance + 1e-12:
+                caps = prev_caps
+                break
+            did_balance = True
 
+    av.write_caps(f, caps)
     if did_balance:
         f.validate()
     return f, did_balance

@@ -11,6 +11,10 @@ One DRS invocation (default every 300 s) runs:
 
 Baselines from the paper's evaluation (`Static`, `StaticHigh`) run the same
 DRS pipeline with cap changes disabled.
+
+See ``docs/ARCHITECTURE.md`` for how this pipeline sits between the
+simulator tick loop (``repro.sim.cluster``) and the array-based hot path
+(``repro.drs.arrays``, ``repro.sim.engine``).
 """
 
 from __future__ import annotations
@@ -67,10 +71,7 @@ class CloudPowerCapManager:
             moves = placement.correct_constraints(
                 flex, capacity_fn=redivvy.fundable_capacity)
             # Post-correction reserved floors (reservations moved with VMs).
-            for host in flex.powered_on_hosts():
-                host.power_cap = max(
-                    flex.reserved_power_cap(host.host_id),
-                    host.spec.power_idle)
+            redivvy.set_reserved_floor_caps(flex)
             new_caps = redivvy.redivvy_power_cap(snapshot, flex)
             cap_actions = redivvy.emit_actions(snapshot, new_caps,
                                                reason="powercap-allocation")

@@ -42,21 +42,26 @@ def redistribute_for_power_on(snapshot: ClusterSnapshot, candidate_id: str,
 
     # 2. Drain low-utilization hosts down to their power-on-threshold floor.
     if needed > 1e-9:
+        # Per-host rollups (utilization, demand, reservations) in one
+        # vectorized pass; the greedy drain below is O(hosts).
+        av = f.as_arrays()
+        cpu_util = av.host_cpu_utilization()
+        host_demand = av.host_demand()
+        cpu_res = av.cpu_reserved()
         donors = sorted(
-            (h for h in f.powered_on_hosts()
-             if f.host_cpu_utilization(h.host_id) < dpm_config.high_util
-             and h.host_id != candidate_id),
-            key=lambda h: f.host_cpu_utilization(h.host_id))
-        for donor in donors:
+            (i for i in range(av.n_hosts)
+             if av.host_on[i] and cpu_util[i] < dpm_config.high_util
+             and av.host_ids[i] != candidate_id),
+            key=lambda i: cpu_util[i])
+        for i in donors:
             if needed <= 1e-9:
                 break
-            demand = sum(v.effective_demand
-                         for v in f.vms_on(donor.host_id))
+            donor = f.hosts[av.host_ids[i]]
             # Floor capacity: utilization stays strictly below the power-on
             # trigger, and reservations stay whole; the cap never drops
             # below idle (a powered-on host draws idle regardless).
-            floor_capacity = max(demand / dpm_config.high_util,
-                                 f.cpu_reserved(donor.host_id))
+            floor_capacity = max(host_demand[i] / dpm_config.high_util,
+                                 cpu_res[i])
             floor_cap = max(float(donor.spec.cap_for_managed_capacity(
                 floor_capacity)), donor.spec.power_idle)
             avail = max(donor.power_cap - floor_cap, 0.0)

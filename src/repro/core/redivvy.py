@@ -15,6 +15,8 @@ requires shrinking hosts to give up exactly ``r`` of their excess, i.e. keep
 
 from __future__ import annotations
 
+import numpy as np
+
 from repro.drs import actions as act
 from repro.drs.snapshot import ClusterSnapshot
 
@@ -66,6 +68,19 @@ def redivvy_power_cap(before: ClusterSnapshot, after: ClusterSnapshot,
             if h.powered_on}
 
 
+def set_reserved_floor_caps(snapshot: ClusterSnapshot) -> None:
+    """Drop every powered-on host's cap to its reserved floor, in place.
+
+    One vectorized pass: per-host reserved capacity and its Watts floor come
+    from the struct-of-arrays view instead of an O(VMs) scan per host.
+    """
+    av = snapshot.as_arrays()
+    floors = np.maximum(av.reserved_power_cap(), av.power_idle)
+    for i, hid in enumerate(av.host_ids):
+        if av.host_on[i]:
+            snapshot.hosts[hid].power_cap = float(floors[i])
+
+
 def get_flexible_power(snapshot: ClusterSnapshot) -> ClusterSnapshot:
     """Clone with every host's cap at its reserved floor (paper Fig. 3 step 1).
 
@@ -73,9 +88,7 @@ def get_flexible_power(snapshot: ClusterSnapshot) -> ClusterSnapshot:
     headroom that constraint correction may spend.
     """
     flex = snapshot.clone()
-    for host in flex.powered_on_hosts():
-        host.power_cap = max(flex.reserved_power_cap(host.host_id),
-                             host.spec.power_idle)
+    set_reserved_floor_caps(flex)
     return flex
 
 

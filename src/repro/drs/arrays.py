@@ -1,0 +1,207 @@
+"""Struct-of-arrays view of a cluster: the vectorized hot-path layout.
+
+``ClusterSnapshot`` keeps the per-object datamodel that the what-if
+algorithms mutate freely; this module gives every scale-sensitive consumer
+(powercap balancing, DPM triggers, the vectorized simulator engine) a flat
+NumPy layout built in one O(hosts + VMs) pass, so per-host quantities --
+reserved capacity, utilization, entitlements, Eq. 1 power -- come out of
+single array expressions instead of Python loops over the inventory.
+
+The view is a snapshot-in-time: it does not track later object mutations.
+Callers either use it within one computation (build, compute, drop) or, for
+cap-only loops like BalancePowerCap, carry the mutable ``power_cap`` column
+themselves and write the result back with :func:`ArrayView.write_caps`.
+
+See ``docs/ARCHITECTURE.md`` ("The array-based layout") for the full map of
+which call sites use this view.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.drs.entitlement import batched_waterfill
+
+
+@dataclasses.dataclass
+class ArrayView:
+    """Flat arrays over all hosts (index ``h``) and all VMs (index ``v``)."""
+
+    # Host columns.
+    host_ids: list
+    host_index: dict                    # host_id -> h
+    power_cap: np.ndarray               # (H,) Watts
+    host_on: np.ndarray                 # (H,) bool
+    power_idle: np.ndarray              # (H,)
+    power_peak: np.ndarray              # (H,)
+    capacity_peak: np.ndarray           # (H,)
+    hyp_overhead: np.ndarray            # (H,) Eq. 4's C_H
+    host_memory_mb: np.ndarray          # (H,) spec memory (ignores power state)
+    # VM columns.
+    vm_ids: list
+    vm_index: dict                      # vm_id -> v
+    vm_host: np.ndarray                 # (H-index,) int; -1 when unplaced
+    vm_on: np.ndarray                   # (V,) bool
+    demand: np.ndarray                  # (V,) MHz
+    mem_demand: np.ndarray              # (V,) MB
+    reservation: np.ndarray             # (V,) MHz
+    limit: np.ndarray                   # (V,) MHz (inf = unlimited)
+    shares: np.ndarray                  # (V,)
+    vm_memory_mb: np.ndarray            # (V,) configured memory
+    mem_reservation: np.ndarray         # (V,) MB
+
+    # ------------------------------------------------------------- build
+    @classmethod
+    def from_snapshot(cls, snapshot) -> "ArrayView":
+        hosts = list(snapshot.hosts.values())
+        vms = list(snapshot.vms.values())
+        host_ids = [h.host_id for h in hosts]
+        host_index = {hid: i for i, hid in enumerate(host_ids)}
+        vm_ids = [v.vm_id for v in vms]
+        vm_index = {vid: i for i, vid in enumerate(vm_ids)}
+        f64 = np.float64
+        return cls(
+            host_ids=host_ids,
+            host_index=host_index,
+            power_cap=np.array([h.power_cap for h in hosts], dtype=f64),
+            host_on=np.array([h.powered_on for h in hosts], dtype=bool),
+            power_idle=np.array([h.spec.power_idle for h in hosts],
+                                dtype=f64),
+            power_peak=np.array([h.spec.power_peak for h in hosts],
+                                dtype=f64),
+            capacity_peak=np.array([h.spec.capacity_peak for h in hosts],
+                                   dtype=f64),
+            hyp_overhead=np.array([h.spec.hypervisor_overhead for h in hosts],
+                                  dtype=f64),
+            host_memory_mb=np.array([h.spec.memory_mb for h in hosts],
+                                    dtype=f64),
+            vm_ids=vm_ids,
+            vm_index=vm_index,
+            vm_host=np.array([host_index.get(v.host_id, -1) for v in vms],
+                             dtype=np.int64),
+            vm_on=np.array([v.powered_on for v in vms], dtype=bool),
+            demand=np.array([v.demand for v in vms], dtype=f64),
+            mem_demand=np.array([v.mem_demand for v in vms], dtype=f64),
+            reservation=np.array([v.reservation for v in vms], dtype=f64),
+            limit=np.array([v.limit for v in vms], dtype=f64),
+            shares=np.array([v.shares for v in vms], dtype=f64),
+            vm_memory_mb=np.array([v.memory_mb for v in vms], dtype=f64),
+            mem_reservation=np.array([v.mem_reservation for v in vms],
+                                     dtype=f64),
+        )
+
+    # ------------------------------------------------------ power model
+    @property
+    def n_hosts(self) -> int:
+        return len(self.host_ids)
+
+    @property
+    def n_vms(self) -> int:
+        return len(self.vm_ids)
+
+    def capped_capacity(self, caps: np.ndarray | None = None) -> np.ndarray:
+        """Eq. 3 per host; 0 for powered-off hosts."""
+        caps = self.power_cap if caps is None else caps
+        c = np.clip(caps, self.power_idle, self.power_peak)
+        frac = (c - self.power_idle) / (self.power_peak - self.power_idle)
+        return np.where(self.host_on, self.capacity_peak * frac, 0.0)
+
+    def managed_capacity(self, caps: np.ndarray | None = None) -> np.ndarray:
+        """Eq. 4 per host; 0 for powered-off hosts."""
+        return np.where(
+            self.host_on,
+            np.maximum(self.capped_capacity(caps) - self.hyp_overhead, 0.0),
+            0.0)
+
+    def peak_managed_capacity(self) -> np.ndarray:
+        return np.maximum(self.capacity_peak - self.hyp_overhead, 0.0)
+
+    def cap_for_managed_capacity(self, capacities: np.ndarray) -> np.ndarray:
+        """Inverse of Eq. 4 (vectorized ``spec.cap_for_managed_capacity``)."""
+        c = np.clip(capacities + self.hyp_overhead, 0.0, self.capacity_peak)
+        return self.power_idle + (self.power_peak - self.power_idle) * (
+            c / self.capacity_peak)
+
+    # -------------------------------------------------------- VM rollups
+    def active_vms(self) -> np.ndarray:
+        """Mask of VMs that are powered on and placed on a powered-on host."""
+        placed = self.vm_host >= 0
+        on_host = np.zeros(self.n_vms, dtype=bool)
+        on_host[placed] = self.host_on[self.vm_host[placed]]
+        return self.vm_on & placed & on_host
+
+    def _host_sum(self, values: np.ndarray, mask: np.ndarray) -> np.ndarray:
+        return np.bincount(self.vm_host[mask], weights=values[mask],
+                           minlength=self.n_hosts)
+
+    def effective_demand(self) -> np.ndarray:
+        return np.clip(self.demand, self.reservation, self.limit)
+
+    def cpu_reserved(self) -> np.ndarray:
+        return self._host_sum(self.reservation, self.active_vms())
+
+    def mem_reserved(self) -> np.ndarray:
+        return self._host_sum(self.mem_reservation, self.active_vms())
+
+    def mem_demand_sum(self) -> np.ndarray:
+        return self._host_sum(self.mem_demand, self.active_vms())
+
+    def reserved_power_cap(self) -> np.ndarray:
+        """Per-host minimum cap honoring resident reservations (0 when off)."""
+        caps = self.cap_for_managed_capacity(self.cpu_reserved())
+        return np.where(self.host_on, caps, 0.0)
+
+    def host_demand(self) -> np.ndarray:
+        """Per-host sum of resident VMs' effective demand."""
+        return self._host_sum(self.effective_demand(), self.active_vms())
+
+    # ----------------------------------------------------- entitlements
+    def host_cpu_utilization(self, caps: np.ndarray | None = None
+                             ) -> np.ndarray:
+        cap = self.managed_capacity(caps)
+        return np.where(cap > 0.0,
+                        self.host_demand() / np.maximum(cap, 1e-300), 0.0)
+
+    def host_mem_utilization(self) -> np.ndarray:
+        ok = self.host_on & (self.host_memory_mb > 0.0)
+        return np.where(ok, self.mem_demand_sum()
+                        / np.maximum(self.host_memory_mb, 1e-300), 0.0)
+
+    def entitlement_sums(self, caps: np.ndarray | None = None) -> np.ndarray:
+        """Per-host sum of VM entitlements (one batched waterfill pass)."""
+        active = self.active_vms()
+        capacity = self.managed_capacity(caps)
+        idx = np.nonzero(active)[0]
+        if idx.size == 0:
+            return np.zeros(self.n_hosts)
+        ent = batched_waterfill(
+            capacity,
+            np.minimum(self.reservation[idx], self.limit[idx]),
+            self.effective_demand()[idx],
+            self.shares[idx],
+            self.vm_host[idx],
+            self.n_hosts)
+        return np.bincount(self.vm_host[idx], weights=ent,
+                           minlength=self.n_hosts)
+
+    def normalized_entitlements(self, caps: np.ndarray | None = None
+                                ) -> np.ndarray:
+        """N_h per host (0 where capacity is 0 or the host is off)."""
+        cap = self.managed_capacity(caps)
+        ent = self.entitlement_sums(caps)
+        return np.where(cap > 0.0, ent / np.maximum(cap, 1e-300), 0.0)
+
+    def imbalance(self, caps: np.ndarray | None = None) -> float:
+        """DRS imbalance metric over powered-on hosts."""
+        on = self.host_on
+        if int(on.sum()) <= 1:
+            return 0.0
+        return float(self.normalized_entitlements(caps)[on].std())
+
+    # -------------------------------------------------------- writeback
+    def write_caps(self, snapshot, caps: np.ndarray) -> None:
+        """Write a power-cap column back into the per-object snapshot."""
+        for i, hid in enumerate(self.host_ids):
+            snapshot.hosts[hid].power_cap = float(caps[i])

@@ -37,10 +37,18 @@ def _imbalance(snapshot: ClusterSnapshot) -> float:
     return snapshot.imbalance()
 
 
+def _normalized_entitlement_map(snapshot: ClusterSnapshot) -> dict[str, float]:
+    """N_h for every powered-on host in one batched-waterfill pass."""
+    av = snapshot.as_arrays()
+    ns = av.normalized_entitlements()
+    return {hid: float(ns[i]) for i, hid in enumerate(av.host_ids)
+            if av.host_on[i]}
+
+
 def _candidate_moves(snapshot: ClusterSnapshot):
     """(vm, dest) pairs from above-average-N hosts to below-average hosts."""
     on = snapshot.powered_on_hosts()
-    ns = {h.host_id: snapshot.normalized_entitlement(h.host_id) for h in on}
+    ns = _normalized_entitlement_map(snapshot)
     mean_n = float(np.mean(list(ns.values()))) if ns else 0.0
     donors = [h for h in on if ns[h.host_id] > mean_n]
     receivers = [h for h in on if ns[h.host_id] <= mean_n]
@@ -61,9 +69,8 @@ def balance(snapshot: ClusterSnapshot,
     """Mutates ``snapshot`` (what-if) and returns the chosen moves."""
     config = config or BalancerConfig()
     moves: list[tuple[str, str]] = []
-    on = snapshot.powered_on_hosts()
-    if not on or max(snapshot.normalized_entitlement(h.host_id)
-                     for h in on) <= config.contention_threshold:
+    ns = _normalized_entitlement_map(snapshot)
+    if not ns or max(ns.values()) <= config.contention_threshold:
         return moves  # no host strained: migration cost outweighs benefit
     cur = _imbalance(snapshot)
     while cur > config.imbalance_threshold and len(moves) < config.max_moves:

@@ -12,6 +12,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional
 
+import numpy as np
+
 from repro.drs import placement
 from repro.drs.snapshot import ClusterSnapshot
 
@@ -48,10 +50,17 @@ def run_dpm(snapshot: ClusterSnapshot, config: DPMConfig,
     on = snapshot.powered_on_hosts()
     standby = [h for h in snapshot.hosts.values() if not h.powered_on]
 
+    # Per-host utilizations in one vectorized pass (the hot/low triggers are
+    # evaluated for every host on every DPM run).
+    av = snapshot.as_arrays()
+    cpu_util = av.host_cpu_utilization()
+    mem_util = av.host_mem_utilization()
+    on_mask = av.host_on
+
     # --- power-on path: any hot host? --------------------------------------
-    if any(snapshot.host_cpu_utilization(h.host_id) > config.high_util or
-           snapshot.host_mem_utilization(h.host_id) > config.high_util
-           for h in on):
+    hot = on_mask & ((cpu_util > config.high_util) |
+                     (mem_util > config.high_util))
+    if bool(hot.any()):
         if standby:
             rec.power_on = standby[0].host_id
         return rec
@@ -59,10 +68,8 @@ def run_dpm(snapshot: ClusterSnapshot, config: DPMConfig,
     # --- power-off path: sustained cluster-wide low utilization ------------
     if len(on) <= 1:
         return rec
-    all_low = all(
-        snapshot.host_cpu_utilization(h.host_id) < config.low_util and
-        snapshot.host_mem_utilization(h.host_id) < config.low_util
-        for h in on)
+    all_low = bool(np.all((cpu_util[on_mask] < config.low_util) &
+                          (mem_util[on_mask] < config.low_util)))
     if not all_low:
         return rec
     if low_since is not None:
@@ -73,7 +80,9 @@ def run_dpm(snapshot: ClusterSnapshot, config: DPMConfig,
 
     # Evacuate the least-utilized host if its VMs fit elsewhere without
     # pushing any target above target_util.
-    victim = min(on, key=lambda h: snapshot.host_cpu_utilization(h.host_id))
+    on_idx = np.nonzero(on_mask)[0]
+    victim_i = int(on_idx[np.argmin(cpu_util[on_idx])])
+    victim = snapshot.hosts[av.host_ids[victim_i]]
     trial = snapshot.clone()
     evacuations: list[tuple[str, str]] = []
     ok = True

@@ -117,6 +117,18 @@ class ClusterSnapshot:
         snap.rules = list(self.rules)
         return snap
 
+    def as_arrays(self):
+        """Struct-of-arrays view (``repro.drs.arrays.ArrayView``).
+
+        Built fresh in one O(hosts + VMs) pass; it reflects the snapshot at
+        call time and does not track later object mutations.  All
+        scale-sensitive rollups (imbalance, bulk entitlements, DPM triggers)
+        go through this view so they cost one vectorized pass instead of a
+        Python loop per host.
+        """
+        from repro.drs.arrays import ArrayView  # local import, no cycle
+        return ArrayView.from_snapshot(self)
+
     def powered_on_hosts(self) -> list[Host]:
         return [h for h in self.hosts.values() if h.powered_on]
 
@@ -152,9 +164,9 @@ class ClusterSnapshot:
 
     def unreserved_power_budget(self) -> float:
         """Budget minus the power needed for running VMs' reservations."""
-        reserved = sum(self.reserved_power_cap(h.host_id)
-                       for h in self.powered_on_hosts())
-        return self.power_budget - reserved
+        av = self.as_arrays()
+        return self.power_budget - float(
+            av.reserved_power_cap()[av.host_on].sum())
 
     def unallocated_power_budget(self) -> float:
         """Budget not currently assigned to any powered-on host's cap."""
@@ -167,20 +179,21 @@ class ClusterSnapshot:
         return divvy(host.managed_capacity, self.vms_on(host_id))
 
     def normalized_entitlement(self, host_id: str) -> float:
-        """N_h = sum of VM entitlements / host managed capacity."""
-        host = self.hosts[host_id]
-        cap = host.managed_capacity
-        if cap <= 0.0:
-            return 0.0
-        return sum(self.host_entitlements(host_id).values()) / cap
+        """N_h = sum of VM entitlements / host managed capacity.
+
+        Routed through the array view so the scalar and bulk definitions
+        cannot diverge; bulk consumers should use ``as_arrays()`` directly.
+        """
+        av = self.as_arrays()
+        return float(av.normalized_entitlements()[av.host_index[host_id]])
 
     def imbalance(self) -> float:
-        """DRS imbalance metric: stddev of normalized entitlements."""
-        on = self.powered_on_hosts()
-        if len(on) <= 1:
-            return 0.0
-        ns = np.array([self.normalized_entitlement(h.host_id) for h in on])
-        return float(ns.std())
+        """DRS imbalance metric: stddev of normalized entitlements.
+
+        Computed through the array view: one batched waterfill over every
+        host at once rather than a divvy call per host.
+        """
+        return self.as_arrays().imbalance()
 
     def host_cpu_utilization(self, host_id: str) -> float:
         host = self.hosts[host_id]

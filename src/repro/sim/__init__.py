@@ -7,6 +7,9 @@ host power-on/off latencies, Eq. 1 power accounting, and payload metrics.
 """
 
 from repro.sim.cluster import Simulator, SimConfig, SimResult
+from repro.sim.engine import VectorSimulator
+from repro.sim.workloads import TraceBank
 from repro.sim import workloads, metrics
 
-__all__ = ["Simulator", "SimConfig", "SimResult", "workloads", "metrics"]
+__all__ = ["Simulator", "VectorSimulator", "SimConfig", "SimResult",
+           "TraceBank", "workloads", "metrics"]

@@ -5,6 +5,9 @@ ESX-like host scheduling (waterfill delivery bounded by power-capped
 capacity), vMotion with copy duration proportional to VM memory plus CPU
 overhead on both endpoints, DPM power-on/off latencies, and Eq. 1 power
 accounting.
+
+This is the per-object *reference* engine; ``repro.sim.engine`` subclasses
+it with the per-tick hot path vectorized (see ``docs/ARCHITECTURE.md``).
 """
 
 from __future__ import annotations
@@ -68,6 +71,9 @@ class Simulator:
         self.last_config_change = -1e18
         self.timeline: list = []
         self.events: list = []
+        # Bumped whenever executed actions mutate placement, power state, or
+        # caps; array-backed subclasses use it to refresh their columns.
+        self._topology_version = 0
 
     # ------------------------------------------------------------------
     def _update_demands(self, t: float) -> None:
@@ -103,16 +109,19 @@ class Simulator:
             a = p.action
             if a.kind == "migrate":
                 self.live.vms[a.target].host_id = a.dest
+                self._topology_version += 1
                 self.acc.vmotions += 1
                 if self.window_acc is not None and self._in_window(t):
                     self.window_acc.vmotions += 1
             elif a.kind == "power_on":
                 self.live.hosts[a.target].powered_on = True
+                self._topology_version += 1
                 self.acc.power_ons += 1
                 self.last_config_change = t
                 self.events.append((t, f"power_on {a.target}"))
             elif a.kind == "power_off":
                 self.live.hosts[a.target].powered_on = False
+                self._topology_version += 1
                 self.acc.power_offs += 1
                 self.last_config_change = t
                 self.events.append((t, f"power_off {a.target}"))
@@ -128,6 +137,7 @@ class Simulator:
             if a.kind == "set_power_cap":
                 # <1 ms on the baseboard: effectively instantaneous.
                 self.live.hosts[a.target].power_cap = a.value
+                self._topology_version += 1
                 self.acc.cap_changes += 1
                 p.state = "done"
                 self.done_ids.add(a.action_id)
@@ -224,6 +234,22 @@ class Simulator:
             f"budget violated during execution: {total:.1f} W > "
             f"{self.live.power_budget:.1f} W")
 
+    def _invoke_manager(self, t: float) -> None:
+        """One DRS + CloudPowerCap invocation; queues the emitted actions.
+
+        Split out so array-backed engines can sync their demand columns into
+        the object plane (which the manager pipeline operates on) first.
+        """
+        result = self.manager.run_invocation(
+            self.live.clone(), now=t, low_since=self.low_since,
+            last_config_change=self.last_config_change)
+        for a in result.actions:
+            self.pending.append(_Pending(a))
+        if result.actions:
+            self.events.append(
+                (t, f"drs: {len(result.actions)} actions "
+                    f"({'; '.join(result.notes)})"))
+
     # ------------------------------------------------------------------
     def run(self) -> SimResult:
         cfg = self.config
@@ -234,15 +260,7 @@ class Simulator:
             self._complete_actions(t)
             self._start_actions(t)
             if t >= next_drs and not self._actions_outstanding():
-                result = self.manager.run_invocation(
-                    self.live.clone(), now=t, low_since=self.low_since,
-                    last_config_change=self.last_config_change)
-                for a in result.actions:
-                    self.pending.append(_Pending(a))
-                if result.actions:
-                    self.events.append(
-                        (t, f"drs: {len(result.actions)} actions "
-                            f"({'; '.join(result.notes)})"))
+                self._invoke_manager(t)
                 next_drs = t + cfg.drs_period_s
             elif t >= next_drs:
                 next_drs = t + cfg.tick_s   # defer while actions in flight

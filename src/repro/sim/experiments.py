@@ -16,7 +16,11 @@ from repro.drs import dpm as dpm_mod
 from repro.drs.rules import VMHostRule
 from repro.drs.snapshot import ClusterSnapshot, Host, VirtualMachine
 from repro.sim.cluster import SimConfig, Simulator, SimResult
+from repro.sim.engine import VectorSimulator
 from repro.sim import workloads
+
+#: Pluggable tick engines: per-object reference vs vectorized hot path.
+ENGINES = {"legacy": Simulator, "vector": VectorSimulator}
 
 
 @dataclasses.dataclass
@@ -156,15 +160,16 @@ POLICIES = ("cpc", "static", "statichigh")
 
 
 def run_policy(scenario: str, policy: str,
-               dpm_enabled: Optional[bool] = None) -> SimResult:
+               dpm_enabled: Optional[bool] = None,
+               engine: str = "legacy") -> SimResult:
     build = SCENARIOS[scenario].build
     snap, traces, cfg, window = build(policy)
     if dpm_enabled is None:
         dpm_enabled = scenario == "standby"
     manager = _manager(policy, dpm_enabled)
-    sim = Simulator(snap, manager, traces, cfg, window=window)
+    sim = ENGINES[engine](snap, manager, traces, cfg, window=window)
     return sim.run()
 
 
-def run_all(scenario: str) -> dict[str, SimResult]:
-    return {p: run_policy(scenario, p) for p in POLICIES}
+def run_all(scenario: str, engine: str = "legacy") -> dict[str, SimResult]:
+    return {p: run_policy(scenario, p, engine=engine) for p in POLICIES}

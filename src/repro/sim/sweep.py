@@ -1,0 +1,246 @@
+"""Scenario-sweep harness: programmatic scenario families at cluster scale.
+
+The paper evaluates CloudPowerCap on 3 hosts / 30 VMs; this module
+generates whole families of scenarios -- cluster size x rack budget x
+spike pattern x host-spec mix -- and runs each policy on the vectorized
+engine, reporting throughput (ticks/sec) alongside the paper's payload /
+power metrics.  It feeds the ``sweep_scale`` benchmark entry
+(``python -m benchmarks.run``) whose headline cell is a 1,000-host /
+10,000-VM cluster.
+
+Design notes:
+  * DPM and migration search are disabled in sweeps (``max_moves=0``):
+    at thousand-host scale the interesting regime is cap-only management
+    (cf. prediction-based oversubscription at Azure); migration search at
+    this scale is its own future work item.
+  * Scenarios use zero reservations and default shares so admission
+    control stays trivial and the sweep isolates powercap behavior.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core.manager import CloudPowerCapManager, ManagerConfig
+from repro.core.power_model import PAPER_HOST, HostPowerSpec
+from repro.drs import balancer as balancer_mod
+from repro.drs.snapshot import ClusterSnapshot, Host, VirtualMachine
+from repro.sim.cluster import SimConfig
+from repro.sim.experiments import ENGINES, POLICIES
+from repro.sim import workloads
+
+# A smaller, less efficient host mixed in for heterogeneous sweeps:
+# 8 cores x 2.4 GHz, 64 GB, idle 120 W / peak 240 W.
+SMALL_HOST = HostPowerSpec(
+    capacity_peak=19_200.0,
+    power_idle=120.0,
+    power_peak=240.0,
+    power_nameplate=300.0,
+    memory_mb=64 * 1024,
+)
+
+SPIKES = ("flat", "burst", "step", "prime")
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepSpec:
+    """One cell of the scenario grid."""
+
+    name: str
+    n_hosts: int = 10
+    vms_per_host: int = 10
+    rack_budget_w: Optional[float] = None   # default: 250 W per host
+    spike: str = "burst"                    # one of SPIKES
+    heterogeneous: bool = False             # mix PAPER_HOST with SMALL_HOST
+    duration_s: float = 1200.0
+    tick_s: float = 10.0
+    drs_period_s: float = 300.0
+    seed: int = 0
+
+    @property
+    def budget(self) -> float:
+        return (self.rack_budget_w if self.rack_budget_w is not None
+                else 250.0 * self.n_hosts)
+
+    @property
+    def n_vms(self) -> int:
+        return self.n_hosts * self.vms_per_host
+
+
+def _specs_for(spec: SweepSpec) -> list[HostPowerSpec]:
+    if not spec.heterogeneous:
+        return [PAPER_HOST] * spec.n_hosts
+    return [PAPER_HOST if i % 2 == 0 else SMALL_HOST
+            for i in range(spec.n_hosts)]
+
+
+def build_sweep(spec: SweepSpec, policy: str
+                ) -> tuple[ClusterSnapshot, dict, SimConfig]:
+    """Materialize one (spec, policy) cell.
+
+    Deployment mirrors paper Table II: ``cpc``/``static`` spread the rack
+    budget across every host; ``statichigh`` runs fewer hosts at their
+    physical peak (the rest stay in standby with a zero cap).
+    """
+    if spec.spike not in SPIKES:
+        raise ValueError(f"unknown spike pattern {spec.spike!r}")
+    host_specs = _specs_for(spec)
+    budget = spec.budget
+    total_peak = sum(s.power_peak for s in host_specs)
+
+    hosts: list[Host] = []
+    if policy == "statichigh":
+        # Peak caps until the budget is exhausted.
+        spent = 0.0
+        for i, s in enumerate(host_specs):
+            on = spent + s.power_peak <= budget + 1e-9
+            hosts.append(Host(host_id=f"host{i}", spec=s,
+                              power_cap=s.power_peak if on else 0.0,
+                              powered_on=on))
+            if on:
+                spent += s.power_peak
+    else:
+        # Budget split pro-rata by peak power (uniform for homogeneous).
+        for i, s in enumerate(host_specs):
+            cap = budget * s.power_peak / total_peak
+            hosts.append(Host(host_id=f"host{i}", spec=s,
+                              power_cap=min(cap, s.power_peak)))
+    on_hosts = [h.host_id for h in hosts if h.powered_on]
+    if not on_hosts:
+        raise ValueError("budget too small: no host can power on")
+
+    rng = np.random.RandomState(spec.seed)
+    base = rng.uniform(600.0, 1400.0, size=spec.n_vms)
+    # Bursts are host-correlated (like the paper's headroom scenario): every
+    # VM on a "hot" host spikes together, so static caps actually strand
+    # capacity and the policies separate.
+    hot_host = rng.rand(spec.n_hosts) < 0.2
+    phase_frac = rng.uniform(0.0, 0.5, size=spec.n_vms)
+
+    vms, traces = [], {}
+    for v in range(spec.n_vms):
+        host_id = on_hosts[v % len(on_hosts)]
+        vm = VirtualMachine(vm_id=f"vm{v}", vcpus=1, memory_mb=8 * 1024,
+                            host_id=host_id)
+        vms.append(vm)
+        mem = 2 * 1024.0
+        if spec.spike == "flat":
+            traces[vm.vm_id] = workloads.constant(base[v], mem)
+        elif spec.spike == "burst":
+            # VMs on ~20% of hosts spike >2x in the middle third of the run.
+            if hot_host[v % len(on_hosts)]:
+                traces[vm.vm_id] = workloads.burst(
+                    base_cpu=base[v], burst_cpu=2.0 * base[v] + 1200.0,
+                    mem_mb=mem, t_start=spec.duration_s / 3.0,
+                    t_end=2.0 * spec.duration_s / 3.0)
+            else:
+                traces[vm.vm_id] = workloads.constant(base[v], mem)
+        elif spec.spike == "step":
+            # Cluster-wide step down then back up (standby-style).
+            traces[vm.vm_id] = workloads.step_trace([
+                (0.0, base[v], mem),
+                (spec.duration_s / 3.0, base[v] / 3.0, mem),
+                (2.0 * spec.duration_s / 3.0, base[v], mem),
+            ])
+        else:  # prime
+            traces[vm.vm_id] = workloads.prime_time(
+                off_cpu=0.3 * base[v], prime_cpu=2.2 * base[v],
+                off_mem=mem, prime_mem=mem,
+                period_s=spec.duration_s,
+                prime_start_frac=float(phase_frac[v]), prime_frac=0.4)
+
+    snap = ClusterSnapshot(hosts, vms, power_budget=budget)
+    cfg = SimConfig(duration_s=spec.duration_s, tick_s=spec.tick_s,
+                    drs_period_s=spec.drs_period_s,
+                    drs_first_at_s=spec.drs_period_s,
+                    record_timeline=False)
+    return snap, traces, cfg
+
+
+def _sweep_manager(policy: str) -> CloudPowerCapManager:
+    cfg = ManagerConfig(powercap_enabled=(policy == "cpc"),
+                        dpm_enabled=False)
+    # Cap-only management at scale: no migration search (see module note).
+    cfg.balancer = balancer_mod.BalancerConfig(max_moves=0)
+    return CloudPowerCapManager(cfg)
+
+
+@dataclasses.dataclass
+class SweepCellResult:
+    spec: SweepSpec
+    policy: str
+    wall_s: float
+    ticks: int
+    ticks_per_s: float
+    cpu_satisfaction: float
+    cpu_payload_mhz_s: float
+    energy_j: float
+    cap_changes: int
+    vmotions: int
+
+
+def run_cell(spec: SweepSpec, policy: str,
+             engine: str = "vector") -> SweepCellResult:
+    snap, traces, cfg = build_sweep(spec, policy)
+    manager = _sweep_manager(policy)
+    sim = ENGINES[engine](snap, manager, traces, cfg)
+    t0 = time.perf_counter()
+    result = sim.run()
+    wall = time.perf_counter() - t0
+    ticks = int(round(cfg.duration_s / cfg.tick_s))
+    acc = result.acc
+    return SweepCellResult(
+        spec=spec, policy=policy, wall_s=wall, ticks=ticks,
+        ticks_per_s=ticks / max(wall, 1e-9),
+        cpu_satisfaction=acc.cpu_satisfaction(),
+        cpu_payload_mhz_s=acc.cpu_payload_mhz_s,
+        energy_j=acc.energy_j,
+        cap_changes=acc.cap_changes,
+        vmotions=acc.vmotions)
+
+
+def run_sweep(specs: Sequence[SweepSpec],
+              policies: Sequence[str] = POLICIES,
+              engine: str = "vector"
+              ) -> dict[str, dict[str, SweepCellResult]]:
+    """Run the grid; returns results[spec.name][policy]."""
+    out: dict[str, dict[str, SweepCellResult]] = {}
+    for spec in specs:
+        out[spec.name] = {p: run_cell(spec, p, engine=engine)
+                          for p in policies}
+    return out
+
+
+def scenario_families(sizes: Sequence[int] = (10, 100, 1000),
+                      budgets_per_host_w: Sequence[float] = (250.0,),
+                      spikes: Sequence[str] = ("burst", "prime"),
+                      heterogeneous: Sequence[bool] = (False, True),
+                      duration_s: float = 1200.0,
+                      tick_s: float = 10.0) -> list[SweepSpec]:
+    """The full scenario grid: size x budget x spike x host mix."""
+    specs = []
+    for n in sizes:
+        for b in budgets_per_host_w:
+            for spike in spikes:
+                for het in heterogeneous:
+                    name = (f"h{n}_b{int(b)}w_{spike}"
+                            f"{'_het' if het else ''}")
+                    specs.append(SweepSpec(
+                        name=name, n_hosts=n, rack_budget_w=b * n,
+                        spike=spike, heterogeneous=het,
+                        duration_s=duration_s, tick_s=tick_s))
+    return specs
+
+
+def scale_ladder(sizes: Sequence[int] = (10, 100, 1000),
+                 spike: str = "burst",
+                 duration_s: float = 600.0,
+                 tick_s: float = 10.0) -> list[SweepSpec]:
+    """The ``sweep_scale`` benchmark ladder: one spike family per size."""
+    return [SweepSpec(name=f"h{n}_{spike}", n_hosts=n, spike=spike,
+                      duration_s=duration_s, tick_s=tick_s)
+            for n in sizes]

@@ -1,14 +1,45 @@
-"""Demand-trace generators for the paper's three experiments."""
+"""Demand-trace generators for the paper's three experiments.
+
+Every generator returns a plain ``t -> (cpu, mem)`` callable for the
+per-object simulator, and additionally attaches a declarative ``spec``
+(:class:`TraceSpec`) describing the trace as a -- possibly periodic -- step
+function.  :class:`TraceBank` compiles a whole cluster's specs into padded
+arrays so the vectorized engine evaluates every VM's demand at time ``t``
+with one ``searchsorted``-style pass instead of a Python call per VM.
+"""
 
 from __future__ import annotations
 
-from typing import Callable
+import dataclasses
+from typing import Callable, Optional, Sequence
+
+import numpy as np
 
 DemandTrace = Callable[[float], tuple[float, float]]  # t -> (cpu MHz, mem MB)
 
 
+@dataclasses.dataclass(frozen=True)
+class TraceSpec:
+    """A (periodic) step function: value of the last segment with t0 <= t.
+
+    ``period`` is ``None`` for aperiodic traces; otherwise the segments are
+    defined on ``t mod period``.  Segment boundaries use the same
+    ``t >= t0`` comparison as the callable form, so both representations
+    agree exactly on tick times.
+    """
+
+    segments: tuple                     # ((t0, cpu_mhz, mem_mb), ...) sorted
+    period: Optional[float] = None
+
+
+def _with_spec(fn: DemandTrace, spec: TraceSpec) -> DemandTrace:
+    fn.spec = spec
+    return fn
+
+
 def constant(cpu_mhz: float, mem_mb: float) -> DemandTrace:
-    return lambda t: (cpu_mhz, mem_mb)
+    return _with_spec(lambda t: (cpu_mhz, mem_mb),
+                      TraceSpec(segments=((0.0, cpu_mhz, mem_mb),)))
 
 
 def step_trace(segments: list[tuple[float, float, float]]) -> DemandTrace:
@@ -21,7 +52,8 @@ def step_trace(segments: list[tuple[float, float, float]]) -> DemandTrace:
             else:
                 break
         return cpu, mem
-    return trace
+    return _with_spec(trace, TraceSpec(segments=tuple(
+        (float(t0), float(c), float(m)) for t0, c, m in segments)))
 
 
 def burst(base_cpu: float, burst_cpu: float, mem_mb: float,
@@ -42,4 +74,100 @@ def prime_time(off_cpu: float, prime_cpu: float, off_mem: float,
         in_prime = (prime_start_frac <= phase <
                     prime_start_frac + prime_frac)
         return ((prime_cpu, prime_mem) if in_prime else (off_cpu, off_mem))
-    return trace
+
+    # Periodic step form on t mod period.
+    t_on = prime_start_frac * period_s
+    t_off = (prime_start_frac + prime_frac) * period_s
+    prime_vals = (prime_cpu, prime_mem)
+    off_vals = (off_cpu, off_mem)
+    if prime_start_frac + prime_frac >= 1.0:
+        # phase lives in [0, 1), so a window crossing 1.0 simply runs to the
+        # period's end (the callable above never wraps it around).
+        if prime_start_frac <= 0.0:
+            segs = [(0.0, *prime_vals)]
+        else:
+            segs = [(0.0, *off_vals), (t_on, *prime_vals)]
+    elif prime_start_frac <= 0.0:
+        segs = [(0.0, *prime_vals), (t_off, *off_vals)]
+    else:
+        segs = [(0.0, *off_vals), (t_on, *prime_vals), (t_off, *off_vals)]
+    return _with_spec(trace, TraceSpec(segments=tuple(segs), period=period_s))
+
+
+class TraceBank:
+    """Array-compiled demand traces for a whole cluster.
+
+    Rows follow the ``vm_order`` given at construction.  Traces without a
+    ``spec`` attribute (hand-written callables) fall back to per-VM Python
+    evaluation, so the bank is always exhaustive over traced VMs.
+    """
+
+    def __init__(self, vm_order: Sequence[str]):
+        self.vm_order = list(vm_order)
+        self.rows = np.zeros(0, dtype=np.int64)       # traced, array-backed
+        self.period = np.zeros(0)
+        self.bps = np.zeros((0, 1))
+        self.cpu_vals = np.zeros((0, 1))
+        self.mem_vals = np.zeros((0, 1))
+        self.fallback: list[tuple[int, DemandTrace]] = []
+
+    @classmethod
+    def from_traces(cls, traces: dict[str, DemandTrace],
+                    vm_order: Sequence[str]) -> "TraceBank":
+        bank = cls(vm_order)
+        row_of = {vid: i for i, vid in enumerate(vm_order)}
+        rows, specs = [], []
+        for vm_id, trace in traces.items():
+            if vm_id not in row_of:
+                continue
+            spec = getattr(trace, "spec", None)
+            if spec is None:
+                bank.fallback.append((row_of[vm_id], trace))
+            else:
+                rows.append(row_of[vm_id])
+                specs.append(spec)
+        if rows:
+            max_segs = max(len(s.segments) for s in specs)
+            n = len(rows)
+            bps = np.full((n, max_segs), np.inf)
+            cpu = np.zeros((n, max_segs))
+            mem = np.zeros((n, max_segs))
+            period = np.full(n, np.inf)
+            for i, s in enumerate(specs):
+                k = len(s.segments)
+                seg = np.asarray(s.segments, dtype=np.float64)
+                bps[i, :k] = seg[:, 0]
+                cpu[i, :k] = seg[:, 1]
+                mem[i, :k] = seg[:, 2]
+                # Padding repeats the last value so idx overshoot is benign.
+                cpu[i, k:] = seg[-1, 1]
+                mem[i, k:] = seg[-1, 2]
+                if s.period is not None:
+                    period[i] = s.period
+            bank.rows = np.asarray(rows, dtype=np.int64)
+            bank.period = period
+            bank.bps = bps
+            bank.cpu_vals = cpu
+            bank.mem_vals = mem
+        return bank
+
+    def eval(self, t: float) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(rows, cpu, mem) for every traced VM at time ``t``."""
+        if self.rows.size:
+            phase = np.mod(t, self.period)     # t mod inf == t
+            idx = np.sum(self.bps <= phase[:, None], axis=1) - 1
+            idx = np.clip(idx, 0, None)
+            take = np.arange(self.rows.size)
+            cpu = self.cpu_vals[take, idx]
+            mem = self.mem_vals[take, idx]
+        else:
+            cpu = np.zeros(0)
+            mem = np.zeros(0)
+        rows = self.rows
+        if self.fallback:
+            fb_rows = np.array([r for r, _ in self.fallback], dtype=np.int64)
+            fb = [fn(t) for _, fn in self.fallback]
+            rows = np.concatenate([rows, fb_rows])
+            cpu = np.concatenate([cpu, np.array([c for c, _ in fb])])
+            mem = np.concatenate([mem, np.array([m for _, m in fb])])
+        return rows, cpu, mem

@@ -1,7 +1,11 @@
 """CloudPowerCap Algorithms 1-3: safety + fairness properties."""
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (see requirements.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.balance import BalanceConfig, balance_power_cap
 from repro.core.power_model import PAPER_HOST

@@ -1,7 +1,10 @@
 """Waterfill / divvy properties (hypothesis)."""
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (see requirements.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.drs.entitlement import waterfill, divvy
 from repro.drs.snapshot import VirtualMachine

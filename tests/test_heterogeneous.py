@@ -4,7 +4,10 @@ with per-spec Watts<->capacity maps, so mixed fleets work.  Property-test
 the safety invariants under heterogeneity."""
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (see requirements.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.balance import BalanceConfig, balance_power_cap
 from repro.core.power_model import HostPowerSpec

@@ -1,0 +1,111 @@
+"""Scenario-sweep harness: grid generation, deployment math, smoke runs."""
+
+import numpy as np
+import pytest
+
+from repro.core.power_model import PAPER_HOST
+from repro.sim.sweep import (SMALL_HOST, SweepSpec, build_sweep, run_cell,
+                             run_sweep, scale_ladder, scenario_families)
+
+
+def test_scenario_families_grid():
+    specs = scenario_families(sizes=(4, 8), budgets_per_host_w=(250.0,),
+                             spikes=("burst", "prime"),
+                             heterogeneous=(False, True))
+    assert len(specs) == 2 * 1 * 2 * 2
+    names = {s.name for s in specs}
+    assert len(names) == len(specs)          # unique cell names
+    assert any(s.heterogeneous for s in specs)
+
+
+def test_build_sweep_static_deployment():
+    spec = SweepSpec(name="t", n_hosts=6, vms_per_host=4, spike="flat")
+    snap, traces, cfg = build_sweep(spec, "static")
+    assert len(snap.hosts) == 6
+    assert len(snap.vms) == 24
+    assert len(traces) == 24
+    assert snap.budget_respected()
+    # Budget spread evenly across homogeneous hosts.
+    caps = {h.power_cap for h in snap.hosts.values()}
+    assert len(caps) == 1
+    assert cfg.record_timeline is False
+
+
+def test_build_sweep_statichigh_standby_hosts():
+    spec = SweepSpec(name="t", n_hosts=8, spike="flat")  # 2000 W budget
+    snap, _, _ = build_sweep(spec, "statichigh")
+    on = snap.powered_on_hosts()
+    # 2000 W / 320 W peak -> 6 hosts at peak, 2 in standby.
+    assert len(on) == 6
+    assert all(h.power_cap == PAPER_HOST.power_peak for h in on)
+    assert snap.budget_respected()
+    # All VMs land on powered-on hosts.
+    assert all(snap.vms[v].host_id in {h.host_id for h in on}
+               for v in snap.vms)
+
+
+def test_build_sweep_heterogeneous_mixes_specs():
+    spec = SweepSpec(name="t", n_hosts=4, heterogeneous=True, spike="flat")
+    snap, _, _ = build_sweep(spec, "cpc")
+    specs = {h.spec for h in snap.hosts.values()}
+    assert specs == {PAPER_HOST, SMALL_HOST}
+    assert snap.budget_respected()
+
+
+def test_build_sweep_deterministic_by_seed():
+    spec = SweepSpec(name="t", n_hosts=4, spike="burst", seed=7)
+    a, ta, _ = build_sweep(spec, "cpc")
+    b, tb, _ = build_sweep(spec, "cpc")
+    assert [v.vm_id for v in a.vms.values()] == \
+        [v.vm_id for v in b.vms.values()]
+    for vid in ta:
+        assert ta[vid](100.0) == tb[vid](100.0)
+        assert ta[vid](500.0) == tb[vid](500.0)
+
+
+def test_unknown_spike_rejected():
+    with pytest.raises(ValueError):
+        build_sweep(SweepSpec(name="t", spike="nope"), "cpc")
+
+
+@pytest.mark.parametrize("spike", ("flat", "burst", "step", "prime"))
+def test_run_cell_smoke(spike):
+    spec = SweepSpec(name=f"s_{spike}", n_hosts=6, vms_per_host=4,
+                     spike=spike, duration_s=600.0, tick_s=30.0,
+                     drs_period_s=300.0)
+    r = run_cell(spec, "cpc")
+    assert r.ticks == 20
+    assert r.ticks_per_s > 0
+    assert 0.0 < r.cpu_satisfaction <= 1.0 + 1e-9
+    assert r.energy_j > 0.0
+    assert r.vmotions == 0               # migration search disabled in sweeps
+
+
+def test_sweep_policies_separate_under_burst():
+    """Host-correlated bursts strand static caps; CPC recovers the payload."""
+    spec = SweepSpec(name="sep", n_hosts=12, vms_per_host=8, spike="burst",
+                     duration_s=1200.0, tick_s=20.0, seed=3)
+    res = run_sweep([spec], policies=("cpc", "static"))
+    cpc, static = res["sep"]["cpc"], res["sep"]["static"]
+    assert cpc.cap_changes > 0
+    assert static.cap_changes == 0
+    assert cpc.cpu_satisfaction >= static.cpu_satisfaction - 1e-9
+    assert cpc.cpu_payload_mhz_s >= static.cpu_payload_mhz_s - 1e-6
+
+
+def test_scale_ladder_shapes():
+    ladder = scale_ladder(sizes=(10, 100), spike="burst")
+    assert [s.n_hosts for s in ladder] == [10, 100]
+    assert all(s.n_vms == 10 * s.n_hosts for s in ladder)
+
+
+@pytest.mark.slow
+def test_sweep_scale_thousand_hosts():
+    """Acceptance: a 1,000-host / 10,000-VM cell runs end-to-end."""
+    spec = SweepSpec(name="xl", n_hosts=1000, vms_per_host=10,
+                     spike="burst", duration_s=600.0)
+    r = run_cell(spec, "cpc")
+    assert r.spec.n_vms == 10_000
+    assert r.ticks == 60
+    assert r.cpu_satisfaction > 0.5
+    assert np.isfinite(r.energy_j)
