@@ -11,9 +11,16 @@ live in EXPERIMENTS.md.
   powercap_latency     -- cap-change vs vMotion cost asymmetry (Sec. II-D)
   sweep_scale          -- vectorized-engine scenario sweep at 10/100/1000
                           hosts (ticks/sec + CPC-vs-Static satisfaction delta)
+  sweep_grid           -- the jit-compiled batched engine running a 32-cell
+                          scenario grid (100 hosts x budget x spike x mix) as
+                          ONE program, vs the sequential run_sweep path
   roofline_summary     -- per-(arch x shape) roofline terms from the dry-run
 
-Run: PYTHONPATH=src python -m benchmarks.run [--skip-slow]
+Run: PYTHONPATH=src python -m benchmarks.run [--skip-slow] [--json]
+
+``--json`` additionally writes machine-readable sweep-throughput numbers to
+``BENCH_sweep.json`` (ticks/s per grid size, cells/s batched vs sequential)
+so the perf trajectory is tracked across PRs.
 """
 
 from __future__ import annotations
@@ -23,6 +30,9 @@ import glob
 import json
 import os
 import time
+
+#: Structured results populated by the sweep benches, dumped by ``--json``.
+ARTIFACT: dict = {}
 
 
 def _timed(fn):
@@ -97,14 +107,93 @@ def sweep_scale():
                          duration_s=600.0)
     res = run_sweep(specs, policies=("cpc", "static"))
     parts = []
+    ARTIFACT["sweep_scale"] = {}
     for spec in specs:
         cpc = res[spec.name]["cpc"]
         static = res[spec.name]["static"]
+        ARTIFACT["sweep_scale"][str(spec.n_hosts)] = {
+            "ticks_per_s": cpc.ticks_per_s,
+            "dsat_cpc_vs_static":
+                cpc.cpu_satisfaction - static.cpu_satisfaction,
+            "cap_changes": cpc.cap_changes,
+        }
         parts.append(
             f"{spec.n_hosts}h:{cpc.ticks_per_s:.0f}tps"
             f"/dsat{cpc.cpu_satisfaction - static.cpu_satisfaction:+.3f}"
             f"/caps{cpc.cap_changes}")
     return ";".join(parts)
+
+
+def sweep_grid():
+    """The batched engine's headline: a >=32-cell grid in one jitted program.
+
+    Grid: 100 hosts x {230, 250} W/host x 4 spike families x {homogeneous,
+    mixed} x {cpc, static} = 32 cells (32,000 VMs simulated end-to-end).
+    The sequential baseline runs a 4-cell subset of the same grid through
+    the per-cell ``run_sweep`` path.  Both sides report *engine* cells/s --
+    simulation wall time on prepared clusters, matching ``run_cell``'s
+    ``wall_s`` semantics which exclude scenario construction -- and the
+    artifact also records end-to-end numbers (build + pack + run) plus the
+    one-off jit compile."""
+    from repro.sim.batch import BatchCell, BatchedSimulator
+    from repro.sim.sweep import build_sweep, run_cell, scenario_families
+    specs = scenario_families(sizes=(100,), budgets_per_host_w=(230.0, 250.0),
+                              spikes=("flat", "burst", "step", "prime"),
+                              heterogeneous=(False, True), duration_s=600.0)
+    policies = ("cpc", "static")
+    n_cells = len(specs) * len(policies)
+
+    t0 = time.perf_counter()
+    cells = []
+    for spec in specs:
+        for p in policies:
+            snap, traces, cfg = build_sweep(spec, p)
+            cells.append(BatchCell(
+                name=f"{spec.name}/{p}", snapshot=snap, traces=traces,
+                config=cfg, powercap_enabled=(p == "cpc")))
+    sim = BatchedSimulator(cells)
+    prep_wall = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    sim.run()                                       # jit compile + first run
+    first_wall = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    res = sim.run()
+    batch_wall = time.perf_counter() - t0
+    batch_cps = n_cells / batch_wall
+    # First call = compile + one execution; steady-state wall isolates the
+    # execution, so the difference estimates the one-off compile cost.
+    compile_wall = max(first_wall - batch_wall, 0.0)
+
+    seq_wall, seq_cells = 0.0, 0
+    t0 = time.perf_counter()
+    for spec in specs[:2]:
+        for p in policies:
+            seq_wall += run_cell(spec, p, engine="vector").wall_s
+            seq_cells += 1
+    seq_e2e = time.perf_counter() - t0
+    seq_cps = seq_cells / seq_wall
+
+    i_of = {c.name: i for i, c in enumerate(cells)}
+    sat = []
+    for s in specs:
+        cpc = res.accumulators(i_of[f"{s.name}/cpc"])
+        static = res.accumulators(i_of[f"{s.name}/static"])
+        sat.append(cpc.cpu_satisfaction() - static.cpu_satisfaction())
+    ARTIFACT["sweep_grid"] = {
+        "n_cells": n_cells,
+        "n_hosts": 100,
+        "cells_per_s_batched": batch_cps,
+        "cells_per_s_sequential": seq_cps,
+        "speedup": batch_cps / seq_cps,
+        "cells_per_s_batched_e2e": n_cells / (prep_wall + batch_wall),
+        "cells_per_s_sequential_e2e": seq_cells / seq_e2e,
+        "compile_s": compile_wall,
+        "mean_dsat_cpc_vs_static": sum(sat) / len(sat),
+    }
+    return (f"{n_cells}cells@100h:{batch_cps:.1f}cells/s"
+            f";seq:{seq_cps:.1f}cells/s"
+            f";speedup:{batch_cps / seq_cps:.1f}x"
+            f";compile:{compile_wall:.1f}s")
 
 
 def roofline_summary():
@@ -141,6 +230,7 @@ BENCHES = [
     ("table5_flexible", table5_flexible, True),
     ("powercap_latency", powercap_latency, False),
     ("sweep_scale", sweep_scale, True),
+    ("sweep_grid", sweep_grid, True),
     ("kernel_microbenches", kernel_microbenches, False),
     ("roofline_summary", roofline_summary, False),
 ]
@@ -149,6 +239,8 @@ BENCHES = [
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--skip-slow", action="store_true")
+    ap.add_argument("--json", action="store_true",
+                    help="write sweep throughput to BENCH_sweep.json")
     args, _ = ap.parse_known_args()
     print("name,us_per_call,derived")
     for name, fn, slow in BENCHES:
@@ -157,6 +249,19 @@ def main() -> None:
             continue
         us, derived = _timed(fn)
         print(f"{name},{us:.0f},{derived}", flush=True)
+    if args.json:
+        if not ARTIFACT:
+            # The sweep benches populate ARTIFACT and are both slow: with
+            # --skip-slow there is nothing to record, and clobbering the
+            # committed perf trajectory with '{}' would erase it.
+            print("BENCH_sweep.json not written: sweep benches were skipped",
+                  flush=True)
+            return
+        path = os.path.join(os.path.dirname(__file__), "..",
+                            "BENCH_sweep.json")
+        with open(os.path.normpath(path), "w") as f:
+            json.dump(ARTIFACT, f, indent=2, sort_keys=True)
+        print(f"wrote {os.path.normpath(path)}", flush=True)
 
 
 if __name__ == "__main__":

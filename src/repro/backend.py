@@ -1,0 +1,105 @@
+"""Array backends: one kernel source, two executors (NumPy and JAX).
+
+The allocation math in ``repro.core.kernels`` and ``repro.drs.entitlement``
+is written once against this tiny namespace-plus-segment-ops protocol and
+runs on either backend:
+
+  * ``NUMPY`` -- eager NumPy.  Python-level loop drivers may early-exit on
+    concrete booleans, which keeps the per-object manager path cheap.
+  * ``JAX``   -- ``jax.numpy`` plus ``lax`` structured loops, so the same
+    kernels are `jit`/`vmap`-able and compile into the batched sweep engine
+    (``repro.sim.batch``) as a single program.
+
+Only the operations the kernels actually need are abstracted: the shared
+elementwise vocabulary (``where``/``clip``/``minimum``/...) is identical
+between ``numpy`` and ``jax.numpy`` and is reached through ``backend.xp``;
+segment reductions and fixed-trip loops differ and get explicit methods.
+
+JAX is imported lazily: the NumPy path (tier-1 simulator tests, the
+per-object manager) never touches jax device state.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+class NumpyBackend:
+    """Eager NumPy executor."""
+
+    name = "numpy"
+    xp = np
+
+    @staticmethod
+    def seg_sum(values, seg_ids, n_segs):
+        return np.bincount(seg_ids, weights=values, minlength=n_segs)
+
+    @staticmethod
+    def seg_max(values, seg_ids, n_segs):
+        """Per-segment max, 0 for empty segments (values assumed >= 0)."""
+        out = np.zeros(n_segs, dtype=np.float64)
+        np.maximum.at(out, seg_ids, values)
+        return out
+
+    @staticmethod
+    def fori(n, body, init):
+        """``state = body(i, state)`` for i in [0, n)."""
+        state = init
+        for i in range(n):
+            state = body(i, state)
+        return state
+
+    @staticmethod
+    def while_loop(cond, body, init):
+        state = init
+        while bool(cond(state)):
+            state = body(state)
+        return state
+
+    @staticmethod
+    def asarray(values, dtype=np.float64):
+        return np.asarray(values, dtype=dtype)
+
+
+class JaxBackend:
+    """jit/vmap-able executor over jax.numpy + lax."""
+
+    name = "jax"
+
+    def __init__(self):
+        import jax
+        import jax.numpy as jnp
+        self._jax = jax
+        self.xp = jnp
+
+    def seg_sum(self, values, seg_ids, n_segs):
+        return self._jax.ops.segment_sum(values, seg_ids,
+                                         num_segments=n_segs)
+
+    def seg_max(self, values, seg_ids, n_segs):
+        # segment_max yields -inf for empty segments; clamp to the NumPy
+        # backend's zero-initialized semantics (values are >= 0).
+        out = self._jax.ops.segment_max(values, seg_ids, num_segments=n_segs)
+        return self.xp.maximum(out, 0.0)
+
+    def fori(self, n, body, init):
+        return self._jax.lax.fori_loop(0, n, body, init)
+
+    def while_loop(self, cond, body, init):
+        return self._jax.lax.while_loop(cond, body, init)
+
+    def asarray(self, values, dtype=None):
+        return self.xp.asarray(values, dtype=dtype)
+
+
+NUMPY = NumpyBackend()
+
+_JAX = None
+
+
+def jax_backend() -> JaxBackend:
+    """The process-wide JAX backend (constructed on first use)."""
+    global _JAX
+    if _JAX is None:
+        _JAX = JaxBackend()
+    return _JAX

@@ -11,6 +11,12 @@ Safety invariants maintained per transfer:
   * donor capacity never drops below its VMs' reservations (admission),
   * recipient capacity never exceeds its physical peak,
   * the sum of caps never exceeds the cluster budget (transfers conserve it).
+
+The loop itself is the pure-array kernel ``repro.core.kernels.balance_caps``,
+shared with the jit-compiled batched sweep engine (``repro.sim.batch``);
+this module is the object-plane adapter: snapshot -> columns -> kernel ->
+snapshot, placements frozen for the loop's duration so the struct-of-arrays
+view is built once and only the ``power_cap`` column evolves.
 """
 
 from __future__ import annotations
@@ -19,6 +25,8 @@ import dataclasses
 
 import numpy as np
 
+from repro.backend import NUMPY
+from repro.core import kernels
 from repro.drs import actions as act
 from repro.drs.snapshot import ClusterSnapshot
 
@@ -32,96 +40,40 @@ class BalanceConfig:
     max_iters: int = 64
     min_transfer: float = 1e-3      # capacity units; below this we stop
 
+    def params(self) -> kernels.BalanceParams:
+        return kernels.BalanceParams(
+            imbalance_threshold=self.imbalance_threshold,
+            max_iters=self.max_iters,
+            min_transfer=self.min_transfer)
+
 
 def balance_power_cap(snapshot: ClusterSnapshot,
                       config: BalanceConfig | None = None
                       ) -> tuple[ClusterSnapshot, bool]:
-    """Returns (what-if snapshot with rebalanced caps, did-anything flag).
-
-    The whole loop runs in array space: placements are frozen for its
-    duration, so the struct-of-arrays view is built once and only the
-    ``power_cap`` column evolves.  Each round costs one batched-waterfill
-    pass over every VM plus O(hosts) arithmetic, independent of cluster
-    size in Python-interpreter terms.
-    """
+    """Returns (what-if snapshot with rebalanced caps, did-anything flag)."""
     config = config or BalanceConfig()
     f = snapshot.clone()
-    did_balance = False
-
     av = f.as_arrays()
-    on = av.host_on
-    caps = av.power_cap.copy()
-    if int(on.sum()) >= 2:
-        cpu_res = av.cpu_reserved()
-        peak_managed = av.peak_managed_capacity()
-        managed = av.managed_capacity(caps)
-        ents = av.entitlement_sums(caps)
-        ns = np.where(managed > 0.0, ents / np.maximum(managed, 1e-300), 0.0)
-        for _ in range(config.max_iters):
-            imbalance = float(ns[on].std())
-            if imbalance <= config.imbalance_threshold:
-                break
-            total_cap = float(managed[on].sum())
-            if total_cap <= 0:
-                break
-            # Cluster-average normalized entitlement: the water level every
-            # host would sit at if capacity were perfectly divisible.
-            n_avg = float(ents[on].sum()) / total_cap
-            if n_avg <= 1e-12:
-                break
+    if int(av.host_on.sum()) < 2:
+        # Nothing to balance between: skip the kernel (and its initial
+        # entitlement waterfill) entirely.
+        return f, False
+    hosts = av.host_cols()
+    floors, ceils, weights, seg = av.waterfill_cols()
 
-            # Batched progressive filling: every host above the average
-            # level is a recipient (bounded by its physical peak), every
-            # host below is a donor (bounded by the average level and by its
-            # reservations).  One batch round moves the same total capacity
-            # as many pairwise rounds of the paper's Algorithm 2 and
-            # converges to the same max-min fixed point.
-            cbar = ents / n_avg        # capacity at which N_h == n_avg
-            recipients = on & (ns > n_avg)
-            donors = on & (ns < n_avg)
-            need = np.where(
-                recipients,
-                np.maximum(np.minimum(peak_managed, cbar) - managed, 0.0),
-                0.0)
-            avail = np.where(
-                donors,
-                np.maximum(managed - np.maximum(cbar, cpu_res), 0.0),
-                0.0)
-            total_need, total_avail = float(need.sum()), float(avail.sum())
-            transfer = min(total_need, total_avail)
-            if transfer <= config.min_transfer:
-                break  # powercap range exhausted -> DRS migration handles it
+    def ents_at(caps):
+        return kernels.entitlement_sums(NUMPY, hosts, caps, floors[None],
+                                        ceils[None], weights[None],
+                                        seg[None])
 
-            prev_caps = caps.copy()
-            grow = recipients & (need > 0.0)
-            caps = np.where(grow, av.cap_for_managed_capacity(
-                managed + transfer * need / max(total_need, 1e-300)), caps)
-            shrink = donors & (avail > 0.0)
-            caps = np.where(shrink, av.cap_for_managed_capacity(
-                managed - transfer * avail / max(total_avail, 1e-300)), caps)
-            # Watts conservation under heterogeneous specs: trim recipients
-            # if the budget would be exceeded (linear maps conserve exactly
-            # for homogeneous specs; this is a safety net).
-            over = float(caps[on].sum()) - snapshot.power_budget
-            if over > 1e-6:
-                caps = np.where(
-                    recipients,
-                    np.maximum(caps - over / int(recipients.sum()),
-                               av.power_idle),
-                    caps)
-            managed = av.managed_capacity(caps)
-            ents = av.entitlement_sums(caps)
-            ns = np.where(managed > 0.0,
-                          ents / np.maximum(managed, 1e-300), 0.0)
-            # Heterogeneous Watts<->capacity maps (plus the trim above) can
-            # make a round non-improving near convergence: revert it and
-            # stop rather than oscillate.
-            if float(ns[on].std()) > imbalance + 1e-12:
-                caps = prev_caps
-                break
-            did_balance = True
-
-    av.write_caps(f, caps)
+    caps, did = kernels.balance_caps(
+        NUMPY, hosts, av.power_cap[None].copy(), ents_at,
+        av.cpu_reserved()[None],
+        np.asarray([snapshot.power_budget]),
+        np.asarray([True]),
+        config.params())
+    did_balance = bool(did[0])
+    av.write_caps(f, caps[0])
     if did_balance:
         f.validate()
     return f, did_balance

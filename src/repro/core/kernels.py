@@ -1,0 +1,266 @@
+"""Backend-neutral pure-array kernels for the CloudPowerCap allocation math.
+
+Every scale-sensitive decision in the manager pipeline -- the Eqs. 1/3/4
+Watts<->capacity maps, reserved-floor computation, RedivvyPowerCap's
+proportional-share cap redistribution, and BalancePowerCap's progressive
+filling -- is expressed here as pure functions over plain column arrays
+(caps, demands, reservations), parameterized by a ``repro.backend`` executor:
+
+  * the object plane (``repro.core.balance`` / ``repro.core.redivvy`` via
+    ``repro.drs.arrays``) runs them eagerly on NumPy with ``S == 1``;
+  * the batched sweep engine (``repro.sim.batch``) runs the *same* functions
+    under JAX ``jit``, batched over ``S`` scenario cells inside ``lax.scan``.
+
+All kernels take a leading cell axis: host columns are ``(S, H)``, VM
+columns ``(S, V)``, per-cell scalars ``(S,)``.  Padding convention: padded
+hosts have ``on == False`` (and a nonzero ``power_peak - power_idle`` range
+so the Eq. 3 division stays finite); padded/inactive VMs carry zero
+floors/ceilings so they allocate nothing, with ``vm_seg`` pointing at host 0.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+from repro.drs.entitlement import waterfill_core
+
+#: Minimum cap delta that counts as a change -- must match the emission
+#: threshold in ``repro.drs.actions.order_cap_changes`` so the batched
+#: engine's action counting agrees with the object plane's.
+CAP_CHANGE_EPS = 1e-9
+
+
+class HostCols(NamedTuple):
+    """Static host columns, ``(S, H)`` each (a pytree, so jit-transparent)."""
+
+    on: object             # bool: powered on
+    power_idle: object     # Watts at 0% utilization
+    power_peak: object     # Watts at 100% utilization
+    capacity_peak: object  # capacity at 100% utilization, uncapped
+    hyp_overhead: object   # Eq. 4's C_H
+
+
+class BalanceParams(NamedTuple):
+    """Static configuration of the balance loop (mirrors BalanceConfig)."""
+
+    imbalance_threshold: float = 0.01
+    max_iters: int = 64
+    min_transfer: float = 1e-3
+
+
+# ------------------------------------------------------------ power model
+def capped_capacity(xp, hosts: HostCols, caps):
+    """Eq. 3 per host; 0 for powered-off hosts."""
+    c = xp.clip(caps, hosts.power_idle, hosts.power_peak)
+    frac = (c - hosts.power_idle) / (hosts.power_peak - hosts.power_idle)
+    return xp.where(hosts.on, hosts.capacity_peak * frac, 0.0)
+
+
+def managed_capacity(xp, hosts: HostCols, caps):
+    """Eq. 4 per host; 0 for powered-off hosts."""
+    return xp.where(
+        hosts.on,
+        xp.maximum(capped_capacity(xp, hosts, caps) - hosts.hyp_overhead,
+                   0.0),
+        0.0)
+
+
+def peak_managed_capacity(xp, hosts: HostCols):
+    return xp.maximum(hosts.capacity_peak - hosts.hyp_overhead, 0.0)
+
+
+def cap_for_managed_capacity(xp, hosts: HostCols, capacities):
+    """Inverse of Eq. 4 (vectorized ``HostPowerSpec.cap_for_managed_capacity``)."""
+    c = xp.clip(capacities + hosts.hyp_overhead, 0.0, hosts.capacity_peak)
+    return hosts.power_idle + (hosts.power_peak - hosts.power_idle) * (
+        c / hosts.capacity_peak)
+
+
+def power_consumed(xp, hosts: HostCols, utilization):
+    """Eq. 1: utilization -> consumed Watts (0 when powered off)."""
+    u = xp.clip(utilization, 0.0, 1.0)
+    return xp.where(hosts.on,
+                    hosts.power_idle
+                    + (hosts.power_peak - hosts.power_idle) * u,
+                    0.0)
+
+
+def reserved_floor_caps(xp, hosts: HostCols, cpu_reserved):
+    """Per-host minimum cap honoring resident reservations (paper Fig. 3
+    step 1); never below idle, 0 for powered-off hosts."""
+    floor = xp.maximum(cap_for_managed_capacity(xp, hosts, cpu_reserved),
+                       hosts.power_idle)
+    return xp.where(hosts.on, floor, 0.0)
+
+
+# ---------------------------------------------------------------- redivvy
+def redivvy_caps(xp, on, caps_start, caps_floor):
+    """Algorithm 1 (RedivvyPowerCap), conserving form.
+
+    ``caps_start`` are pre-correction caps C_{i,S}; ``caps_floor`` the
+    post-correction reservation floors C_{i,F}.  Hosts whose floor grew keep
+    it; hosts whose floor shrank surrender exactly the fraction ``r`` of
+    their excess that funds the growth and keep the rest.  Powered-off hosts
+    keep ``caps_start`` untouched.
+    """
+    delta = xp.where(on, caps_floor - caps_start, 0.0)
+    needed = xp.sum(xp.where(delta > 0.0, delta, 0.0), axis=-1)
+    excess = xp.sum(xp.where(delta > 0.0, 0.0, -delta), axis=-1)
+    r = xp.minimum(needed / xp.maximum(excess, 1e-300), 1.0)[..., None]
+    shrunk = caps_floor + (1.0 - r) * (caps_start - caps_floor)
+    new = xp.where(delta > 0.0, caps_floor, shrunk)
+    # Corner cases exactly as the object-plane algorithm resolves them:
+    # nothing grew -> every host keeps its original cap; growth with no
+    # excess -> every host sits at its floor.
+    new = xp.where((excess > 0.0)[..., None], new, caps_floor)
+    new = xp.where((needed > 0.0)[..., None], new, caps_start)
+    return xp.where(on, new, caps_start)
+
+
+def count_cap_changes(xp, on, before, after):
+    """Per-cell count of hosts whose cap change would emit a SetPowerCap
+    action (the ``order_cap_changes`` threshold)."""
+    changed = on & (xp.abs(after - before) > CAP_CHANGE_EPS)
+    return xp.sum(changed, axis=-1)
+
+
+# ---------------------------------------------------------------- balance
+def _masked_std(xp, values, mask, count):
+    """Population stddev of ``values`` where ``mask`` (count = mask sum)."""
+    safe = xp.maximum(count, 1)
+    mean = xp.sum(values * mask, axis=-1) / safe
+    var = xp.sum(mask * (values - mean[..., None]) ** 2, axis=-1) / safe
+    return xp.sqrt(var)
+
+
+def entitlement_sums(be, hosts: HostCols, caps, vm_floors, vm_ceils,
+                     vm_weights, vm_seg, iters: int = 200):
+    """Per-host VM-entitlement sums at the given caps: one lockstep
+    waterfill over every (cell, host, VM) at once.
+
+    VM columns are ``(S, V)`` with ``vm_seg`` the resident host index
+    (inactive/padded VMs: zero floor/ceiling, seg 0).  Segments are
+    flattened to ``S * H`` so a single bisection serves the whole batch.
+    """
+    xp = be.xp
+    s, h = caps.shape
+    v = vm_seg.shape[-1]
+    offs = xp.arange(s)[:, None] * h
+    seg_flat = (vm_seg + offs).reshape(s * v)
+    capacity = managed_capacity(xp, hosts, caps)
+    alloc = waterfill_core(
+        be, capacity.reshape(s * h), vm_floors.reshape(s * v),
+        vm_ceils.reshape(s * v), vm_weights.reshape(s * v), seg_flat,
+        s * h, iters)
+    return be.seg_sum(alloc, seg_flat, s * h).reshape(s, h)
+
+
+def balance_caps(be, hosts: HostCols, caps, ents_at, cpu_reserved, budget,
+                 enabled, params: BalanceParams = BalanceParams()):
+    """Algorithm 2 (BalancePowerCap) as a pure batched loop.
+
+    Progressive filling toward max-min fairness on normalized entitlements
+    N_h, moving Watts instead of VMs.  ``ents_at(caps) -> (S, H)`` supplies
+    the per-host VM-entitlement sums at candidate caps (the object plane
+    injects the segment waterfill :func:`entitlement_sums`; the batched
+    engine injects the dense-slot form).  Returns ``(caps, did)`` where
+    ``did`` is the per-cell did-anything flag.  Cells with
+    ``enabled == False`` or fewer than two powered-on hosts pass through
+    unchanged.
+
+    The loop body is shared verbatim between backends: the NumPy driver
+    (``S == 1`` in the object-plane manager) early-exits through
+    ``be.while_loop`` on concrete booleans; the JAX driver runs the same
+    ``while_loop`` under ``jit`` with per-cell ``done`` masking, so
+    converged cells freeze while stragglers keep transferring.
+    """
+    xp = be.xp
+    on = hosts.on
+    n_on = xp.sum(on, axis=-1)
+    peak_managed = peak_managed_capacity(xp, hosts)
+
+    def norm(ents, managed):
+        return xp.where(managed > 0.0,
+                        ents / xp.maximum(managed, 1e-300), 0.0)
+
+    managed = managed_capacity(xp, hosts, caps)
+    ents = ents_at(caps)
+    ns = norm(ents, managed)
+    done0 = ~enabled | (n_on < 2)
+    did0 = xp.zeros_like(done0)
+
+    def cond(state):
+        caps, managed, ents, ns, done, did, rounds = state
+        return (rounds < params.max_iters) & ~xp.all(done)
+
+    def body(state):
+        caps, managed, ents, ns, done, did, rounds = state
+        imbalance = _masked_std(xp, ns, on, n_on)
+        total_cap = xp.sum(managed * on, axis=-1)
+        # Cluster-average normalized entitlement: the water level every
+        # host would sit at if capacity were perfectly divisible.
+        n_avg = xp.sum(ents * on, axis=-1) / xp.maximum(total_cap, 1e-300)
+        halt = ((imbalance <= params.imbalance_threshold)
+                | (total_cap <= 0.0) | (n_avg <= 1e-12))
+
+        # Batched progressive filling: every host above the average level
+        # is a recipient (bounded by its physical peak), every host below
+        # is a donor (bounded by the average level and by its reservations).
+        cbar = ents / xp.maximum(n_avg, 1e-300)[..., None]
+        recipients = on & (ns > n_avg[..., None])
+        donors = on & (ns < n_avg[..., None])
+        need = xp.where(
+            recipients,
+            xp.maximum(xp.minimum(peak_managed, cbar) - managed, 0.0), 0.0)
+        avail = xp.where(
+            donors,
+            xp.maximum(managed - xp.maximum(cbar, cpu_reserved), 0.0), 0.0)
+        total_need = xp.sum(need, axis=-1)
+        total_avail = xp.sum(avail, axis=-1)
+        transfer = xp.minimum(total_need, total_avail)
+        # Powercap range exhausted -> DRS migration handles the residue.
+        halt = halt | (transfer <= params.min_transfer)
+
+        grow = recipients & (need > 0.0)
+        new_caps = xp.where(grow, cap_for_managed_capacity(
+            xp, hosts,
+            managed + transfer[..., None] * need
+            / xp.maximum(total_need, 1e-300)[..., None]), caps)
+        shrink = donors & (avail > 0.0)
+        new_caps = xp.where(shrink, cap_for_managed_capacity(
+            xp, hosts,
+            managed - transfer[..., None] * avail
+            / xp.maximum(total_avail, 1e-300)[..., None]), new_caps)
+        # Watts conservation under heterogeneous specs: trim recipients if
+        # the budget would be exceeded (linear maps conserve exactly for
+        # homogeneous specs; this is a safety net).
+        over = xp.sum(new_caps * on, axis=-1) - budget
+        n_rec = xp.sum(recipients, axis=-1)
+        trim = (over > 1e-6)[..., None] & recipients
+        new_caps = xp.where(
+            trim,
+            xp.maximum(new_caps
+                       - (over / xp.maximum(n_rec, 1))[..., None],
+                       hosts.power_idle),
+            new_caps)
+
+        new_managed = managed_capacity(xp, hosts, new_caps)
+        new_ents = ents_at(new_caps)
+        new_ns = norm(new_ents, new_managed)
+        # Heterogeneous Watts<->capacity maps (plus the trim above) can make
+        # a round non-improving near convergence: skip it and stop rather
+        # than oscillate.
+        worse = _masked_std(xp, new_ns, on, n_on) > imbalance + 1e-12
+        commit = ~done & ~halt & ~worse
+        cm = commit[..., None]
+        return (xp.where(cm, new_caps, caps),
+                xp.where(cm, new_managed, managed),
+                xp.where(cm, new_ents, ents),
+                xp.where(cm, new_ns, ns),
+                done | halt | worse,
+                did | commit,
+                rounds + 1)
+
+    state = (caps, managed, ents, ns, done0, did0, 0)
+    caps, _, _, _, _, did, _ = be.while_loop(cond, body, state)
+    return caps, did

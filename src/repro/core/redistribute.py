@@ -32,10 +32,15 @@ def redistribute_for_power_on(snapshot: ClusterSnapshot, candidate_id: str,
 
     needed = spec.power_peak  # target: full peak cap (best robustness)
     granted = 0.0
+    if cand.powered_on:
+        # Already-on candidate (defensive: DPM only nominates standby
+        # hosts): its current allocation counts toward the target and is
+        # never taken away -- redistribution only tops it up toward peak.
+        granted = cand.power_cap
+        needed = max(needed - granted, 0.0)
 
     # 1. Unallocated budget first (paper Fig. 5 step 1).
-    pool = max(f.unallocated_power_budget() - cand.power_cap
-               * (0.0 if not cand.powered_on else 1.0), 0.0)
+    pool = max(f.unallocated_power_budget(), 0.0)
     take = min(pool, needed)
     granted += take
     needed -= take

@@ -17,6 +17,7 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.core import kernels
 from repro.drs import actions as act
 from repro.drs.snapshot import ClusterSnapshot
 
@@ -29,35 +30,19 @@ def redivvy_power_cap(before: ClusterSnapshot, after: ClusterSnapshot,
     ``before`` holds pre-correction caps C_{i,S}.  ``after`` holds the
     post-correction placements with caps set to each host's minimum
     (reservation-respecting) cap C_{i,F} -- callers build it via
-    :func:`get_flexible_power` + placement.
+    :func:`get_flexible_power` + placement.  The proportional-share math is
+    the pure-array kernel ``repro.core.kernels.redivvy_caps`` (shared with
+    the batched sweep engine); this adapter maps snapshots to columns and
+    back and asserts budget conservation.
     """
-    needed = 0.0
-    excess = 0.0
-    for host_id, host in after.hosts.items():
-        if not host.powered_on:
-            continue
-        c_s = before.hosts[host_id].power_cap
-        c_f = host.power_cap
-        if c_f > c_s:
-            needed += c_f - c_s
-        else:
-            excess += c_s - c_f
-    if needed > 0 and excess > 0:
-        # Fraction of each shrinking host's excess that must be surrendered
-        # to fund the growing hosts; the rest is returned (fairness).
-        r = min(needed / excess, 1.0)
-        for host_id, host in after.hosts.items():
-            if not host.powered_on:
-                continue
-            c_s = before.hosts[host_id].power_cap
-            if host.power_cap <= c_s:
-                host.power_cap = host.power_cap + (1.0 - r) * (
-                    c_s - host.power_cap)
-    elif needed == 0.0:
-        # Nothing grew: every host keeps its original cap.
-        for host_id, host in after.hosts.items():
-            if host.powered_on:
-                host.power_cap = before.hosts[host_id].power_cap
+    av = after.as_arrays()
+    caps_start = np.array([before.hosts[hid].power_cap
+                           for hid in av.host_ids], dtype=np.float64)
+    new_caps = kernels.redivvy_caps(np, av.host_on[None], caps_start[None],
+                                    av.power_cap[None])[0]
+    for i, hid in enumerate(av.host_ids):
+        if av.host_on[i]:
+            after.hosts[hid].power_cap = float(new_caps[i])
     total_before = sum(h.power_cap for h in before.hosts.values()
                        if h.powered_on)
     total_after = sum(h.power_cap for h in after.hosts.values()
@@ -71,11 +56,13 @@ def redivvy_power_cap(before: ClusterSnapshot, after: ClusterSnapshot,
 def set_reserved_floor_caps(snapshot: ClusterSnapshot) -> None:
     """Drop every powered-on host's cap to its reserved floor, in place.
 
-    One vectorized pass: per-host reserved capacity and its Watts floor come
-    from the struct-of-arrays view instead of an O(VMs) scan per host.
+    One vectorized pass through the shared reserved-floor kernel: per-host
+    reserved capacity and its Watts floor instead of an O(VMs) scan per
+    host.
     """
     av = snapshot.as_arrays()
-    floors = np.maximum(av.reserved_power_cap(), av.power_idle)
+    floors = kernels.reserved_floor_caps(np, av.host_cols(),
+                                         av.cpu_reserved()[None])[0]
     for i, hid in enumerate(av.host_ids):
         if av.host_on[i]:
             snapshot.hosts[hid].power_cap = float(floors[i])

@@ -22,7 +22,8 @@ import dataclasses
 
 import numpy as np
 
-from repro.drs.entitlement import batched_waterfill
+from repro import backend as backend_mod
+from repro.core import kernels
 
 
 @dataclasses.dataclass
@@ -101,28 +102,48 @@ class ArrayView:
     def n_vms(self) -> int:
         return len(self.vm_ids)
 
+    def host_cols(self) -> kernels.HostCols:
+        """The static host columns as the kernel layer's ``(1, H)`` bundle."""
+        return kernels.HostCols(
+            on=self.host_on[None],
+            power_idle=self.power_idle[None],
+            power_peak=self.power_peak[None],
+            capacity_peak=self.capacity_peak[None],
+            hyp_overhead=self.hyp_overhead[None])
+
+    def waterfill_cols(self) -> tuple[np.ndarray, np.ndarray, np.ndarray,
+                                      np.ndarray]:
+        """Masked per-VM entitlement columns ``(floors, ceils, weights, seg)``.
+
+        Inactive VMs carry zero floor/ceiling (so they allocate nothing)
+        with their segment pinned to host 0 -- the kernel layer's padding
+        convention, numerically identical to dropping them.
+        """
+        active = self.active_vms()
+        floors = np.where(active,
+                          np.minimum(self.reservation, self.limit), 0.0)
+        ceils = np.where(active, self.effective_demand(), 0.0)
+        weights = np.maximum(self.shares, 1e-12)
+        seg = np.where(active, self.vm_host, 0)
+        return floors, ceils, weights, seg
+
     def capped_capacity(self, caps: np.ndarray | None = None) -> np.ndarray:
         """Eq. 3 per host; 0 for powered-off hosts."""
         caps = self.power_cap if caps is None else caps
-        c = np.clip(caps, self.power_idle, self.power_peak)
-        frac = (c - self.power_idle) / (self.power_peak - self.power_idle)
-        return np.where(self.host_on, self.capacity_peak * frac, 0.0)
+        return kernels.capped_capacity(np, self.host_cols(), caps[None])[0]
 
     def managed_capacity(self, caps: np.ndarray | None = None) -> np.ndarray:
         """Eq. 4 per host; 0 for powered-off hosts."""
-        return np.where(
-            self.host_on,
-            np.maximum(self.capped_capacity(caps) - self.hyp_overhead, 0.0),
-            0.0)
+        caps = self.power_cap if caps is None else caps
+        return kernels.managed_capacity(np, self.host_cols(), caps[None])[0]
 
     def peak_managed_capacity(self) -> np.ndarray:
-        return np.maximum(self.capacity_peak - self.hyp_overhead, 0.0)
+        return kernels.peak_managed_capacity(np, self.host_cols())[0]
 
     def cap_for_managed_capacity(self, capacities: np.ndarray) -> np.ndarray:
         """Inverse of Eq. 4 (vectorized ``spec.cap_for_managed_capacity``)."""
-        c = np.clip(capacities + self.hyp_overhead, 0.0, self.capacity_peak)
-        return self.power_idle + (self.power_peak - self.power_idle) * (
-            c / self.capacity_peak)
+        return kernels.cap_for_managed_capacity(
+            np, self.host_cols(), capacities[None])[0]
 
     # -------------------------------------------------------- VM rollups
     def active_vms(self) -> np.ndarray:
@@ -171,20 +192,13 @@ class ArrayView:
 
     def entitlement_sums(self, caps: np.ndarray | None = None) -> np.ndarray:
         """Per-host sum of VM entitlements (one batched waterfill pass)."""
-        active = self.active_vms()
-        capacity = self.managed_capacity(caps)
-        idx = np.nonzero(active)[0]
-        if idx.size == 0:
+        caps = self.power_cap if caps is None else caps
+        if self.n_vms == 0:
             return np.zeros(self.n_hosts)
-        ent = batched_waterfill(
-            capacity,
-            np.minimum(self.reservation[idx], self.limit[idx]),
-            self.effective_demand()[idx],
-            self.shares[idx],
-            self.vm_host[idx],
-            self.n_hosts)
-        return np.bincount(self.vm_host[idx], weights=ent,
-                           minlength=self.n_hosts)
+        floors, ceils, weights, seg = self.waterfill_cols()
+        return kernels.entitlement_sums(
+            backend_mod.NUMPY, self.host_cols(), caps[None], floors[None],
+            ceils[None], weights[None], seg[None])[0]
 
     def normalized_entitlements(self, caps: np.ndarray | None = None
                                 ) -> np.ndarray:

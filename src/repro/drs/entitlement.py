@@ -13,6 +13,8 @@ from typing import Sequence
 
 import numpy as np
 
+from repro import backend as backend_mod
+
 
 def waterfill(capacity: float, floors: np.ndarray, ceilings: np.ndarray,
               weights: np.ndarray) -> np.ndarray:
@@ -62,69 +64,140 @@ def waterfill(capacity: float, floors: np.ndarray, ceilings: np.ndarray,
     return out
 
 
+def waterfill_core(be, capacity, floors, ceilings, weights, seg_ids,
+                   n_segs: int, iters: int = 200):
+    """Backend-neutral lockstep waterfill (the shape contract both the NumPy
+    and JAX entry points share).
+
+    Item ``i`` belongs to segment (host) ``seg_ids[i]`` with per-segment
+    capacity ``capacity[s]``.  All segments bisect their water level in
+    lockstep for a *fixed* ``iters`` trips (no data-dependent control flow,
+    so the JAX backend can ``jit``/``vmap`` it), with per-segment sums via
+    the backend's segment reduction.  Segment-wise the math is identical to
+    the scalar :func:`waterfill` (same bounds, same bisection, same pro-rata
+    residual correction), so per-host results agree to the correction
+    tolerance.  Inputs must be pre-sanitized: float arrays, ``weights``
+    bounded away from zero, ``seg_ids`` in ``[0, n_segs)``.
+    """
+    xp = be.xp
+    ceilings = xp.maximum(ceilings, floors)
+
+    total_floor = be.seg_sum(floors, seg_ids, n_segs)
+    # Degenerate segments: floors alone exceed capacity -> pro-rata floors.
+    degenerate = total_floor >= capacity
+    target = xp.minimum(capacity, be.seg_sum(ceilings, seg_ids, n_segs))
+
+    # Per-segment bisection bounds, advanced in lockstep.
+    hi = be.seg_max(ceilings / weights, seg_ids, n_segs) + 1.0
+    lo = xp.zeros_like(hi)
+
+    def bisect(_, bounds):
+        lo, hi = bounds
+        mid = 0.5 * (lo + hi)
+        alloc = xp.clip(weights * mid[seg_ids], floors, ceilings)
+        under = be.seg_sum(alloc, seg_ids, n_segs) < target
+        return xp.where(under, mid, lo), xp.where(under, hi, mid)
+
+    lo, hi = be.fori(iters, bisect, (lo, hi))
+    out = xp.clip(weights * hi[seg_ids], floors, ceilings)
+
+    # Pro-rata residual correction among items not pinned at their ceiling.
+    gap = target - be.seg_sum(out, seg_ids, n_segs)
+    room = (ceilings - out) > 1e-12
+    w_room = weights * room
+    w_room_sum = be.seg_sum(w_room, seg_ids, n_segs)
+    adjust = (gap > 1e-12) & (w_room_sum > 0.0)
+    bump = xp.where(adjust[seg_ids],
+                    gap[seg_ids] * w_room / xp.maximum(w_room_sum[seg_ids],
+                                                       1e-300),
+                    0.0)
+    out = xp.clip(out + bump, floors, ceilings)
+
+    scale = capacity / xp.maximum(total_floor, 1e-12)
+    return xp.where(degenerate[seg_ids], floors * scale[seg_ids], out)
+
+
 def batched_waterfill(capacity: np.ndarray, floors: np.ndarray,
                       ceilings: np.ndarray, weights: np.ndarray,
                       seg_ids: np.ndarray, n_segs: int,
                       iters: int = 200) -> np.ndarray:
     """Weighted max-min allocation over many independent hosts at once.
 
-    Vectorized form of :func:`waterfill`: item ``i`` belongs to segment
-    (host) ``seg_ids[i]`` with per-segment capacity ``capacity[s]``.  All
-    segments bisect their water level in lockstep, with per-segment sums
-    computed by ``np.bincount`` -- one array pass per iteration instead of a
-    Python loop over hosts.  Segment-wise the math is identical to the
-    scalar primitive (same bounds, same bisection, same pro-rata residual
-    correction), so per-host results agree to the correction tolerance.
+    NumPy entry point of :func:`waterfill_core` (per-segment sums via
+    ``np.bincount`` -- one array pass per iteration instead of a Python loop
+    over hosts).
     """
     capacity = np.asarray(capacity, dtype=np.float64)
     floors = np.asarray(floors, dtype=np.float64)
     ceilings = np.asarray(ceilings, dtype=np.float64)
     weights = np.maximum(np.asarray(weights, dtype=np.float64), 1e-12)
     seg_ids = np.asarray(seg_ids)
-    n = floors.shape[0]
-    if n == 0:
+    if floors.shape[0] == 0:
         return np.zeros(0)
-    ceilings = np.maximum(ceilings, floors)
+    return waterfill_core(backend_mod.NUMPY, capacity, floors, ceilings,
+                          weights, seg_ids, n_segs, iters)
 
-    def seg_sum(values: np.ndarray) -> np.ndarray:
-        return np.bincount(seg_ids, weights=values, minlength=n_segs)
 
-    total_floor = seg_sum(floors)
-    # Degenerate segments: floors alone exceed capacity -> pro-rata floors.
+def waterfill_dense(xp, fori, capacity, floors, ceilings, weights,
+                    iters: int = 200):
+    """Dense-slot twin of :func:`waterfill_core`.
+
+    Segments are the *leading* axes and items the trailing one: ``capacity``
+    is ``(..., H)`` and the item columns ``(..., H, J)`` with ``J`` padded
+    slots per segment (padding: zero floor/ceiling, tiny weight).  Per-
+    segment sums become trailing-axis reductions, which avoids scatter-adds
+    entirely -- on accelerators this is the fast path the batched sweep
+    engine uses for both tick delivery and balance entitlements.  The math
+    is identical to the segment form, so results agree to reduction-order
+    rounding.
+    """
+    ceilings = xp.maximum(ceilings, floors)
+    total_floor = xp.sum(floors, axis=-1)
     degenerate = total_floor >= capacity
-    target = np.minimum(capacity, seg_sum(ceilings))
+    target = xp.minimum(capacity, xp.sum(ceilings, axis=-1))
 
-    # Per-segment bisection bounds, advanced in lockstep.
-    ratio = ceilings / weights
-    hi = np.zeros(n_segs)
-    np.maximum.at(hi, seg_ids, ratio)
-    hi = hi + 1.0
-    lo = np.zeros(n_segs)
-    for _ in range(iters):
+    hi = xp.max(ceilings / weights, axis=-1) + 1.0
+    lo = xp.zeros_like(hi)
+
+    def bisect(_, bounds):
+        lo, hi = bounds
         mid = 0.5 * (lo + hi)
-        alloc = np.clip(weights * mid[seg_ids], floors, ceilings)
-        under = seg_sum(alloc) < target
-        lo = np.where(under, mid, lo)
-        hi = np.where(under, hi, mid)
-    out = np.clip(weights * hi[seg_ids], floors, ceilings)
+        alloc = xp.clip(weights * mid[..., None], floors, ceilings)
+        under = xp.sum(alloc, axis=-1) < target
+        return xp.where(under, mid, lo), xp.where(under, hi, mid)
 
-    # Pro-rata residual correction among items not pinned at their ceiling.
-    gap = target - seg_sum(out)
+    lo, hi = fori(iters, bisect, (lo, hi))
+    out = xp.clip(weights * hi[..., None], floors, ceilings)
+
+    gap = target - xp.sum(out, axis=-1)
     room = (ceilings - out) > 1e-12
     w_room = weights * room
-    w_room_sum = seg_sum(w_room)
+    w_room_sum = xp.sum(w_room, axis=-1)
     adjust = (gap > 1e-12) & (w_room_sum > 0.0)
-    bump = np.where(adjust[seg_ids],
-                    gap[seg_ids] * w_room / np.maximum(w_room_sum[seg_ids],
-                                                       1e-300),
+    bump = xp.where(adjust[..., None],
+                    gap[..., None] * w_room
+                    / xp.maximum(w_room_sum, 1e-300)[..., None],
                     0.0)
-    out = np.clip(out + bump, floors, ceilings)
+    out = xp.clip(out + bump, floors, ceilings)
 
-    if degenerate.any():
-        scale = capacity / np.maximum(total_floor, 1e-12)
-        deg_items = degenerate[seg_ids]
-        out = np.where(deg_items, floors * scale[seg_ids], out)
-    return out
+    scale = (capacity / xp.maximum(total_floor, 1e-12))[..., None]
+    return xp.where(degenerate[..., None], floors * scale, out)
+
+
+def jax_batched_waterfill(capacity, floors, ceilings, weights, seg_ids,
+                          n_segs: int, iters: int = 200):
+    """JAX twin of :func:`batched_waterfill` (same shape contract).
+
+    Fixed-iteration bisection via ``lax.fori_loop`` and segment sums via
+    ``jax.ops.segment_sum``, so the whole allocation is ``jit``-compilable
+    and ``vmap``-batchable (``n_segs``/``iters`` must be static).  Used by
+    the batched sweep engine (``repro.sim.batch``); numerically it tracks
+    the NumPy primitive to reduction-order rounding (~1 ulp).
+    """
+    be = backend_mod.jax_backend()
+    weights = be.xp.maximum(weights, 1e-12)
+    return waterfill_core(be, capacity, floors, ceilings, weights, seg_ids,
+                          n_segs, iters)
 
 
 def divvy(capacity: float, vms: Sequence) -> dict[str, float]:

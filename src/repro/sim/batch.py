@@ -1,0 +1,460 @@
+"""Batched multi-cluster engine: one jitted program for a whole scenario grid.
+
+``BatchedSimulator`` packs S scenario cells x H hosts x J VM slots per host
+into padded device arrays (reusing :class:`repro.sim.workloads.TraceBank`'s
+step-function layout for the demand traces) and runs the whole grid as a
+single JAX program: tick delivery is a ``lax.scan`` over time, and every DRS
+period the jitted redivvy + balance kernels from ``repro.core.kernels``
+recompute the caps for all cells at once.  Where
+``repro.sim.sweep.run_sweep`` executes the grid cell-at-a-time through the
+NumPy ``VectorSimulator``, this engine executes it grid-at-a-time -- the
+step that makes policy experiments grid-scale instead of cell-scale (the
+``sweep_grid`` benchmark entry).
+
+Layout note: VMs live in a *dense slot* layout ``(S, H, J)`` -- each VM
+occupies a slot under its resident host -- rather than the object plane's
+flat VM axis + host-index column.  Placements are frozen in this regime, so
+every per-host reduction (waterfill sums, delivered capacity, memory
+pressure) is a trailing-axis ``sum`` instead of a scatter-add: the
+difference between an accelerator-friendly program and one bottlenecked on
+``segment_sum``.
+
+Scope: the cap-only management regime the sweeps isolate (see
+``repro.sim.sweep``'s design notes) -- no DPM power state changes and no
+migration search, so placements and host power states are frozen for the
+run.  Within that regime the engine replays the exact protocol of
+``Simulator.run()``: demand update, manager invocation on the DRS schedule
+(phase 1 reserved-floor redivvy + phase 2 BalancePowerCap, with cap changes
+counted by the ``order_cap_changes`` threshold), waterfill delivery, Eq. 1
+energy accounting, and the budget invariant.  Parity against
+``VectorSimulator`` on the paper's three evaluation scenarios is enforced by
+``tests/test_batch_parity.py``.
+
+Everything runs in float64 (``jax.experimental.enable_x64``) so the compiled
+program tracks the NumPy object plane to reduction-order rounding.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple, Optional, Sequence
+
+import numpy as np
+
+from repro.backend import jax_backend
+from repro.core import kernels
+from repro.drs.entitlement import waterfill_dense
+from repro.drs.snapshot import ClusterSnapshot
+from repro.sim.cluster import SimConfig
+from repro.sim.metrics import Accumulators
+from repro.sim.workloads import DemandTrace, TraceBank
+
+
+@dataclasses.dataclass
+class BatchCell:
+    """One scenario cell: a cluster, its demand traces, and its policy."""
+
+    name: str
+    snapshot: ClusterSnapshot
+    traces: dict[str, DemandTrace]
+    config: SimConfig
+    powercap_enabled: bool = True            # False => Static/StaticHigh
+    window: Optional[tuple[float, float]] = None
+
+
+class _StaticSpec(NamedTuple):
+    """Hashable compile key: everything that shapes the jitted program."""
+
+    n_cells: int
+    n_hosts: int
+    n_slots: int
+    n_tags: int
+    tick_s: float
+    waterfill_iters: int
+    balance: kernels.BalanceParams
+
+
+@dataclasses.dataclass
+class BatchResult:
+    """Per-cell accumulators, as arrays over the S cells."""
+
+    names: list
+    cpu_payload_mhz_s: np.ndarray
+    cpu_demand_mhz_s: np.ndarray
+    mem_payload_mb_s: np.ndarray
+    mem_demand_mb_s: np.ndarray
+    energy_j: np.ndarray
+    cap_changes: np.ndarray                  # int per cell
+    tag_names: list
+    tag_payload: np.ndarray                  # (S, G)
+    tag_demand: np.ndarray                   # (S, G)
+    window_fields: dict                      # field -> (S,) array
+    has_window: np.ndarray                   # bool per cell
+    final_caps: np.ndarray                   # (S, H)
+    ticks: int
+    wall_s: float = 0.0
+
+    def accumulators(self, i: int) -> Accumulators:
+        acc = Accumulators(
+            cpu_payload_mhz_s=float(self.cpu_payload_mhz_s[i]),
+            cpu_demand_mhz_s=float(self.cpu_demand_mhz_s[i]),
+            mem_payload_mb_s=float(self.mem_payload_mb_s[i]),
+            mem_demand_mb_s=float(self.mem_demand_mb_s[i]),
+            energy_j=float(self.energy_j[i]),
+            cap_changes=int(self.cap_changes[i]))
+        for g, tag in enumerate(self.tag_names):
+            if self.tag_demand[i, g] > 0.0 or self.tag_payload[i, g] > 0.0:
+                acc.tag_payload[tag] = float(self.tag_payload[i, g])
+                acc.tag_demand[tag] = float(self.tag_demand[i, g])
+        return acc
+
+    def window_accumulators(self, i: int) -> Optional[Accumulators]:
+        if not bool(self.has_window[i]):
+            return None
+        w = self.window_fields
+        return Accumulators(
+            cpu_payload_mhz_s=float(w["cpu_payload_mhz_s"][i]),
+            cpu_demand_mhz_s=float(w["cpu_demand_mhz_s"][i]),
+            mem_payload_mb_s=float(w["mem_payload_mb_s"][i]),
+            mem_demand_mb_s=float(w["mem_demand_mb_s"][i]),
+            energy_j=float(w["energy_j"][i]))
+
+
+def _drs_schedule(cfg: SimConfig) -> tuple[np.ndarray, np.ndarray]:
+    """Tick times and manager-invocation mask, mirroring ``Simulator.run()``
+    (cap changes are instantaneous, so no invocation is ever deferred)."""
+    ts, fire = [], []
+    next_drs = cfg.drs_first_at_s
+    t = 0.0
+    while t < cfg.duration_s:
+        hit = t >= next_drs
+        if hit:
+            next_drs = t + cfg.drs_period_s
+        ts.append(t)
+        fire.append(hit)
+        t += cfg.tick_s
+    return np.asarray(ts, dtype=np.float64), np.asarray(fire, dtype=bool)
+
+
+@functools.lru_cache(maxsize=None)
+def _compiled_program(static: _StaticSpec):
+    """Build (and cache) the jitted whole-grid program for one shape."""
+    import jax
+    import jax.numpy as jnp
+
+    be = jax_backend()
+    S = static.n_cells
+    dt = static.tick_s
+    wf_iters = static.waterfill_iters
+
+    def program(a):
+        hosts = kernels.HostCols(a["on"], a["idle"], a["peak"],
+                                 a["cap_peak"], a["hyp"])
+        on = a["on"]
+        active = a["active"]                  # (S, H, J) slot occupied
+        weights = a["weights"]
+        host_mem = jnp.where(on, a["host_mem"], 0.0)
+        # Static balance inputs: reservations never move in this regime.
+        floor_caps = kernels.reserved_floor_caps(jnp, hosts, a["cpu_res"])
+        vm_floors = jnp.where(active,
+                              jnp.minimum(a["reservation"], a["limit"]), 0.0)
+        finite_period = jnp.isfinite(a["period"])
+
+        def demands(t):
+            phase = jnp.where(finite_period, jnp.mod(t, a["period"]), t)
+            idx = jnp.clip(
+                jnp.sum(a["bps"] <= phase[..., None], axis=-1) - 1, 0, None)
+            cpu = jnp.take_along_axis(a["cpu_vals"], idx[..., None],
+                                      axis=-1)[..., 0]
+            mem = jnp.take_along_axis(a["mem_vals"], idx[..., None],
+                                      axis=-1)[..., 0]
+            return cpu, mem
+
+        def invoke_manager(caps, cpu):
+            """Phase 1 (reserved-floor redivvy) + phase 2 (BalancePowerCap),
+            counting cap changes exactly as ``order_cap_changes`` emits."""
+            redivvied = kernels.redivvy_caps(jnp, on, caps, floor_caps)
+            caps1 = jnp.where(a["enabled"][:, None], redivvied, caps)
+            changes = kernels.count_cap_changes(jnp, on, caps, caps1)
+            vm_ceils = jnp.where(
+                active, jnp.clip(cpu, a["reservation"], a["limit"]), 0.0)
+
+            def ents_at(c):
+                managed = kernels.managed_capacity(jnp, hosts, c)
+                alloc = waterfill_dense(jnp, be.fori, managed, vm_floors,
+                                        vm_ceils, weights, wf_iters)
+                return jnp.sum(alloc, axis=-1)
+
+            caps2, _ = kernels.balance_caps(
+                be, hosts, caps1, ents_at, a["cpu_res"], a["budget"],
+                a["enabled"], static.balance)
+            changes = changes + kernels.count_cap_changes(jnp, on, caps1,
+                                                          caps2)
+            return caps2, changes.astype(jnp.int32)
+
+        def deliver(caps, cpu, mem):
+            managed = kernels.managed_capacity(jnp, hosts, caps)
+            dem = jnp.where(active, jnp.minimum(cpu, a["limit"]), 0.0)
+            floors = jnp.where(active,
+                               jnp.minimum(a["reservation"], dem), 0.0)
+            alloc = waterfill_dense(jnp, be.fori, managed, floors, dem,
+                                    weights, wf_iters)
+            delivered_h = jnp.sum(alloc, axis=-1)
+            mem_d = jnp.where(active, mem, 0.0)
+            mem_dem_h = jnp.sum(mem_d, axis=-1)
+            mem_deliv = jnp.minimum(mem_dem_h, host_mem)
+            # Eq. 1 power, utilization measured against peak capacity.
+            util = delivered_h / a["cap_peak"]
+            power = kernels.power_consumed(jnp, hosts, util)
+            tick = {
+                "cpu_payload_mhz_s": jnp.sum(alloc, axis=(-1, -2)),
+                "cpu_demand_mhz_s": jnp.sum(dem, axis=(-1, -2)),
+                "mem_payload_mb_s": jnp.sum(mem_deliv, axis=-1),
+                "mem_demand_mb_s": jnp.sum(mem_dem_h, axis=-1),
+                "energy_j": jnp.sum(power * on, axis=-1),
+            }
+            tag_pay = jnp.sum(a["tag_masks"] * alloc[None],
+                              axis=(-1, -2)).T
+            tag_dem = jnp.sum(a["tag_masks"] * dem[None], axis=(-1, -2)).T
+            return tick, tag_pay, tag_dem
+
+        def step(carry, x):
+            caps, acc, win, tag_pay, tag_dem, n_changes, max_total = carry
+            t, is_drs, in_win = x
+            cpu, mem = demands(t)
+            caps, changes = jax.lax.cond(
+                is_drs,
+                lambda c: invoke_manager(c, cpu),
+                lambda c: (c, jnp.zeros(S, dtype=jnp.int32)),
+                caps)
+            tick, tp, td = deliver(caps, cpu, mem)
+            acc = {k: acc[k] + tick[k] * dt for k in acc}
+            win = {k: win[k] + jnp.where(in_win, tick[k], 0.0) * dt
+                   for k in win}
+            carry = (caps, acc, win, tag_pay + tp * dt, tag_dem + td * dt,
+                     n_changes + changes,
+                     jnp.maximum(max_total, jnp.sum(caps * on, axis=-1)))
+            return carry, None
+
+        fields = ("cpu_payload_mhz_s", "cpu_demand_mhz_s",
+                  "mem_payload_mb_s", "mem_demand_mb_s", "energy_j")
+        zeros = {k: jnp.zeros(S) for k in fields}
+        init = (a["caps0"], dict(zeros), dict(zeros),
+                jnp.zeros((S, static.n_tags)), jnp.zeros((S, static.n_tags)),
+                jnp.zeros(S, dtype=jnp.int32),
+                jnp.sum(a["caps0"] * a["on"], axis=-1))
+        xs = (a["ts"], a["drs_mask"], a["win_mask"])
+        (caps, acc, win, tag_pay, tag_dem, n_changes, max_total), _ = (
+            jax.lax.scan(step, init, xs))
+        return {"acc": acc, "win": win, "tag_payload": tag_pay,
+                "tag_demand": tag_dem, "cap_changes": n_changes,
+                "max_total_cap": max_total, "final_caps": caps}
+
+    return jax.jit(program)
+
+
+class BatchedSimulator:
+    """Simulate S scenario cells as one compiled program.
+
+    Cells must share the time grid (``duration_s``/``tick_s``) and DRS
+    schedule; host counts, VM counts, traces, budgets, policies, and windows
+    vary freely per cell (smaller cells are padded).
+
+    ``waterfill_iters`` defaults to 100: the lockstep bisection reaches its
+    float64 fixed point in ~60 trips for realistic magnitudes, so this
+    matches the NumPy primitive's 200-trip result exactly at half the cost.
+    """
+
+    def __init__(self, cells: Sequence[BatchCell],
+                 balance: Optional[kernels.BalanceParams] = None,
+                 waterfill_iters: int = 100):
+        if not cells:
+            raise ValueError("no cells")
+        self.cells = list(cells)
+        cfg = cells[0].config
+        for c in cells[1:]:
+            same = (c.config.duration_s == cfg.duration_s
+                    and c.config.tick_s == cfg.tick_s
+                    and c.config.drs_period_s == cfg.drs_period_s
+                    and c.config.drs_first_at_s == cfg.drs_first_at_s)
+            if not same:
+                raise ValueError(
+                    f"cell {c.name!r} disagrees on the shared time grid")
+        self.config = cfg
+        self._pack(balance or kernels.BalanceParams(), waterfill_iters)
+
+    # ------------------------------------------------------------- packing
+    def _pack(self, balance: kernels.BalanceParams,
+              waterfill_iters: int) -> None:
+        cells = self.cells
+        S = len(cells)
+        H = max(len(c.snapshot.hosts) for c in cells)
+        ts, drs_mask = _drs_schedule(self.config)
+        T = ts.shape[0]
+
+        # Pass 1: per-cell VM columns and the dense slot assignment.  Each
+        # cell's *active* VMs (powered on, placed on a powered-on host) are
+        # grouped under their resident host; inactive VMs contribute nothing
+        # to delivery or accounting, exactly as the object engines'
+        # active-mask semantics.  All per-VM work is vectorized: one stable
+        # sort by host index yields every VM's (host, slot) coordinate.
+        prepped = []
+        n_bps = 1
+        for c in cells:
+            snap = c.snapshot
+            vms = list(snap.vms.values())
+            vm_ids = [v.vm_id for v in vms]
+            host_idx = {hid: j for j, hid in enumerate(snap.hosts)}
+            host_on = np.array([h.powered_on
+                                for h in snap.hosts.values()], dtype=bool)
+            host_j = np.array([host_idx.get(v.host_id, -1) for v in vms],
+                              dtype=np.int64)
+            act = np.array([v.powered_on for v in vms], dtype=bool)
+            act &= host_j >= 0
+            act[act] &= host_on[host_j[act]]
+            order = np.nonzero(act)[0]
+            hj = host_j[order]
+            srt = np.argsort(hj, kind="stable")
+            order, hj = order[srt], hj[srt]
+            counts = np.bincount(hj, minlength=H)
+            starts = np.concatenate(([0], np.cumsum(counts)[:-1]))
+            slot = np.arange(hj.size) - np.repeat(starts, counts)
+
+            bank = TraceBank.from_traces(c.traces, vm_ids)
+            if bank.fallback:
+                bad = [vm_ids[r] for r, _ in bank.fallback]
+                raise ValueError(
+                    f"cell {c.name!r}: traces without a declarative spec "
+                    f"cannot be batched: {bad[:5]}")
+            if bank.rows.size:
+                n_bps = max(n_bps, bank.bps.shape[1])
+            prepped.append((vms, bank, order, hj, slot, counts))
+        J = max(max((int(p[5].max()) for p in prepped if p[5].size),
+                    default=1), 1)
+
+        tag_names = sorted({t for c in cells
+                            for v in c.snapshot.vms.values() for t in v.tags})
+        G = len(tag_names)
+
+        def host_col(fill=0.0):
+            return np.full((S, H), fill, dtype=np.float64)
+
+        a = {
+            "on": np.zeros((S, H), dtype=bool),
+            # Padded hosts keep a nonzero idle->peak range so Eq. 3 stays
+            # finite; the `on` mask zeroes everything they would produce.
+            "idle": host_col(1.0), "peak": host_col(2.0),
+            "cap_peak": host_col(1.0), "hyp": host_col(0.0),
+            "host_mem": host_col(0.0), "caps0": host_col(0.0),
+            "cpu_res": host_col(0.0),
+            "budget": np.zeros(S), "enabled": np.zeros(S, dtype=bool),
+            "active": np.zeros((S, H, J), dtype=bool),
+            "reservation": np.zeros((S, H, J)),
+            "limit": np.full((S, H, J), np.inf),
+            "weights": np.full((S, H, J), 1e-12),
+            "tag_masks": np.zeros((G, S, H, J), dtype=bool),
+            "bps": np.full((S, H, J, n_bps), np.inf),
+            "cpu_vals": np.zeros((S, H, J, n_bps)),
+            "mem_vals": np.zeros((S, H, J, n_bps)),
+            "period": np.full((S, H, J), np.inf),
+            "ts": ts, "drs_mask": drs_mask,
+            "win_mask": np.zeros((T, S), dtype=bool),
+        }
+        a["bps"][..., 0] = 0.0
+
+        for i, c in enumerate(cells):
+            snap = c.snapshot
+            vms, bank, order, hj, slot, counts = prepped[i]
+            for j, h in enumerate(snap.hosts.values()):
+                a["on"][i, j] = h.powered_on
+                a["idle"][i, j] = h.spec.power_idle
+                a["peak"][i, j] = h.spec.power_peak
+                a["cap_peak"][i, j] = h.spec.capacity_peak
+                a["hyp"][i, j] = h.spec.hypervisor_overhead
+                a["host_mem"][i, j] = h.spec.memory_mb
+                a["caps0"][i, j] = h.power_cap
+            n = len(vms)
+            res = np.array([v.reservation for v in vms])
+            a["active"][i, hj, slot] = True
+            a["reservation"][i, hj, slot] = res[order]
+            a["limit"][i, hj, slot] = np.array([v.limit for v in vms])[order]
+            a["weights"][i, hj, slot] = np.maximum(
+                np.array([v.shares for v in vms]), 1e-12)[order]
+            a["cpu_res"][i, :] = np.bincount(hj, weights=res[order],
+                                             minlength=H)
+            for g, tag in enumerate(tag_names):
+                tagged = np.array([tag in v.tags for v in vms], dtype=bool)
+                a["tag_masks"][g, i, hj, slot] = tagged[order]
+            # Demand traces in TraceBank's padded step-function layout;
+            # trace-less VMs freeze at their initial demand.
+            dem0 = np.array([v.demand for v in vms])
+            mem0 = np.array([v.mem_demand for v in vms])
+            bps = np.full((n, n_bps), np.inf)
+            bps[:, 0] = 0.0
+            cpu = np.repeat(dem0[:, None], n_bps, axis=1)
+            mem = np.repeat(mem0[:, None], n_bps, axis=1)
+            period = np.full(n, np.inf)
+            if bank.rows.size:
+                k = bank.bps.shape[1]
+                bps[bank.rows, :k] = bank.bps
+                cpu[bank.rows, :k] = bank.cpu_vals
+                mem[bank.rows, :k] = bank.mem_vals
+                cpu[bank.rows, k:] = bank.cpu_vals[:, -1:]
+                mem[bank.rows, k:] = bank.mem_vals[:, -1:]
+                period[bank.rows] = bank.period
+            a["bps"][i, hj, slot] = bps[order]
+            a["cpu_vals"][i, hj, slot] = cpu[order]
+            a["mem_vals"][i, hj, slot] = mem[order]
+            a["period"][i, hj, slot] = period[order]
+            a["budget"][i] = snap.power_budget
+            a["enabled"][i] = c.powercap_enabled
+            if c.window is not None:
+                w0, w1 = c.window
+                a["win_mask"][:, i] = (w0 <= ts) & (ts < w1)
+        self._arrays = a
+        self._tag_names = tag_names
+        self._static = _StaticSpec(
+            n_cells=S, n_hosts=H, n_slots=J, n_tags=G,
+            tick_s=self.config.tick_s, waterfill_iters=waterfill_iters,
+            balance=balance)
+        self._ticks = T
+
+    # ------------------------------------------------------------- running
+    def run(self) -> BatchResult:
+        import time
+
+        from jax.experimental import enable_x64
+
+        t0 = time.perf_counter()
+        with enable_x64():
+            out = _compiled_program(self._static)(self._arrays)
+            out = {k: ({kk: np.asarray(vv) for kk, vv in v.items()}
+                       if isinstance(v, dict) else np.asarray(v))
+                   for k, v in out.items()}
+        wall = time.perf_counter() - t0
+
+        # The tick-level budget invariant, checked in one shot post-hoc.
+        over = out["max_total_cap"] - self._arrays["budget"]
+        assert float(over.max()) <= 1e-6, (
+            f"budget violated during execution: worst overshoot "
+            f"{float(over.max()):.3f} W (cell "
+            f"{self.cells[int(over.argmax())].name})")
+
+        acc = out["acc"]
+        return BatchResult(
+            names=[c.name for c in self.cells],
+            cpu_payload_mhz_s=acc["cpu_payload_mhz_s"],
+            cpu_demand_mhz_s=acc["cpu_demand_mhz_s"],
+            mem_payload_mb_s=acc["mem_payload_mb_s"],
+            mem_demand_mb_s=acc["mem_demand_mb_s"],
+            energy_j=acc["energy_j"],
+            cap_changes=out["cap_changes"],
+            tag_names=self._tag_names,
+            tag_payload=out["tag_payload"],
+            tag_demand=out["tag_demand"],
+            window_fields=out["win"],
+            has_window=np.array([c.window is not None for c in self.cells]),
+            final_caps=out["final_caps"],
+            ticks=self._ticks,
+            wall_s=wall)

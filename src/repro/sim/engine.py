@@ -27,6 +27,7 @@ from typing import Optional
 
 import numpy as np
 
+from repro.core import kernels
 from repro.drs.entitlement import batched_waterfill
 from repro.drs.snapshot import ClusterSnapshot
 from repro.sim.cluster import SimConfig, Simulator
@@ -92,6 +93,12 @@ class VectorSimulator(Simulator):
         self._vm_host = np.array(
             [idx.get(self.live.vms[vid].host_id, -1) for vid in self._vm_ids],
             dtype=np.int64)
+        self._host_cols = kernels.HostCols(
+            on=self._host_on[None],
+            power_idle=self._power_idle[None],
+            power_peak=self._power_peak[None],
+            capacity_peak=self._capacity_peak[None],
+            hyp_overhead=self._hyp_overhead[None])
         self._synced_version = self._topology_version
 
     def _arrays_current(self) -> None:
@@ -122,12 +129,8 @@ class VectorSimulator(Simulator):
         return overhead
 
     def _managed_capacity(self) -> np.ndarray:
-        c = np.clip(self._power_cap, self._power_idle, self._power_peak)
-        frac = (c - self._power_idle) / (self._power_peak - self._power_idle)
-        return np.where(
-            self._host_on,
-            np.maximum(self._capacity_peak * frac - self._hyp_overhead, 0.0),
-            0.0)
+        return kernels.managed_capacity(np, self._host_cols,
+                                        self._power_cap[None])[0]
 
     def _deliver_and_account(self, t: float) -> None:
         self._arrays_current()
@@ -177,9 +180,8 @@ class VectorSimulator(Simulator):
         self.acc.mem_demand_mb_s += float(mem_dem_h.sum()) * dt
 
         # Eq. 1 power, utilization measured against peak capacity.
-        util = np.minimum((delivered + overhead) / self._capacity_peak, 1.0)
-        power = self._power_idle + (
-            self._power_peak - self._power_idle) * np.clip(util, 0.0, 1.0)
+        util = (delivered + overhead) / self._capacity_peak
+        power = kernels.power_consumed(np, self._host_cols, util[None])[0]
         energy = float(power[on].sum()) * dt
         self.acc.energy_j += energy
 

@@ -90,8 +90,9 @@ def test_shard_map_scaled_by_mesh():
         return
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
-    mesh = jax.make_mesh((1,), ("m",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+
+    from repro.launch.mesh import AxisType, make_mesh_compat
+    mesh = make_mesh_compat((1,), ("m",), axis_types=(AxisType.Auto,))
 
     def f(x):
         return shard_map(lambda v: v @ v, mesh=mesh, in_specs=P(None, None),

@@ -16,6 +16,7 @@ STATEFUL = ["granite_8b", "granite_20b", "minicpm_2b", "nemotron_4_340b",
             "mamba2_2p7b", "zamba2_7b", "whisper_tiny", "internvl2_26b"]
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", STATEFUL)
 def test_decode_matches_full_forward(arch):
     cfg = configs.get_smoke(arch)
@@ -41,6 +42,7 @@ def test_decode_matches_full_forward(arch):
     assert float(jnp.max(jnp.abs(full - dec))) < 5e-5
 
 
+@pytest.mark.slow
 def test_moe_decode_matches_when_dropless():
     cfg = dataclasses.replace(configs.get_smoke("olmoe_1b_7b"),
                               moe_capacity_factor=64.0)

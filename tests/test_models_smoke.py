@@ -46,6 +46,7 @@ def test_forward_shapes_and_finite(arch):
     assert bool(jnp.all(jnp.isfinite(res.hidden)))
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", configs.ARCHS)
 def test_one_train_step(arch):
     cfg = configs.get_smoke(arch)
@@ -66,6 +67,7 @@ def test_one_train_step(arch):
     assert max(jax.tree_util.tree_leaves(moved)) > 0.0
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ["granite_8b", "olmoe_1b_7b",
                                   "mamba2_2p7b"])
 def test_microbatched_grads_match_single_shot(arch):

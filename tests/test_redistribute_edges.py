@@ -1,0 +1,106 @@
+"""Algorithm 3 edge cases: power-on funding under a strained budget.
+
+Deterministic companions to the hypothesis property tests in
+``test_algorithms.py`` (which are skipped when hypothesis is absent):
+what happens when the unallocated pool is empty and every donor is pinned
+at (or near) its power-on-threshold floor, and what happens when the
+power-on candidate is already powered on.
+"""
+
+import pytest
+
+from repro.core.power_model import PAPER_HOST
+from repro.core.redistribute import redistribute_for_power_on
+from repro.drs.dpm import DPMConfig
+from repro.drs.snapshot import ClusterSnapshot, Host, VirtualMachine
+
+
+def _cluster(util: float, n_hosts: int = 3, cap: float = 250.0,
+             vms_per_host: int = 5):
+    """Fully-allocated budget (no unallocated pool), every host's VMs
+    pinned at ``util`` of its capped capacity."""
+    hosts = [Host(f"h{i}", PAPER_HOST, power_cap=cap)
+             for i in range(n_hosts)]
+    hosts.append(Host("standby", PAPER_HOST, power_cap=0.0,
+                      powered_on=False))
+    vms = []
+    for i in range(n_hosts):
+        per_vm = util * PAPER_HOST.managed_capacity(cap) / vms_per_host
+        for k in range(vms_per_host):
+            vms.append(VirtualMachine(
+                vm_id=f"vm{i}_{k}", demand=per_vm, memory_mb=8 * 1024,
+                mem_demand=1024.0, host_id=f"h{i}"))
+    return ClusterSnapshot(hosts, vms, power_budget=n_hosts * cap)
+
+
+def test_insufficient_budget_drains_donors_only_to_their_floor():
+    """Donors surrender Watts down to the power-on-threshold floor and no
+    further; the grant falls short of peak and the budget is conserved."""
+    dpm = DPMConfig()
+    util = 0.6                        # below high_util: hosts can donate
+    snap = _cluster(util)
+    assert snap.unallocated_power_budget() == pytest.approx(0.0)
+
+    funded, granted = redistribute_for_power_on(snap, "standby", dpm)
+
+    assert 0.0 < granted < PAPER_HOST.power_peak  # short of the target
+    assert funded.hosts["standby"].power_cap == pytest.approx(granted)
+    total = sum(h.power_cap for h in funded.hosts.values()
+                if h.powered_on or h.host_id == "standby")
+    assert total <= funded.power_budget + 1e-6
+    for i in range(3):
+        donor = funded.hosts[f"h{i}"]
+        demand = sum(v.effective_demand for v in funded.vms_on(donor.host_id))
+        # Post-drain utilization stays at or below the power-on trigger:
+        # draining must never itself re-trigger a power-on (oscillation).
+        post_util = demand / donor.spec.managed_capacity(donor.power_cap)
+        assert post_util <= dpm.high_util + 1e-6
+        # Drained exactly to the floor: the donors gave everything allowed.
+        floor_cap = donor.spec.cap_for_managed_capacity(
+            demand / dpm.high_util)
+        assert donor.power_cap == pytest.approx(max(floor_cap,
+                                                    donor.spec.power_idle))
+
+
+def test_insufficient_budget_all_donors_pinned_grants_nothing():
+    """Hot donors (>= high_util) cannot be drained at all: the grant is zero
+    and the caller's feasibility check (managed capacity == 0) trips."""
+    dpm = DPMConfig()
+    snap = _cluster(util=0.95)        # every host above the power-on trigger
+    funded, granted = redistribute_for_power_on(snap, "standby", dpm)
+    assert granted == pytest.approx(0.0)
+    assert PAPER_HOST.managed_capacity(granted) <= 0.0  # infeasible signal
+    for i in range(3):
+        assert funded.hosts[f"h{i}"].power_cap == pytest.approx(250.0)
+
+
+def test_candidate_already_powered_on_keeps_its_cap():
+    """An already-on candidate's allocation counts toward the target and is
+    never reduced; spare budget tops it up toward peak."""
+    hosts = [Host("h0", PAPER_HOST, power_cap=250.0),
+             Host("h1", PAPER_HOST, power_cap=200.0)]
+    vms = [VirtualMachine(vm_id="v0", demand=20000.0, host_id="h0"),
+           VirtualMachine(vm_id="v1", demand=20000.0, host_id="h1")]
+    # 90 W of unallocated budget available for the top-up.
+    snap = ClusterSnapshot(hosts, vms, power_budget=540.0)
+
+    funded, granted = redistribute_for_power_on(snap, "h1")
+
+    assert granted == pytest.approx(290.0)    # 200 held + 90 unallocated
+    assert funded.hosts["h1"].power_cap == pytest.approx(290.0)
+    assert funded.hosts["h1"].power_cap >= snap.hosts["h1"].power_cap
+    total = sum(h.power_cap for h in funded.powered_on_hosts())
+    assert total <= funded.power_budget + 1e-6
+
+
+def test_candidate_already_on_at_peak_is_a_noop():
+    hosts = [Host("h0", PAPER_HOST, power_cap=PAPER_HOST.power_peak),
+             Host("h1", PAPER_HOST, power_cap=250.0)]
+    vms = [VirtualMachine(vm_id="v0", demand=1000.0, host_id="h0")]
+    snap = ClusterSnapshot(hosts, vms, power_budget=1000.0)
+    funded, granted = redistribute_for_power_on(snap, "h0")
+    assert granted == pytest.approx(PAPER_HOST.power_peak)
+    assert funded.hosts["h0"].power_cap == pytest.approx(
+        PAPER_HOST.power_peak)
+    # The peer keeps its cap: nothing needed, nothing drained.
+    assert funded.hosts["h1"].power_cap == pytest.approx(250.0)
