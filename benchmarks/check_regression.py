@@ -1,0 +1,126 @@
+"""Benchmark smoke: sweep-throughput regression gate for CI.
+
+Runs a fixed *tiny* scenario grid -- a cap-only slice and a capacity-churn
+slice -- through both the batched (jitted) and sequential (vector) sweep
+engines, and gates on the batched/sequential **speedup**.  Speedup is the
+machine-portable throughput metric: both sides execute in the same process
+on the same hardware, so a CI runner's absolute cells/s cancels out, while
+a regression in the compiled program (an accidental host-sync, a carry that
+stopped aliasing, a kernel falling off the fused path) shows up directly.
+
+The committed baseline lives in ``BENCH_sweep.json`` under ``"smoke"``;
+the gate fails when a grid's speedup drops more than ``--tolerance``
+(default 30%) below it.  The baseline should be refreshed with
+``--update-baseline`` on low-core hardware: extra cores help the jitted
+batched side more than the single-threaded NumPy side, so a baseline
+from a small machine is a conservative floor on bigger CI runners.  The
+full-size headline numbers (``sweep_grid`` / ``sweep_grid_dpm``) are
+tracked separately by ``benchmarks/run.py --json``.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.check_regression              # gate
+  PYTHONPATH=src python -m benchmarks.check_regression --update-baseline
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+BASELINE_PATH = os.path.normpath(os.path.join(
+    os.path.dirname(__file__), "..", "BENCH_sweep.json"))
+
+
+def _grids():
+    from repro.sim.sweep import scenario_families
+    return {
+        "sweep_grid": scenario_families(
+            sizes=(20,), budgets_per_host_w=(250.0,),
+            spikes=("burst", "prime"), heterogeneous=(False, True),
+            churns=("none",), duration_s=600.0, tick_s=10.0),
+        # 1500 s so the DPM valley spans the stability window and the
+        # cells actually power hosts off/on (see sweep_grid_dpm).
+        "sweep_grid_dpm": scenario_families(
+            sizes=(20,), budgets_per_host_w=(250.0,),
+            spikes=("burst",), heterogeneous=(False, True),
+            churns=("dpm", "failure"), duration_s=1500.0, tick_s=30.0),
+    }
+
+
+def measure() -> dict:
+    from repro.sim.sweep import run_cell, run_sweep_batched
+    policies = ("cpc", "static")
+    out = {}
+    for name, specs in _grids().items():
+        run_sweep_batched(specs, policies=policies)      # jit compile
+        res = run_sweep_batched(specs, policies=policies)
+        batch_wall = sum(r.wall_s for by_p in res.values()
+                         for r in by_p.values())
+        n_cells = len(specs) * len(policies)
+        seq_wall, seq_cells = 0.0, 0
+        for spec in specs[:2]:
+            for p in policies:
+                seq_wall += run_cell(spec, p, engine="vector").wall_s
+                seq_cells += 1
+        out[name] = {
+            "n_cells": n_cells,
+            "n_hosts": specs[0].n_hosts,
+            "cells_per_s_batched": n_cells / batch_wall,
+            "cells_per_s_sequential": seq_cells / seq_wall,
+            "speedup": (n_cells / batch_wall) / (seq_cells / seq_wall),
+        }
+    return out
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="write the measured smoke speedups into "
+                         "BENCH_sweep.json instead of gating")
+    ap.add_argument("--tolerance", type=float, default=0.30,
+                    help="allowed fractional speedup regression")
+    args = ap.parse_args()
+
+    measured = measure()
+    for name, m in measured.items():
+        print(f"{name}: {m['n_cells']}cells@{m['n_hosts']}h "
+              f"batched {m['cells_per_s_batched']:.1f} cells/s, "
+              f"sequential {m['cells_per_s_sequential']:.1f} cells/s, "
+              f"speedup {m['speedup']:.2f}x", flush=True)
+
+    with open(BASELINE_PATH) as f:
+        bench = json.load(f)
+
+    if args.update_baseline:
+        bench["smoke"] = measured
+        with open(BASELINE_PATH, "w") as f:
+            json.dump(bench, f, indent=2, sort_keys=True)
+        print(f"baseline updated in {BASELINE_PATH}")
+        return 0
+
+    baseline = bench.get("smoke")
+    if not baseline:
+        print("no committed smoke baseline in BENCH_sweep.json; run with "
+              "--update-baseline and commit the result", file=sys.stderr)
+        return 1
+    failed = False
+    for name, base in baseline.items():
+        got = measured.get(name)
+        if got is None:
+            print(f"FAIL {name}: grid missing from this run",
+                  file=sys.stderr)
+            failed = True
+            continue
+        floor = base["speedup"] * (1.0 - args.tolerance)
+        status = "ok" if got["speedup"] >= floor else "FAIL"
+        print(f"{status} {name}: speedup {got['speedup']:.2f}x vs baseline "
+              f"{base['speedup']:.2f}x (floor {floor:.2f}x)",
+              flush=True)
+        failed |= got["speedup"] < floor
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -14,6 +14,10 @@ live in EXPERIMENTS.md.
   sweep_grid           -- the jit-compiled batched engine running a 32-cell
                           scenario grid (100 hosts x budget x spike x mix) as
                           ONE program, vs the sequential run_sweep path
+  sweep_grid_dpm       -- the batched engine with the host power-state
+                          dimension live: a 32-cell capacity-churn grid (DPM
+                          power-off/power-on, maintenance windows, host
+                          failures) as ONE program, vs sequential
   roofline_summary     -- per-(arch x shape) roofline terms from the dry-run
 
 Run: PYTHONPATH=src python -m benchmarks.run [--skip-slow] [--json]
@@ -196,6 +200,70 @@ def sweep_grid():
             f";compile:{compile_wall:.1f}s")
 
 
+def sweep_grid_dpm():
+    """Capacity churn at grid scale: the host-lifecycle dimension batched.
+
+    Grid: 100 hosts x 4 churn families (cap-only, DPM valley/burst,
+    maintenance window, host failure) x 2 spike families x {homogeneous,
+    mixed} x {cpc, static} = 32 cells (32,000 VMs), every cell's DPM
+    triggers, evacuations, scripted events, and powercap redistribution
+    running inside ONE jitted program.  The sequential baseline runs the
+    four pure-churn cells of the same grid through the per-cell vector
+    path.  Cells/s semantics match ``sweep_grid`` (engine wall time on
+    prepared clusters)."""
+    from repro.sim.sweep import run_cell, run_sweep_batched, \
+        scenario_families
+    # 1500 s so the DPM valley [500, 1000) spans a full stability window
+    # before a DRS tick lands in it (power-off at 900 s) and the burst
+    # third trips the power-on trigger (1200 s).
+    specs = scenario_families(
+        sizes=(100,), budgets_per_host_w=(250.0,),
+        spikes=("burst", "prime"), heterogeneous=(False, True),
+        churns=("none", "dpm", "maintenance", "failure"),
+        duration_s=1500.0, tick_s=15.0)
+    policies = ("cpc", "static")
+    n_cells = len(specs) * len(policies)
+
+    t0 = time.perf_counter()
+    res = run_sweep_batched(specs, policies=policies, slot_slack=1.5)
+    first_wall = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    res = run_sweep_batched(specs, policies=policies, slot_slack=1.5)
+    batch_wall = time.perf_counter() - t0
+    batch_cps = n_cells / sum(r.wall_s for by_p in res.values()
+                              for r in by_p.values())
+    compile_wall = max(first_wall - batch_wall, 0.0)
+
+    churn_specs = [s for s in specs if s.churn == "dpm"][:2]
+    seq_wall, seq_cells = 0.0, 0
+    for spec in churn_specs:
+        for p in policies:
+            seq_wall += run_cell(spec, p, engine="vector").wall_s
+            seq_cells += 1
+    seq_cps = seq_cells / seq_wall
+
+    pons = sum(r.power_ons for by_p in res.values() for r in by_p.values())
+    poffs = sum(r.power_offs for by_p in res.values()
+                for r in by_p.values())
+    vmo = sum(r.vmotions for by_p in res.values() for r in by_p.values())
+    ARTIFACT["sweep_grid_dpm"] = {
+        "n_cells": n_cells,
+        "n_hosts": 100,
+        "cells_per_s_batched": batch_cps,
+        "cells_per_s_sequential": seq_cps,
+        "speedup": batch_cps / seq_cps,
+        "compile_s": compile_wall,
+        "power_ons": int(pons),
+        "power_offs": int(poffs),
+        "evacuations": int(vmo),
+    }
+    return (f"{n_cells}cells@100h:{batch_cps:.1f}cells/s"
+            f";seq:{seq_cps:.1f}cells/s"
+            f";speedup:{batch_cps / seq_cps:.1f}x"
+            f";poffs:{poffs};pons:{pons};evac:{vmo}"
+            f";compile:{compile_wall:.1f}s")
+
+
 def roofline_summary():
     pats = os.path.join(os.path.dirname(__file__), "..", "results",
                         "dryrun", "*.json")
@@ -231,6 +299,7 @@ BENCHES = [
     ("powercap_latency", powercap_latency, False),
     ("sweep_scale", sweep_scale, True),
     ("sweep_grid", sweep_grid, True),
+    ("sweep_grid_dpm", sweep_grid_dpm, True),
     ("kernel_microbenches", kernel_microbenches, False),
     ("roofline_summary", roofline_summary, False),
 ]

@@ -57,6 +57,12 @@ class NumpyBackend:
         return state
 
     @staticmethod
+    def argsort(values, axis=-1):
+        """Stable argsort: ties keep their original order, so greedy
+        tie-breaks ("first host wins") agree between backends."""
+        return np.argsort(values, axis=axis, kind="stable")
+
+    @staticmethod
     def asarray(values, dtype=np.float64):
         return np.asarray(values, dtype=dtype)
 
@@ -87,6 +93,9 @@ class JaxBackend:
 
     def while_loop(self, cond, body, init):
         return self._jax.lax.while_loop(cond, body, init)
+
+    def argsort(self, values, axis=-1):
+        return self.xp.argsort(values, axis=axis, stable=True)
 
     def asarray(self, values, dtype=None):
         return self.xp.asarray(values, dtype=dtype)

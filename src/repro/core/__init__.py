@@ -13,12 +13,13 @@ from repro.core.balance import balance_power_cap, BalanceConfig
 from repro.core.redistribute import (redistribute_for_power_on,
                                      redistribute_after_power_off)
 from repro.core.manager import (CloudPowerCapManager, ManagerConfig,
-                                static_manager, InvocationResult)
+                                ManagerCore, static_manager,
+                                InvocationResult)
 
 __all__ = [
     "HostPowerSpec", "PAPER_HOST", "TPU_V5E_HOST", "deployment_table",
     "redivvy_power_cap", "get_flexible_power", "fundable_capacity",
     "balance_power_cap", "BalanceConfig", "redistribute_for_power_on",
     "redistribute_after_power_off", "CloudPowerCapManager", "ManagerConfig",
-    "static_manager", "InvocationResult",
+    "ManagerCore", "static_manager", "InvocationResult",
 ]

@@ -48,6 +48,15 @@ class BalanceParams(NamedTuple):
     min_transfer: float = 1e-3
 
 
+class DPMParams(NamedTuple):
+    """Static DPM thresholds (mirrors ``repro.drs.dpm.DPMConfig``)."""
+
+    high_util: float = 0.81        # power-on trigger
+    low_util: float = 0.45         # power-off consideration band
+    target_util: float = 0.45      # post-consolidation ceiling on targets
+    stable_window_s: float = 300.0 # utilization must be low this long
+
+
 # ------------------------------------------------------------ power model
 def capped_capacity(xp, hosts: HostCols, caps):
     """Eq. 3 per host; 0 for powered-off hosts."""
@@ -264,3 +273,197 @@ def balance_caps(be, hosts: HostCols, caps, ents_at, cpu_reserved, budget,
     state = (caps, managed, ents, ns, done0, did0, 0)
     caps, _, _, _, _, did, _ = be.while_loop(cond, body, state)
     return caps, did
+
+
+# -------------------------------------------------- DPM + redistribution
+def host_utilizations(xp, hosts: HostCols, caps, eff_demand_h, mem_demand_h,
+                      host_mem):
+    """Per-host (cpu, mem) utilizations, matching the object plane's
+    ``ArrayView.host_cpu_utilization`` / ``host_mem_utilization``: zero for
+    powered-off hosts and hosts with no capacity."""
+    managed = managed_capacity(xp, hosts, caps)
+    cpu = xp.where(managed > 0.0,
+                   eff_demand_h / xp.maximum(managed, 1e-300), 0.0)
+    ok = hosts.on & (host_mem > 0.0)
+    mem = xp.where(ok, mem_demand_h / xp.maximum(host_mem, 1e-300), 0.0)
+    return cpu, mem
+
+
+def dpm_hot_mask(xp, on, cpu_util, mem_util, high_util):
+    """DPM power-on trigger: powered-on hosts running hot on CPU or memory."""
+    return on & ((cpu_util > high_util) | (mem_util > high_util))
+
+
+def dpm_all_low(xp, on, cpu_util, mem_util, low_util):
+    """DPM power-off consideration: every powered-on host below the low band
+    on both CPU and memory (per cell; vacuously true with no hosts on)."""
+    low = (cpu_util < low_util) & (mem_util < low_util)
+    return xp.all(~on | low, axis=-1)
+
+
+def power_on_funding_caps(be, hosts: HostCols, caps, cand, cpu_util,
+                          host_demand, cpu_reserved, budget,
+                          high_util: float):
+    """Algorithm 3 power-on funding (paper Fig. 5), batched.
+
+    Funds the cap of candidate host ``cand`` (``(S,)`` index): unallocated
+    budget first, then low-utilization donors drained -- lowest utilization
+    first -- down to the capacity at which DPM's power-on trigger would fire
+    (no oscillation), never below their reservations or idle power.  An
+    already-powered-on candidate keeps its allocation; funding only tops it
+    up toward peak.
+
+    Returns ``(new_caps, granted)`` where ``new_caps`` has donors drained
+    and the candidate at its granted cap (``min(granted, peak)``), and
+    ``granted`` is per cell.  The caller decides feasibility
+    (``managed_capacity(granted) > 0``) and emission.
+    """
+    xp = be.xp
+    on = hosts.on
+    h_idx = xp.arange(caps.shape[-1])
+
+    def at_cand(col):
+        return xp.take_along_axis(col, cand[..., None], axis=-1)[..., 0]
+
+    peak_c = at_cand(hosts.power_peak)
+    cand_on = at_cand(on)
+    granted0 = xp.where(cand_on, at_cand(caps), 0.0)
+    needed = xp.maximum(peak_c - granted0, 0.0)
+
+    # Step 1: unallocated budget.
+    pool = xp.maximum(budget - xp.sum(xp.where(on, caps, 0.0), axis=-1), 0.0)
+    take0 = xp.minimum(pool, needed)
+    needed = needed - take0
+
+    # Step 2: greedy drain, replicated exactly as a sorted prefix-sum: the
+    # k-th coolest donor gives ``clip(needed - taken_so_far, 0, avail_k)``,
+    # and donors past the 1e-9 residue give nothing (the object plane's
+    # early break).
+    is_cand = h_idx == cand[..., None]
+    donor = on & ~is_cand & (cpu_util < high_util)
+    floor_capacity = xp.maximum(host_demand / high_util, cpu_reserved)
+    floor_cap = xp.maximum(
+        cap_for_managed_capacity(xp, hosts, floor_capacity),
+        hosts.power_idle)
+    avail = xp.where(donor, xp.maximum(caps - floor_cap, 0.0), 0.0)
+    order = be.argsort(xp.where(donor, cpu_util, xp.inf), axis=-1)
+    sorted_avail = xp.take_along_axis(avail, order, axis=-1)
+    cum_before = xp.cumsum(sorted_avail, axis=-1) - sorted_avail
+    residue = needed[..., None] - cum_before
+    take = xp.where(residue > 1e-9,
+                    xp.clip(residue, 0.0, sorted_avail), 0.0)
+    inverse = be.argsort(order, axis=-1)
+    taken = xp.take_along_axis(take, inverse, axis=-1)
+
+    granted = xp.minimum(granted0 + take0 + xp.sum(take, axis=-1), peak_c)
+    new_caps = xp.where(is_cand, granted[..., None], caps - taken)
+    return new_caps, granted
+
+
+def power_off_reabsorb_caps(xp, hosts: HostCols, caps, off_idx, budget):
+    """Algorithm 3 power-off reabsorption: the victim's cap returns to the
+    pool and is spread over the remaining powered-on hosts proportionally to
+    their headroom to peak.  Returns the new cap column (victim at 0)."""
+    h_idx = xp.arange(caps.shape[-1])
+    is_off = h_idx == off_idx[..., None]
+    on_after = hosts.on & ~is_off
+    caps0 = xp.where(is_off, 0.0, caps)
+    pool = xp.maximum(
+        budget - xp.sum(xp.where(on_after, caps0, 0.0), axis=-1), 0.0)
+    recipients = on_after & (caps0 < hosts.power_peak - 1e-9)
+    headroom = xp.where(recipients, hosts.power_peak - caps0, 0.0)
+    total_head = xp.sum(headroom, axis=-1)
+    grant_total = xp.minimum(pool, total_head)
+    grown = xp.minimum(
+        caps0 + grant_total[..., None] * headroom
+        / xp.maximum(total_head, 1e-300)[..., None],
+        hosts.power_peak)
+    ok = (total_head > 0.0) & (pool > 0.0)
+    return xp.where(ok[..., None] & recipients, grown, caps0)
+
+
+def plan_evacuation(be, hosts: HostCols, caps, victim, occ, eff_slot,
+                    mem_slot, res_slot, migratable, host_mem,
+                    target_util: float):
+    """DPM evacuation planning on the dense slot layout ``(S, H, J)``.
+
+    Replays ``repro.drs.dpm.run_dpm``'s greedy: the victim's VMs leave in
+    decreasing current-memory order (stable on ties), each to the feasible
+    powered-on host with the strictly lowest post-move utilization (first
+    host on ties), subject to the reservation/memory fit check and the
+    ``target_util`` ceiling on both CPU and memory.  All-or-nothing: a
+    single unplaceable or unmigratable VM cancels the whole evacuation.
+
+    Returns ``(ok, order, dests, n_evac, slot_pressure)``: ``order`` is the
+    per-cell slot visit order, ``dests[:, k]`` the destination host of the
+    k-th evacuee (-1 when unused), and ``slot_pressure`` flags cells where
+    the ``J`` slot bound excluded an otherwise-feasible destination (the
+    caller must treat those results as invalid -- repack with more slack).
+    """
+    xp = be.xp
+    s, h, j = occ.shape
+    on = hosts.on
+    h_idx = xp.arange(h)
+    managed = managed_capacity(xp, hosts, caps)
+    act = occ & on[..., None]
+    eff_h = xp.sum(xp.where(act, eff_slot, 0.0), axis=-1)
+    mem_h = xp.sum(xp.where(act, mem_slot, 0.0), axis=-1)
+    res_h = xp.sum(xp.where(act, res_slot, 0.0), axis=-1)
+    cnt_h = xp.sum(occ, axis=-1)
+    is_vic = h_idx == victim[..., None]
+
+    def at_victim(col):
+        idx = victim[..., None, None] * xp.ones((s, 1, j), dtype=victim.dtype)
+        return xp.take_along_axis(col, idx, axis=1)[:, 0]
+
+    vic_occ = at_victim(occ)
+    vic_eff = at_victim(eff_slot)
+    vic_mem = at_victim(mem_slot)
+    vic_res = at_victim(res_slot)
+    vic_mig = at_victim(migratable)
+    order = be.argsort(xp.where(vic_occ, -vic_mem, xp.inf), axis=-1)
+    n_vic = xp.sum(vic_occ, axis=-1)
+
+    def take_k(col, k):
+        idx = xp.take_along_axis(order, xp.full((s, 1), k, order.dtype),
+                                 axis=-1)
+        return xp.take_along_axis(col, idx, axis=-1)[..., 0]
+
+    def body(k, st):
+        eff_h, mem_h, res_h, cnt_h, dests, ok, pressure = st
+        valid = k < n_vic
+        e = take_k(vic_eff, k)
+        m = take_k(vic_mem, k)
+        r = take_k(vic_res, k)
+        mig = take_k(vic_mig, k)
+        fit = on & ~is_vic
+        fit = fit & (res_h + r[..., None] <= managed + 1e-9)
+        fit = fit & (mem_h + m[..., None] <= host_mem + 1e-9)
+        util_after = (eff_h + e[..., None]) / xp.maximum(managed, 1e-9)
+        mem_after = (mem_h + m[..., None]) / xp.maximum(host_mem, 1e-9)
+        fit = fit & (util_after <= target_util) & (mem_after <= target_util)
+        slot_ok = cnt_h < j
+        pressure = pressure | xp.any(
+            valid[..., None] & fit & ~slot_ok, axis=-1)
+        fit = fit & slot_ok
+        score = xp.where(fit, util_after, xp.inf)
+        best = xp.argmin(score, axis=-1)
+        found = xp.isfinite(xp.min(score, axis=-1))
+        ok = ok & (~valid | (mig & found))
+        place = valid & ok
+        upd = place[..., None] & (h_idx == best[..., None])
+        col_k = xp.arange(j) == k
+        dests = xp.where(col_k[None, :] & place[..., None],
+                         best[..., None], dests)
+        return (eff_h + xp.where(upd, e[..., None], 0.0),
+                mem_h + xp.where(upd, m[..., None], 0.0),
+                res_h + xp.where(upd, r[..., None], 0.0),
+                cnt_h + upd.astype(cnt_h.dtype),
+                dests, ok, pressure)
+
+    init = (eff_h, mem_h, res_h, cnt_h,
+            xp.full((s, j), -1, dtype=victim.dtype),
+            xp.ones(s, dtype=bool), xp.zeros(s, dtype=bool))
+    _, _, _, _, dests, ok, pressure = be.fori(j, body, init)
+    n_evac = xp.where(ok, n_vic, 0)
+    return ok, order, dests, n_evac, pressure

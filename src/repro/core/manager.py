@@ -1,168 +1,48 @@
-"""CloudPowerCap orchestrator: the three coordination protocols.
+"""CloudPowerCap orchestrator facade.
 
-One DRS invocation (default every 300 s) runs:
-
-  Phase 1  Powercap Allocation      (paper Fig. 3)  constraint correction on
-           a GetFlexiblePower clone, then RedivvyPowerCap.
-  Phase 2  Powercap-based Balancing (paper Fig. 4)  BalancePowerCap first,
-           residual imbalance fixed by DRS's migration balancer.
-  Phase 3  Powercap Redistribution  (paper Fig. 5)  DPM power-on/off with
-           budget funding / reabsorption.
+The three coordination protocols (Powercap Allocation -> Powercap-based
+Balancing -> Powercap Redistribution) live in
+:class:`repro.core.manager_core.ManagerCore`, the single engine-neutral
+definition of the invocation sequence; this module keeps the historical
+``CloudPowerCapManager`` entry point that the simulators and tests drive.
 
 Baselines from the paper's evaluation (`Static`, `StaticHigh`) run the same
 DRS pipeline with cap changes disabled.
 
 See ``docs/ARCHITECTURE.md`` for how this pipeline sits between the
 simulator tick loop (``repro.sim.cluster``) and the array-based hot path
-(``repro.drs.arrays``, ``repro.sim.engine``).
+(``repro.drs.arrays``, ``repro.sim.engine``, ``repro.sim.batch``).
 """
 
 from __future__ import annotations
 
-import dataclasses
 from typing import Optional
 
-from repro.core import balance as bal
-from repro.core import redistribute as redist
-from repro.core import redivvy
-from repro.drs import actions as act
-from repro.drs import balancer, dpm, placement
+from repro.core.manager_core import (InvocationResult, ManagerConfig,
+                                     ManagerCore)
 from repro.drs.snapshot import ClusterSnapshot
 
-
-@dataclasses.dataclass
-class InvocationResult:
-    actions: list
-    snapshot: ClusterSnapshot            # what-if end state
-    migrations: int = 0
-    cap_changes: int = 0
-    notes: list = dataclasses.field(default_factory=list)
-
-
-@dataclasses.dataclass
-class ManagerConfig:
-    powercap_enabled: bool = True        # False => Static/StaticHigh baseline
-    balance: bal.BalanceConfig = dataclasses.field(
-        default_factory=bal.BalanceConfig)
-    balancer: balancer.BalancerConfig = dataclasses.field(
-        default_factory=balancer.BalancerConfig)
-    dpm: dpm.DPMConfig = dataclasses.field(default_factory=dpm.DPMConfig)
-    dpm_enabled: bool = True
+__all__ = ["CloudPowerCapManager", "InvocationResult", "ManagerConfig",
+           "ManagerCore", "static_manager"]
 
 
 class CloudPowerCapManager:
     """Drives one cluster; stateless between invocations except config."""
 
     def __init__(self, config: Optional[ManagerConfig] = None):
-        self.config = config or ManagerConfig()
+        self.core = ManagerCore(config)
+
+    @property
+    def config(self) -> ManagerConfig:
+        return self.core.config
 
     # ------------------------------------------------------------------
     def run_invocation(self, snapshot: ClusterSnapshot, now: float = 0.0,
                        low_since: Optional[dict] = None,
                        last_config_change: float = -1e18
                        ) -> InvocationResult:
-        cfg = self.config
-        actions: list[act.Action] = []
-        notes: list[str] = []
-
-        # ---------------- Phase 1: constraint correction ------------------
-        if cfg.powercap_enabled:
-            flex = redivvy.get_flexible_power(snapshot)
-            moves = placement.correct_constraints(
-                flex, capacity_fn=redivvy.fundable_capacity)
-            # Post-correction reserved floors (reservations moved with VMs).
-            redivvy.set_reserved_floor_caps(flex)
-            new_caps = redivvy.redivvy_power_cap(snapshot, flex)
-            cap_actions = redivvy.emit_actions(snapshot, new_caps,
-                                               reason="powercap-allocation")
-            cap_ids = tuple(a.action_id for a in cap_actions)
-            move_actions = [act.migrate(vm, dest, prereqs=cap_ids,
-                                        reason="constraint-correction")
-                            for vm, dest in moves]
-            actions += cap_actions + move_actions
-            working = flex
-        else:
-            working = snapshot.clone()
-            moves = placement.correct_constraints(working)
-            actions += [act.migrate(vm, dest, reason="constraint-correction")
-                        for vm, dest in moves]
-        if moves:
-            notes.append(f"constraint-correction: {len(moves)} moves")
-
-        # ---------------- Phase 2: entitlement balancing ------------------
-        if cfg.powercap_enabled:
-            balanced, did = bal.balance_power_cap(working, cfg.balance)
-            if did:
-                cap_actions = bal.emit_actions(working, balanced)
-                actions += cap_actions
-                notes.append(
-                    f"powercap-balance: {len(cap_actions)} cap changes, "
-                    f"imbalance {working.imbalance():.3f}->"
-                    f"{balanced.imbalance():.3f}")
-                working = balanced
-        residual_moves = balancer.balance(working, cfg.balancer)
-        if residual_moves:
-            actions += [act.migrate(vm, dest, reason="entitlement-balance")
-                        for vm, dest in residual_moves]
-            notes.append(f"migration-balance: {len(residual_moves)} moves")
-
-        # ---------------- Phase 3: DPM + redistribution -------------------
-        if cfg.dpm_enabled:
-            rec = dpm.run_dpm(working, cfg.dpm, low_since=low_since, now=now,
-                              last_config_change=last_config_change)
-            if rec.power_on is not None and cfg.powercap_enabled:
-                funded, granted = redist.redistribute_for_power_on(
-                    working, rec.power_on, cfg.dpm)
-                spec = working.hosts[rec.power_on].spec
-                if spec.managed_capacity(granted) <= 0.0:
-                    notes.append(
-                        f"dpm power-on {rec.power_on} infeasible: "
-                        f"only {granted:.0f} W available")
-                else:
-                    cap_actions = redist.emit_actions(
-                        working, funded, reason="powercap-poweron")
-                    pon = act.power_on(
-                        rec.power_on,
-                        prereqs=tuple(a.action_id for a in cap_actions),
-                        reason="dpm")
-                    actions += cap_actions + [pon]
-                    working = funded
-                    working.hosts[rec.power_on].powered_on = True
-                    notes.append(f"dpm power-on {rec.power_on} "
-                                 f"granted {granted:.0f} W")
-            elif rec.power_on is not None:
-                actions.append(act.power_on(rec.power_on, reason="dpm"))
-                notes.append(f"dpm power-on {rec.power_on}")
-                working.hosts[rec.power_on].powered_on = True
-            elif rec.power_off is not None:
-                evac = [act.migrate(vm, dest, reason="dpm-evacuate")
-                        for vm, dest in rec.evacuations]
-                for vm, dest in rec.evacuations:
-                    working.vms[vm].host_id = dest
-                poff = act.power_off(
-                    rec.power_off,
-                    prereqs=tuple(a.action_id for a in evac), reason="dpm")
-                actions += evac + [poff]
-                if cfg.powercap_enabled:
-                    redistributed = redist.redistribute_after_power_off(
-                        working, rec.power_off)
-                    cap_actions = redist.emit_actions(
-                        working, redistributed, reason="powercap-poweroff")
-                    for a in cap_actions:
-                        a.prereqs = a.prereqs + (poff.action_id,)
-                    actions += cap_actions
-                    working = redistributed
-                else:
-                    working.hosts[rec.power_off].powered_on = False
-                notes.append(
-                    f"dpm power-off {rec.power_off} "
-                    f"({len(rec.evacuations)} evacuations)")
-
-        migrations = sum(1 for a in actions if a.kind == "migrate")
-        cap_changes = sum(1 for a in actions if a.kind == "set_power_cap")
-        return InvocationResult(actions=actions, snapshot=working,
-                                migrations=migrations,
-                                cap_changes=cap_changes, notes=notes)
+        return self.core.invoke(snapshot, now=now, low_since=low_since,
+                                last_config_change=last_config_change)
 
 
 def static_manager(dpm_enabled: bool = True) -> CloudPowerCapManager:

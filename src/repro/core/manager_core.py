@@ -1,0 +1,200 @@
+"""ManagerCore: the three-phase CloudPowerCap protocol, engine-neutral.
+
+One DRS invocation (default every 300 s) runs:
+
+  Phase 1  Powercap Allocation      (paper Fig. 3)  constraint correction on
+           a GetFlexiblePower clone, then RedivvyPowerCap.
+  Phase 2  Powercap-based Balancing (paper Fig. 4)  BalancePowerCap first,
+           residual imbalance fixed by DRS's migration balancer.
+  Phase 3  Powercap Redistribution  (paper Fig. 5)  DPM power-on/off with
+           budget funding / reabsorption.
+
+This module is the *single* source of that sequencing.  Every engine adapts
+over it rather than reimplementing it:
+
+  * the per-object ``Simulator`` and the NumPy ``VectorSimulator`` call
+    :meth:`ManagerCore.invoke` (via ``repro.core.manager``'s
+    ``CloudPowerCapManager`` facade) on snapshot clones and execute the
+    emitted :mod:`repro.drs.actions` list with its prerequisite edges;
+  * the jitted ``BatchedSimulator`` (``repro.sim.batch``) replays the same
+    sequence inside ``lax.scan`` from the same decision kernels
+    (``repro.core.kernels``: ``redivvy_caps`` -> ``balance_caps`` ->
+    ``dpm_hot_mask``/``dpm_all_low`` -> ``power_on_funding_caps`` /
+    ``power_off_reabsorb_caps`` / ``plan_evacuation``), applying the same
+    action schema semantics (decreases before the increases they fund,
+    funding before power-on, evacuation before power-off) as timer state
+    carried through the scan.
+
+Because the decision math lives in the kernels, a change to any phase's
+policy lands in all three engines at once; parity is enforced by
+``tests/test_batch_parity.py`` and ``tests/test_vector_parity.py``.
+
+Baselines from the paper's evaluation (``Static``, ``StaticHigh``) run the
+same pipeline with cap changes disabled.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.core import balance as bal
+from repro.core import redistribute as redist
+from repro.core import redivvy
+from repro.drs import actions as act
+from repro.drs import balancer, dpm, placement
+from repro.drs.snapshot import ClusterSnapshot
+
+
+@dataclasses.dataclass
+class InvocationResult:
+    actions: list
+    snapshot: ClusterSnapshot            # what-if end state
+    migrations: int = 0
+    cap_changes: int = 0
+    notes: list = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class ManagerConfig:
+    powercap_enabled: bool = True        # False => Static/StaticHigh baseline
+    balance: bal.BalanceConfig = dataclasses.field(
+        default_factory=bal.BalanceConfig)
+    balancer: balancer.BalancerConfig = dataclasses.field(
+        default_factory=balancer.BalancerConfig)
+    dpm: dpm.DPMConfig = dataclasses.field(default_factory=dpm.DPMConfig)
+    dpm_enabled: bool = True
+
+
+class ManagerCore:
+    """Drives one cluster; stateless between invocations except config."""
+
+    def __init__(self, config: Optional[ManagerConfig] = None):
+        self.config = config or ManagerConfig()
+
+    # ------------------------------------------------------------------
+    def invoke(self, snapshot: ClusterSnapshot, now: float = 0.0,
+               low_since: Optional[dict] = None,
+               last_config_change: float = -1e18) -> InvocationResult:
+        actions: list[act.Action] = []
+        notes: list[str] = []
+        working = self._phase_allocation(snapshot, actions, notes)
+        working = self._phase_balancing(working, actions, notes)
+        working = self._phase_redistribution(working, actions, notes, now,
+                                             low_since, last_config_change)
+        migrations = sum(1 for a in actions if a.kind == "migrate")
+        cap_changes = sum(1 for a in actions if a.kind == "set_power_cap")
+        return InvocationResult(actions=actions, snapshot=working,
+                                migrations=migrations,
+                                cap_changes=cap_changes, notes=notes)
+
+    # ---------------- Phase 1: constraint correction ------------------
+    def _phase_allocation(self, snapshot: ClusterSnapshot, actions: list,
+                          notes: list) -> ClusterSnapshot:
+        if self.config.powercap_enabled:
+            flex = redivvy.get_flexible_power(snapshot)
+            moves = placement.correct_constraints(
+                flex, capacity_fn=redivvy.fundable_capacity)
+            # Post-correction reserved floors (reservations moved with VMs).
+            redivvy.set_reserved_floor_caps(flex)
+            new_caps = redivvy.redivvy_power_cap(snapshot, flex)
+            cap_actions = redivvy.emit_actions(snapshot, new_caps,
+                                               reason="powercap-allocation")
+            cap_ids = tuple(a.action_id for a in cap_actions)
+            move_actions = [act.migrate(vm, dest, prereqs=cap_ids,
+                                        reason="constraint-correction")
+                            for vm, dest in moves]
+            actions += cap_actions + move_actions
+            working = flex
+        else:
+            working = snapshot.clone()
+            moves = placement.correct_constraints(working)
+            actions += [act.migrate(vm, dest, reason="constraint-correction")
+                        for vm, dest in moves]
+        if moves:
+            notes.append(f"constraint-correction: {len(moves)} moves")
+        return working
+
+    # ---------------- Phase 2: entitlement balancing ------------------
+    def _phase_balancing(self, working: ClusterSnapshot, actions: list,
+                         notes: list) -> ClusterSnapshot:
+        cfg = self.config
+        if cfg.powercap_enabled:
+            balanced, did = bal.balance_power_cap(working, cfg.balance)
+            if did:
+                cap_actions = bal.emit_actions(working, balanced)
+                actions += cap_actions
+                notes.append(
+                    f"powercap-balance: {len(cap_actions)} cap changes, "
+                    f"imbalance {working.imbalance():.3f}->"
+                    f"{balanced.imbalance():.3f}")
+                working = balanced
+        residual_moves = balancer.balance(working, cfg.balancer)
+        if residual_moves:
+            actions += [act.migrate(vm, dest, reason="entitlement-balance")
+                        for vm, dest in residual_moves]
+            notes.append(f"migration-balance: {len(residual_moves)} moves")
+        return working
+
+    # ---------------- Phase 3: DPM + redistribution -------------------
+    def _phase_redistribution(self, working: ClusterSnapshot, actions: list,
+                              notes: list, now: float,
+                              low_since: Optional[dict],
+                              last_config_change: float) -> ClusterSnapshot:
+        cfg = self.config
+        if not cfg.dpm_enabled:
+            return working
+        rec = dpm.run_dpm(working, cfg.dpm, low_since=low_since, now=now,
+                          last_config_change=last_config_change)
+        if rec.power_on is not None and cfg.powercap_enabled:
+            funded, granted = redist.redistribute_for_power_on(
+                working, rec.power_on, cfg.dpm)
+            spec = working.hosts[rec.power_on].spec
+            if spec.managed_capacity(granted) <= 0.0:
+                notes.append(
+                    f"dpm power-on {rec.power_on} infeasible: "
+                    f"only {granted:.0f} W available")
+            else:
+                # The candidate's funded cap is an emitted action like any
+                # other (after the decreases that fund it): the host must
+                # come up with its grant applied, not a stale cap.
+                cap_actions = redist.emit_actions(
+                    working, funded, reason="powercap-poweron",
+                    include=(rec.power_on,))
+                pon = act.power_on(
+                    rec.power_on,
+                    prereqs=tuple(a.action_id for a in cap_actions),
+                    reason="dpm")
+                actions += cap_actions + [pon]
+                working = funded
+                working.hosts[rec.power_on].powered_on = True
+                notes.append(f"dpm power-on {rec.power_on} "
+                             f"granted {granted:.0f} W")
+        elif rec.power_on is not None:
+            actions.append(act.power_on(rec.power_on, reason="dpm"))
+            notes.append(f"dpm power-on {rec.power_on}")
+            working.hosts[rec.power_on].powered_on = True
+        elif rec.power_off is not None:
+            evac = [act.migrate(vm, dest, reason="dpm-evacuate")
+                    for vm, dest in rec.evacuations]
+            for vm, dest in rec.evacuations:
+                working.vms[vm].host_id = dest
+            poff = act.power_off(
+                rec.power_off,
+                prereqs=tuple(a.action_id for a in evac), reason="dpm")
+            actions += evac + [poff]
+            if cfg.powercap_enabled:
+                redistributed = redist.redistribute_after_power_off(
+                    working, rec.power_off)
+                cap_actions = redist.emit_actions(
+                    working, redistributed, reason="powercap-poweroff")
+                for a in cap_actions:
+                    a.prereqs = a.prereqs + (poff.action_id,)
+                actions += cap_actions
+                working = redistributed
+            else:
+                working.hosts[rec.power_off].powered_on = False
+            notes.append(
+                f"dpm power-off {rec.power_off} "
+                f"({len(rec.evacuations)} evacuations)")
+        return working

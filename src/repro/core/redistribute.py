@@ -7,17 +7,30 @@ power-on trigger would fire (no oscillation) nor below its reservations.
 
 Power-off: the host's cap returns to the pool and is redivvied across the
 remaining hosts, proportional to each host's headroom to peak.
+
+Both decisions are the pure-array kernels ``power_on_funding_caps`` /
+``power_off_reabsorb_caps`` in ``repro.core.kernels`` (shared with the
+batched sweep engine's jitted DPM path); this module is the object-plane
+adapter mapping snapshots to columns and back.
 """
 
 from __future__ import annotations
 
+from typing import TYPE_CHECKING
+
+import numpy as np
+
+from repro.backend import NUMPY
+from repro.core import kernels
 from repro.drs import actions as act
-from repro.drs.dpm import DPMConfig
 from repro.drs.snapshot import ClusterSnapshot
+
+if TYPE_CHECKING:  # annotation-only: avoids a repro.drs.dpm import cycle
+    from repro.drs.dpm import DPMConfig
 
 
 def redistribute_for_power_on(snapshot: ClusterSnapshot, candidate_id: str,
-                              dpm_config: DPMConfig | None = None
+                              dpm_config: "DPMConfig | None" = None
                               ) -> tuple[ClusterSnapshot, float]:
     """Fund ``candidate_id``'s cap.  Returns (what-if snapshot, granted W).
 
@@ -25,62 +38,21 @@ def redistribute_for_power_on(snapshot: ClusterSnapshot, candidate_id: str,
     physical peak; the function never violates donors' reservations or drives
     them into DPM's power-on band.
     """
+    from repro.drs.dpm import DPMConfig  # local import, no cycle
     dpm_config = dpm_config or DPMConfig()
     f = snapshot.clone()
-    cand = f.hosts[candidate_id]
-    spec = cand.spec
-
-    needed = spec.power_peak  # target: full peak cap (best robustness)
-    granted = 0.0
-    if cand.powered_on:
-        # Already-on candidate (defensive: DPM only nominates standby
-        # hosts): its current allocation counts toward the target and is
-        # never taken away -- redistribution only tops it up toward peak.
-        granted = cand.power_cap
-        needed = max(needed - granted, 0.0)
-
-    # 1. Unallocated budget first (paper Fig. 5 step 1).
-    pool = max(f.unallocated_power_budget(), 0.0)
-    take = min(pool, needed)
-    granted += take
-    needed -= take
-
-    # 2. Drain low-utilization hosts down to their power-on-threshold floor.
-    if needed > 1e-9:
-        # Per-host rollups (utilization, demand, reservations) in one
-        # vectorized pass; the greedy drain below is O(hosts).
-        av = f.as_arrays()
-        cpu_util = av.host_cpu_utilization()
-        host_demand = av.host_demand()
-        cpu_res = av.cpu_reserved()
-        donors = sorted(
-            (i for i in range(av.n_hosts)
-             if av.host_on[i] and cpu_util[i] < dpm_config.high_util
-             and av.host_ids[i] != candidate_id),
-            key=lambda i: cpu_util[i])
-        for i in donors:
-            if needed <= 1e-9:
-                break
-            donor = f.hosts[av.host_ids[i]]
-            # Floor capacity: utilization stays strictly below the power-on
-            # trigger, and reservations stay whole; the cap never drops
-            # below idle (a powered-on host draws idle regardless).
-            floor_capacity = max(host_demand[i] / dpm_config.high_util,
-                                 cpu_res[i])
-            floor_cap = max(float(donor.spec.cap_for_managed_capacity(
-                floor_capacity)), donor.spec.power_idle)
-            avail = max(donor.power_cap - floor_cap, 0.0)
-            take = min(avail, needed)
-            if take > 0:
-                donor.power_cap -= take
-                granted += take
-                needed -= take
-
+    av = f.as_arrays()
+    cand = np.asarray([av.host_index[candidate_id]])
+    new_caps, granted = kernels.power_on_funding_caps(
+        NUMPY, av.host_cols(), av.power_cap[None], cand,
+        av.host_cpu_utilization()[None], av.host_demand()[None],
+        av.cpu_reserved()[None], np.asarray([f.power_budget]),
+        dpm_config.high_util)
+    av.write_caps(f, new_caps[0])
     # The cap IS the budget allocation: never larger than what was granted.
     # Below idle the host cannot even sit powered-on -- the caller (DPM
     # protocol) treats that as power-on infeasible.
-    cand.power_cap = min(granted, spec.power_peak)
-    return f, cand.power_cap
+    return f, f.hosts[candidate_id].power_cap
 
 
 def redistribute_after_power_off(snapshot: ClusterSnapshot, off_id: str
@@ -88,29 +60,24 @@ def redistribute_after_power_off(snapshot: ClusterSnapshot, off_id: str
     """Reabsorb ``off_id``'s budget into the remaining hosts' caps,
     proportionally to each host's headroom to peak."""
     f = snapshot.clone()
-    off = f.hosts[off_id]
-    off.powered_on = False
-    freed = off.power_cap
-    off.power_cap = 0.0
-
-    pool = freed + max(f.unallocated_power_budget() - freed, 0.0)
-    pool = min(pool, max(f.power_budget - f.total_allocated_power(), 0.0))
-    recipients = [h for h in f.powered_on_hosts()
-                  if h.power_cap < h.spec.power_peak - 1e-9]
-    total_headroom = sum(h.spec.power_peak - h.power_cap for h in recipients)
-    if total_headroom <= 0 or pool <= 0:
-        return f
-    grant_total = min(pool, total_headroom)
-    for h in recipients:
-        share = (h.spec.power_peak - h.power_cap) / total_headroom
-        h.power_cap = min(h.power_cap + grant_total * share,
-                          h.spec.power_peak)
+    av = f.as_arrays()
+    off = np.asarray([av.host_index[off_id]])
+    new_caps = kernels.power_off_reabsorb_caps(
+        np, av.host_cols(), av.power_cap[None], off,
+        np.asarray([f.power_budget]))
+    f.hosts[off_id].powered_on = False
+    av.write_caps(f, new_caps[0])
     f.validate()
     return f
 
 
 def emit_actions(before: ClusterSnapshot, after: ClusterSnapshot,
-                 reason: str = "powercap-redistribute") -> list[act.Action]:
+                 reason: str = "powercap-redistribute",
+                 include: tuple[str, ...] = ()) -> list[act.Action]:
+    """Cap-change actions for every host powered on in either snapshot,
+    plus ``include`` (the power-on candidate, whose funded cap must be
+    applied even though it is still in standby when the actions execute)."""
     new_caps = {h.host_id: h.power_cap for h in after.hosts.values()
-                if h.powered_on or before.hosts[h.host_id].powered_on}
+                if h.powered_on or before.hosts[h.host_id].powered_on
+                or h.host_id in include}
     return act.order_cap_changes(before, new_caps, reason=reason)

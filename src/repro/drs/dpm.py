@@ -10,12 +10,15 @@ powering-on hosts.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import TYPE_CHECKING, Optional
 
 import numpy as np
 
 from repro.drs import placement
 from repro.drs.snapshot import ClusterSnapshot
+
+if TYPE_CHECKING:  # annotation-only: avoids a repro.core import cycle
+    from repro.core import kernels
 
 
 @dataclasses.dataclass
@@ -24,6 +27,13 @@ class DPMConfig:
     low_util: float = 0.45         # power-off consideration band
     target_util: float = 0.45      # post-consolidation ceiling on targets
     stable_window_s: float = 300.0 # utilization must be low this long
+
+    def params(self) -> "kernels.DPMParams":
+        from repro.core import kernels  # local import, no cycle
+        return kernels.DPMParams(
+            high_util=self.high_util, low_util=self.low_util,
+            target_util=self.target_util,
+            stable_window_s=self.stable_window_s)
 
 
 @dataclasses.dataclass
@@ -35,8 +45,18 @@ class DPMRecommendation:
 
 def capacity_at_util(snapshot: ClusterSnapshot, host_id: str,
                      util: float) -> float:
-    """Managed capacity at which the host's current demand equals ``util``."""
+    """Managed capacity at which the host's current demand equals ``util``.
+
+    Powered-off hosts contribute no managed capacity regardless of the
+    demand parked on them (their resident VMs receive nothing), so they sit
+    at zero rather than projecting a phantom capacity target; zero-demand
+    hosts likewise resolve to zero rather than tracking the division floor.
+    """
+    if not snapshot.hosts[host_id].powered_on:
+        return 0.0
     demand = sum(v.effective_demand for v in snapshot.vms_on(host_id))
+    if demand <= 0.0:
+        return 0.0
     return demand / max(util, 1e-9)
 
 
@@ -46,20 +66,22 @@ def run_dpm(snapshot: ClusterSnapshot, config: DPMConfig,
             last_config_change: float = -1e18) -> DPMRecommendation:
     """One DPM pass.  ``low_since[host]`` = sim time when the host's
     utilization last *entered* the low band (for the stability window)."""
+    from repro.core import kernels  # local import, no cycle
     rec = DPMRecommendation()
     on = snapshot.powered_on_hosts()
     standby = [h for h in snapshot.hosts.values() if not h.powered_on]
 
     # Per-host utilizations in one vectorized pass (the hot/low triggers are
-    # evaluated for every host on every DPM run).
+    # evaluated for every host on every DPM run); the trigger masks are the
+    # shared kernels so the batched engine's DPM decisions cannot diverge.
     av = snapshot.as_arrays()
     cpu_util = av.host_cpu_utilization()
     mem_util = av.host_mem_utilization()
     on_mask = av.host_on
 
     # --- power-on path: any hot host? --------------------------------------
-    hot = on_mask & ((cpu_util > config.high_util) |
-                     (mem_util > config.high_util))
+    hot = kernels.dpm_hot_mask(np, on_mask, cpu_util, mem_util,
+                               config.high_util)
     if bool(hot.any()):
         if standby:
             rec.power_on = standby[0].host_id
@@ -68,8 +90,8 @@ def run_dpm(snapshot: ClusterSnapshot, config: DPMConfig,
     # --- power-off path: sustained cluster-wide low utilization ------------
     if len(on) <= 1:
         return rec
-    all_low = bool(np.all((cpu_util[on_mask] < config.low_util) &
-                          (mem_util[on_mask] < config.low_util)))
+    all_low = bool(kernels.dpm_all_low(np, on_mask[None], cpu_util[None],
+                                       mem_util[None], config.low_util)[0])
     if not all_low:
         return rec
     if low_since is not None:

@@ -4,31 +4,47 @@
 into padded device arrays (reusing :class:`repro.sim.workloads.TraceBank`'s
 step-function layout for the demand traces) and runs the whole grid as a
 single JAX program: tick delivery is a ``lax.scan`` over time, and every DRS
-period the jitted redivvy + balance kernels from ``repro.core.kernels``
-recompute the caps for all cells at once.  Where
-``repro.sim.sweep.run_sweep`` executes the grid cell-at-a-time through the
-NumPy ``VectorSimulator``, this engine executes it grid-at-a-time -- the
-step that makes policy experiments grid-scale instead of cell-scale (the
-``sweep_grid`` benchmark entry).
+period the jitted manager invocation -- the same redivvy -> balance -> DPM
+redistribution sequence :class:`repro.core.manager_core.ManagerCore` drives
+on the object plane, built from the same ``repro.core.kernels`` -- runs for
+all cells at once.  Where ``repro.sim.sweep.run_sweep`` executes the grid
+cell-at-a-time through the NumPy ``VectorSimulator``, this engine executes
+it grid-at-a-time -- the step that makes policy experiments grid-scale
+instead of cell-scale (the ``sweep_grid`` / ``sweep_grid_dpm`` benchmark
+entries).
 
 Layout note: VMs live in a *dense slot* layout ``(S, H, J)`` -- each VM
-occupies a slot under its resident host -- rather than the object plane's
-flat VM axis + host-index column.  Placements are frozen in this regime, so
-every per-host reduction (waterfill sums, delivered capacity, memory
-pressure) is a trailing-axis ``sum`` instead of a scatter-add: the
-difference between an accelerator-friendly program and one bottlenecked on
-``segment_sum``.
+occupies a slot under its resident host -- so every per-host reduction
+(waterfill sums, delivered capacity, memory pressure) is a trailing-axis
+``sum`` instead of a scatter-add: the difference between an
+accelerator-friendly program and one bottlenecked on ``segment_sum``.
 
-Scope: the cap-only management regime the sweeps isolate (see
-``repro.sim.sweep``'s design notes) -- no DPM power state changes and no
-migration search, so placements and host power states are frozen for the
-run.  Within that regime the engine replays the exact protocol of
-``Simulator.run()``: demand update, manager invocation on the DRS schedule
-(phase 1 reserved-floor redivvy + phase 2 BalancePowerCap, with cap changes
-counted by the ``order_cap_changes`` threshold), waterfill delivery, Eq. 1
-energy accounting, and the budget invariant.  Parity against
-``VectorSimulator`` on the paper's three evaluation scenarios is enforced by
-``tests/test_batch_parity.py``.
+Two regimes, chosen at pack time:
+
+  * **cap-only** (no cell has DPM or scripted power events): placements and
+    host power states are frozen, the static-schedule fast path of PR 2.
+  * **capacity-churn** (any cell has ``dpm_enabled`` or
+    ``config.power_events``): the host power-state axis becomes dynamic
+    scan state -- an ``on`` mask plus pending power-on/off timers carried
+    through the ``lax.scan``.  Every DRS invocation additionally runs the
+    DPM triggers and Powercap Redistribution kernels; a power-off's
+    evacuation is modeled as an atomic dense-slot remap (the object plane's
+    ``instant_migrations`` regime), its funded cap changes applied when the
+    power-off timer fires, exactly as the action schema's prerequisite
+    edges order them.  Scripted events (host failure, maintenance windows)
+    flip the mask on schedule.  DRS invocations defer while actions are in
+    flight, so the schedule itself is carried per cell.
+
+Within its regime the engine replays the exact protocol of
+``Simulator.run()``; parity against ``VectorSimulator`` is enforced by
+``tests/test_batch_parity.py`` (cap-only and churn scenarios: exact
+cap-change / power-on / power-off / vmotion counts, float-tolerance
+payload/energy).
+
+Cells requesting anything the engine cannot replay exactly (per-VM trace
+callables without a declarative spec, DPM with timed migrations, DPM with
+placement rules, mixed time grids) raise :class:`BatchUnsupported` at pack
+time rather than silently freezing the unsupported dimension.
 
 Everything runs in float64 (``jax.experimental.enable_x64``) so the compiled
 program tracks the NumPy object plane to reduction-order rounding.
@@ -38,6 +54,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import math
 from typing import NamedTuple, Optional, Sequence
 
 import numpy as np
@@ -51,6 +68,10 @@ from repro.sim.metrics import Accumulators
 from repro.sim.workloads import DemandTrace, TraceBank
 
 
+class BatchUnsupported(ValueError):
+    """A cell requests a regime the batched engine cannot replay exactly."""
+
+
 @dataclasses.dataclass
 class BatchCell:
     """One scenario cell: a cluster, its demand traces, and its policy."""
@@ -61,6 +82,7 @@ class BatchCell:
     config: SimConfig
     powercap_enabled: bool = True            # False => Static/StaticHigh
     window: Optional[tuple[float, float]] = None
+    dpm_enabled: bool = False                # phase-3 DPM + redistribution
 
 
 class _StaticSpec(NamedTuple):
@@ -70,9 +92,16 @@ class _StaticSpec(NamedTuple):
     n_hosts: int
     n_slots: int
     n_tags: int
+    n_events: int
     tick_s: float
     waterfill_iters: int
     balance: kernels.BalanceParams
+    churn: bool
+    dpm: kernels.DPMParams
+    drs_period_s: float
+    drs_first_at_s: float
+    power_on_latency_s: float
+    power_off_latency_s: float
 
 
 @dataclasses.dataclass
@@ -86,12 +115,16 @@ class BatchResult:
     mem_demand_mb_s: np.ndarray
     energy_j: np.ndarray
     cap_changes: np.ndarray                  # int per cell
+    vmotions: np.ndarray                     # int per cell (DPM evacuations)
+    power_ons: np.ndarray                    # int per cell
+    power_offs: np.ndarray                   # int per cell
     tag_names: list
     tag_payload: np.ndarray                  # (S, G)
     tag_demand: np.ndarray                   # (S, G)
     window_fields: dict                      # field -> (S,) array
     has_window: np.ndarray                   # bool per cell
     final_caps: np.ndarray                   # (S, H)
+    final_on: np.ndarray                     # (S, H) power states at the end
     ticks: int
     wall_s: float = 0.0
 
@@ -102,7 +135,10 @@ class BatchResult:
             mem_payload_mb_s=float(self.mem_payload_mb_s[i]),
             mem_demand_mb_s=float(self.mem_demand_mb_s[i]),
             energy_j=float(self.energy_j[i]),
-            cap_changes=int(self.cap_changes[i]))
+            cap_changes=int(self.cap_changes[i]),
+            vmotions=int(self.vmotions[i]),
+            power_ons=int(self.power_ons[i]),
+            power_offs=int(self.power_offs[i]))
         for g, tag in enumerate(self.tag_names):
             if self.tag_demand[i, g] > 0.0 or self.tag_payload[i, g] > 0.0:
                 acc.tag_payload[tag] = float(self.tag_payload[i, g])
@@ -137,6 +173,12 @@ def _drs_schedule(cfg: SimConfig) -> tuple[np.ndarray, np.ndarray]:
     return np.asarray(ts, dtype=np.float64), np.asarray(fire, dtype=bool)
 
 
+# Padding values restored to a slot when its VM evacuates to another host.
+_SLOT_PAD = {"active": False, "reservation": 0.0, "limit": np.inf,
+             "weights": 1e-12, "migratable": True, "period": np.inf,
+             "cpu_vals": 0.0, "mem_vals": 0.0, "tag_masks": False}
+
+
 @functools.lru_cache(maxsize=None)
 def _compiled_program(static: _StaticSpec):
     """Build (and cache) the jitted whole-grid program for one shape."""
@@ -144,32 +186,75 @@ def _compiled_program(static: _StaticSpec):
     import jax.numpy as jnp
 
     be = jax_backend()
-    S = static.n_cells
+    S, H, J = static.n_cells, static.n_hosts, static.n_slots
     dt = static.tick_s
     wf_iters = static.waterfill_iters
+    dpmp = static.dpm
+    h_idx = np.arange(H)
+    s_idx = np.arange(S)
 
-    def program(a):
+    FIELDS = ("cpu_payload_mhz_s", "cpu_demand_mhz_s",
+              "mem_payload_mb_s", "mem_demand_mb_s", "energy_j")
+
+    def make_demands(a):
+        finite_period = jnp.isfinite(a["period"])
+
+        def demands(t, trace=None):
+            tr = a if trace is None else trace
+            fp = (finite_period if trace is None
+                  else jnp.isfinite(tr["period"]))
+            phase = jnp.where(fp, jnp.mod(t, tr["period"]), t)
+            idx = jnp.clip(
+                jnp.sum(tr["bps"] <= phase[..., None], axis=-1) - 1, 0, None)
+            cpu = jnp.take_along_axis(tr["cpu_vals"], idx[..., None],
+                                      axis=-1)[..., 0]
+            mem = jnp.take_along_axis(tr["mem_vals"], idx[..., None],
+                                      axis=-1)[..., 0]
+            return cpu, mem
+        return demands
+
+    def make_deliver(a):
+        def deliver(hosts, caps, on, active, weights, reservation, limit,
+                    tag_masks, cpu, mem):
+            host_mem = jnp.where(on, a["host_mem"], 0.0)
+            managed = kernels.managed_capacity(jnp, hosts, caps)
+            dem = jnp.where(active, jnp.minimum(cpu, limit), 0.0)
+            floors = jnp.where(active, jnp.minimum(reservation, dem), 0.0)
+            alloc = waterfill_dense(jnp, be.fori, managed, floors, dem,
+                                    weights, wf_iters)
+            delivered_h = jnp.sum(alloc, axis=-1)
+            mem_d = jnp.where(active, mem, 0.0)
+            mem_dem_h = jnp.sum(mem_d, axis=-1)
+            mem_deliv = jnp.minimum(mem_dem_h, host_mem)
+            # Eq. 1 power, utilization measured against peak capacity.
+            util = delivered_h / a["cap_peak"]
+            power = kernels.power_consumed(jnp, hosts, util)
+            tick = {
+                "cpu_payload_mhz_s": jnp.sum(alloc, axis=(-1, -2)),
+                "cpu_demand_mhz_s": jnp.sum(dem, axis=(-1, -2)),
+                "mem_payload_mb_s": jnp.sum(mem_deliv, axis=-1),
+                "mem_demand_mb_s": jnp.sum(mem_dem_h, axis=-1),
+                "energy_j": jnp.sum(power * on, axis=-1),
+            }
+            # tag_masks: (S, H, J, G)
+            tag_pay = jnp.sum(tag_masks * alloc[..., None], axis=(-3, -2))
+            tag_dem = jnp.sum(tag_masks * dem[..., None], axis=(-3, -2))
+            return tick, tag_pay, tag_dem, mem_dem_h
+        return deliver
+
+    # ------------------------------------------------------------------
+    def build_static(a):
+        """Cap-only regime: frozen placements and power states (PR 2)."""
         hosts = kernels.HostCols(a["on"], a["idle"], a["peak"],
                                  a["cap_peak"], a["hyp"])
         on = a["on"]
-        active = a["active"]                  # (S, H, J) slot occupied
+        active = a["active"] & on[..., None]
         weights = a["weights"]
-        host_mem = jnp.where(on, a["host_mem"], 0.0)
-        # Static balance inputs: reservations never move in this regime.
         floor_caps = kernels.reserved_floor_caps(jnp, hosts, a["cpu_res"])
         vm_floors = jnp.where(active,
                               jnp.minimum(a["reservation"], a["limit"]), 0.0)
-        finite_period = jnp.isfinite(a["period"])
-
-        def demands(t):
-            phase = jnp.where(finite_period, jnp.mod(t, a["period"]), t)
-            idx = jnp.clip(
-                jnp.sum(a["bps"] <= phase[..., None], axis=-1) - 1, 0, None)
-            cpu = jnp.take_along_axis(a["cpu_vals"], idx[..., None],
-                                      axis=-1)[..., 0]
-            mem = jnp.take_along_axis(a["mem_vals"], idx[..., None],
-                                      axis=-1)[..., 0]
-            return cpu, mem
+        demands = make_demands(a)
+        deliver = make_deliver(a)
 
         def invoke_manager(caps, cpu):
             """Phase 1 (reserved-floor redivvy) + phase 2 (BalancePowerCap),
@@ -193,32 +278,6 @@ def _compiled_program(static: _StaticSpec):
                                                           caps2)
             return caps2, changes.astype(jnp.int32)
 
-        def deliver(caps, cpu, mem):
-            managed = kernels.managed_capacity(jnp, hosts, caps)
-            dem = jnp.where(active, jnp.minimum(cpu, a["limit"]), 0.0)
-            floors = jnp.where(active,
-                               jnp.minimum(a["reservation"], dem), 0.0)
-            alloc = waterfill_dense(jnp, be.fori, managed, floors, dem,
-                                    weights, wf_iters)
-            delivered_h = jnp.sum(alloc, axis=-1)
-            mem_d = jnp.where(active, mem, 0.0)
-            mem_dem_h = jnp.sum(mem_d, axis=-1)
-            mem_deliv = jnp.minimum(mem_dem_h, host_mem)
-            # Eq. 1 power, utilization measured against peak capacity.
-            util = delivered_h / a["cap_peak"]
-            power = kernels.power_consumed(jnp, hosts, util)
-            tick = {
-                "cpu_payload_mhz_s": jnp.sum(alloc, axis=(-1, -2)),
-                "cpu_demand_mhz_s": jnp.sum(dem, axis=(-1, -2)),
-                "mem_payload_mb_s": jnp.sum(mem_deliv, axis=-1),
-                "mem_demand_mb_s": jnp.sum(mem_dem_h, axis=-1),
-                "energy_j": jnp.sum(power * on, axis=-1),
-            }
-            tag_pay = jnp.sum(a["tag_masks"] * alloc[None],
-                              axis=(-1, -2)).T
-            tag_dem = jnp.sum(a["tag_masks"] * dem[None], axis=(-1, -2)).T
-            return tick, tag_pay, tag_dem
-
         def step(carry, x):
             caps, acc, win, tag_pay, tag_dem, n_changes, max_total = carry
             t, is_drs, in_win = x
@@ -228,7 +287,9 @@ def _compiled_program(static: _StaticSpec):
                 lambda c: invoke_manager(c, cpu),
                 lambda c: (c, jnp.zeros(S, dtype=jnp.int32)),
                 caps)
-            tick, tp, td = deliver(caps, cpu, mem)
+            tick, tp, td, _ = deliver(hosts, caps, on, active, weights,
+                                      a["reservation"], a["limit"],
+                                      a["tag_masks"], cpu, mem)
             acc = {k: acc[k] + tick[k] * dt for k in acc}
             win = {k: win[k] + jnp.where(in_win, tick[k], 0.0) * dt
                    for k in win}
@@ -237,9 +298,7 @@ def _compiled_program(static: _StaticSpec):
                      jnp.maximum(max_total, jnp.sum(caps * on, axis=-1)))
             return carry, None
 
-        fields = ("cpu_payload_mhz_s", "cpu_demand_mhz_s",
-                  "mem_payload_mb_s", "mem_demand_mb_s", "energy_j")
-        zeros = {k: jnp.zeros(S) for k in fields}
+        zeros = {k: jnp.zeros(S) for k in FIELDS}
         init = (a["caps0"], dict(zeros), dict(zeros),
                 jnp.zeros((S, static.n_tags)), jnp.zeros((S, static.n_tags)),
                 jnp.zeros(S, dtype=jnp.int32),
@@ -247,10 +306,348 @@ def _compiled_program(static: _StaticSpec):
         xs = (a["ts"], a["drs_mask"], a["win_mask"])
         (caps, acc, win, tag_pay, tag_dem, n_changes, max_total), _ = (
             jax.lax.scan(step, init, xs))
+        zi = jnp.zeros(S, dtype=jnp.int32)
         return {"acc": acc, "win": win, "tag_payload": tag_pay,
                 "tag_demand": tag_dem, "cap_changes": n_changes,
-                "max_total_cap": max_total, "final_caps": caps}
+                "vmotions": zi, "power_ons": zi, "power_offs": zi,
+                "max_total_cap": max_total, "over_budget": max_total * 0.0,
+                "final_caps": caps, "final_on": a["on"],
+                "slot_pressure": jnp.zeros(S, dtype=bool)}
 
+    # ------------------------------------------------------------------
+    def build_churn(a):
+        """Capacity-churn regime: the power-state axis is scan state."""
+        demands = make_demands(a)
+        deliver = make_deliver(a)
+        exists = a["exists"]
+        host_mem_spec = a["host_mem"]
+
+        slot_keys = ("active", "reservation", "limit", "weights",
+                     "migratable", "period", "bps", "cpu_vals", "mem_vals",
+                     "tag_masks")
+
+        def hosts_of(on):
+            return kernels.HostCols(on, a["idle"], a["peak"], a["cap_peak"],
+                                    a["hyp"])
+
+        def gather_host(col, idx):
+            return jnp.take_along_axis(col, idx[..., None], axis=-1)[..., 0]
+
+        # ---------------------------------------------------- invocation
+        def invocation(c, can, t):
+            # Demands at t in the pre-invocation slot layout (evacuation
+            # planning sees them there; delivery re-evaluates post-remap).
+            cpu, mem = demands(t, trace=c["slots"])
+            on = c["on"]
+            hosts = hosts_of(on)
+            occ = c["slots"]["active"]
+            res = c["slots"]["reservation"]
+            lim = c["slots"]["limit"]
+            act3 = occ & on[..., None]
+            cpu_res = jnp.sum(jnp.where(act3, res, 0.0), axis=-1)
+            caps = c["caps"]
+
+            # Phase 1: reserved-floor redivvy (Powercap Allocation).
+            apply_cpc = can & a["enabled"]
+            floor_caps = kernels.reserved_floor_caps(jnp, hosts, cpu_res)
+            redivvied = kernels.redivvy_caps(jnp, on, caps, floor_caps)
+            caps1 = jnp.where(apply_cpc[:, None], redivvied, caps)
+            changes = jnp.where(
+                can, kernels.count_cap_changes(jnp, on, caps, caps1), 0)
+
+            # Phase 2: BalancePowerCap.
+            vm_floors = jnp.where(act3, jnp.minimum(res, lim), 0.0)
+            vm_ceils = jnp.where(act3, jnp.clip(cpu, res, lim), 0.0)
+
+            def ents_at(cc):
+                managed = kernels.managed_capacity(jnp, hosts, cc)
+                alloc = waterfill_dense(jnp, be.fori, managed, vm_floors,
+                                        vm_ceils, c["slots"]["weights"],
+                                        wf_iters)
+                return jnp.sum(alloc, axis=-1)
+
+            caps2, _ = kernels.balance_caps(
+                be, hosts, caps1, ents_at, cpu_res, a["budget"], apply_cpc,
+                static.balance)
+            changes = changes + jnp.where(
+                can, kernels.count_cap_changes(jnp, on, caps1, caps2), 0)
+
+            # Phase 3: DPM triggers + Powercap Redistribution.
+            eff_slot = jnp.where(act3, jnp.clip(cpu, res, lim), 0.0)
+            eff_h = jnp.sum(eff_slot, axis=-1)
+            mem_h = jnp.sum(jnp.where(act3, mem, 0.0), axis=-1)
+            cpu_util, mem_util = kernels.host_utilizations(
+                jnp, hosts, caps2, eff_h, mem_h, host_mem_spec)
+            hot_any = jnp.any(kernels.dpm_hot_mask(
+                jnp, on, cpu_util, mem_util, dpmp.high_util), axis=-1)
+            standby = exists & ~on
+            cand = jnp.argmax(standby, axis=-1)
+            do_dpm = can & a["dpm"]
+
+            # Power-on: fund the first standby host's cap (decreases execute
+            # now; the candidate's cap applies now too -- it only counts
+            # toward the budget while pending -- and the host joins when the
+            # power-on timer fires).
+            want_on = do_dpm & hot_any & jnp.any(standby, axis=-1)
+            funded, granted = kernels.power_on_funding_caps(
+                be, hosts, caps2, cand, cpu_util, eff_h, cpu_res,
+                a["budget"], dpmp.high_util)
+            cand_cols = kernels.HostCols(
+                *(gather_host(col, cand)[..., None]
+                  for col in (jnp.ones_like(on), a["idle"], a["peak"],
+                              a["cap_peak"], a["hyp"])))
+            feasible = kernels.managed_capacity(
+                jnp, cand_cols, granted[..., None])[..., 0] > 0.0
+            do_on = want_on & jnp.where(a["enabled"], feasible, True)
+            fund = do_on & a["enabled"]
+            is_cand = h_idx[None, :] == cand[..., None]
+            caps3 = jnp.where(fund[:, None], funded, caps2)
+            changes = changes + jnp.where(
+                fund,
+                kernels.count_cap_changes(jnp, on | is_cand, caps2, funded),
+                0)
+            pon_idx = jnp.where(do_on, cand, c["pon_idx"])
+            pon_end = jnp.where(do_on, t + static.power_on_latency_s,
+                                c["pon_end"])
+
+            # Power-off: sustained cluster-wide low utilization, stability
+            # window elapsed, and a complete evacuation plan.
+            n_on = jnp.sum(on, axis=-1)
+            all_low = kernels.dpm_all_low(jnp, on, cpu_util, mem_util,
+                                          dpmp.low_util)
+            ls = jnp.where(jnp.isnan(c["low_since"]), t, c["low_since"])
+            oldest = jnp.maximum(
+                jnp.max(jnp.where(on, ls, -jnp.inf), axis=-1),
+                c["last_cfg"])
+            window_ok = (t - oldest) >= dpmp.stable_window_s
+            maybe_off = (do_dpm & ~hot_any & (n_on > 1) & all_low
+                         & window_ok)
+            victim = jnp.argmin(jnp.where(on, cpu_util, jnp.inf), axis=-1)
+            ok, order, dests, n_evac, pressure = kernels.plan_evacuation(
+                be, hosts, caps2, victim, occ, eff_slot, mem,
+                res, c["slots"]["migratable"], host_mem_spec,
+                dpmp.target_util)
+            do_off = maybe_off & ok
+            slots = _apply_remap(c["slots"], do_off, victim, order, dests)
+            vmot = jnp.where(do_off, n_evac, 0).astype(jnp.int32)
+
+            reabsorbed = kernels.power_off_reabsorb_caps(
+                jnp, hosts, caps2, victim, a["budget"])
+            # The deferred actions touch exactly the hosts whose cap
+            # change clears the emission threshold (order_cap_changes).
+            changed = on & (jnp.abs(reabsorbed - caps2)
+                            > kernels.CAP_CHANGE_EPS)
+            off_cpc = do_off & a["enabled"]
+            pend_caps = jnp.where(
+                do_off[:, None],
+                jnp.where(off_cpc[:, None], reabsorbed, caps3),
+                c["pend_caps"])
+            pend_mask = jnp.where(do_off[:, None],
+                                  off_cpc[:, None] & changed,
+                                  c["pend_mask"])
+            pend_cnt = jnp.where(off_cpc, jnp.sum(changed, axis=-1),
+                                 0).astype(jnp.int32)
+            pend_cnt = jnp.where(do_off, pend_cnt, c["pend_cnt"])
+            poff_idx = jnp.where(do_off, victim, c["poff_idx"])
+            poff_end = jnp.where(do_off, t + static.power_off_latency_s,
+                                 c["poff_end"])
+
+            c = dict(c, caps=caps3, slots=slots, pon_idx=pon_idx,
+                     pon_end=pon_end, poff_idx=poff_idx, poff_end=poff_end,
+                     pend_caps=pend_caps, pend_mask=pend_mask,
+                     pend_cnt=pend_cnt,
+                     n_changes=c["n_changes"] + changes.astype(jnp.int32),
+                     vmotions=c["vmotions"] + vmot,
+                     slot_pressure=c["slot_pressure"]
+                     | (maybe_off & pressure))
+            return c
+
+        def _apply_remap(slots, move, victim, order, dests):
+            """Move the victim's occupied slots to their destinations' first
+            free slots, restoring pad values behind them."""
+            cnt = jnp.sum(slots["active"], axis=-1).astype(jnp.int64)
+
+            def body(k, st):
+                slots, cnt = st
+                j = jnp.take_along_axis(
+                    order, jnp.full((S, 1), k, order.dtype), axis=-1)[..., 0]
+                dest = jnp.take_along_axis(
+                    dests, jnp.full((S, 1), k, dests.dtype), axis=-1)[..., 0]
+                do = move & (dest >= 0)
+                sd = jnp.clip(dest, 0, H - 1)
+                ns = jnp.minimum(
+                    jnp.take_along_axis(cnt, sd[..., None],
+                                        axis=-1)[..., 0],
+                    J - 1)
+                new_slots = {}
+                for key, arr in slots.items():
+                    val = arr[s_idx, victim, j]
+                    mask = do if arr.ndim == 3 else do[..., None]
+                    cur_d = arr[s_idx, sd, ns]
+                    arr = arr.at[s_idx, sd, ns].set(
+                        jnp.where(mask, val, cur_d))
+                    cur_s = arr[s_idx, victim, j]
+                    if key == "bps":
+                        pad_v = jnp.where(jnp.arange(arr.shape[-1]) == 0,
+                                          0.0, jnp.inf)
+                        pad_v = jnp.broadcast_to(pad_v, cur_s.shape)
+                    else:
+                        pad_v = jnp.full_like(cur_s, _SLOT_PAD[key])
+                    arr = arr.at[s_idx, victim, j].set(
+                        jnp.where(mask, pad_v, cur_s))
+                    new_slots[key] = arr
+                cnt = cnt + (do[..., None]
+                             & (h_idx[None, :] == sd[..., None]))
+                return new_slots, cnt
+
+            slots, _ = be.fori(J, body, (slots, cnt))
+            return slots
+
+        # ----------------------------------------------------------- step
+        def step(c, x):
+            t, in_win = x
+
+            # 1. Scripted host lifecycle events.  A returning host boots
+            # with at most the unallocated budget as its cap (the manager
+            # may have reabsorbed its watts while it was away); a grant
+            # held by a host whose power-on is still in flight counts as
+            # allocated, like the budget invariant counts it.
+            on, last_cfg, ev_done = c["on"], c["last_cfg"], c["ev_done"]
+            caps = c["caps"]
+            pend_grant = jnp.where(
+                c["pon_idx"] >= 0,
+                gather_host(caps, jnp.clip(c["pon_idx"], 0, H - 1)), 0.0)
+            for e in range(static.n_events):
+                due = ~ev_done[:, e] & (a["ev_t"][:, e] <= t)
+                eh = a["ev_host"][:, e]
+                target = a["ev_on"][:, e]
+                cur = gather_host(on, eh)
+                onehot = h_idx[None, :] == eh[..., None]
+                boot = due & target & ~cur
+                pool = jnp.maximum(
+                    a["budget"] - jnp.sum(caps * on, axis=-1) - pend_grant,
+                    0.0)
+                caps = jnp.where(
+                    boot[:, None] & onehot,
+                    jnp.minimum(caps, pool[:, None]), caps)
+                on = jnp.where((due & target)[:, None] & onehot, True, on)
+                on = jnp.where((due & ~target)[:, None] & onehot, False, on)
+                last_cfg = jnp.where(due & (cur != target), t, last_cfg)
+                ev_done = ev_done.at[:, e].set(ev_done[:, e] | due)
+
+            # 2. Pending power-on/off timers come due.
+            pon_fire = (c["pon_idx"] >= 0) & (t >= c["pon_end"])
+            on = on | (pon_fire[:, None]
+                       & (h_idx[None, :] == c["pon_idx"][..., None]))
+            poff_fire = (c["poff_idx"] >= 0) & (t >= c["poff_end"])
+            on = on & ~(poff_fire[:, None]
+                        & (h_idx[None, :] == c["poff_idx"][..., None]))
+            # Apply only the hosts the deferred cap *actions* set (the
+            # emitted-change mask), not the whole decision-time column: a
+            # host a scripted event booted during the pending window had
+            # no action and keeps its boot cap.
+            caps = jnp.where(poff_fire[:, None] & c["pend_mask"],
+                             c["pend_caps"], caps)
+            last_cfg = jnp.where(pon_fire | poff_fire, t, last_cfg)
+            c = dict(
+                c, on=on, caps=caps, last_cfg=last_cfg, ev_done=ev_done,
+                n_changes=c["n_changes"]
+                + jnp.where(poff_fire, c["pend_cnt"], 0),
+                power_ons=c["power_ons"] + pon_fire.astype(jnp.int32),
+                power_offs=c["power_offs"] + poff_fire.astype(jnp.int32),
+                pon_idx=jnp.where(pon_fire, -1, c["pon_idx"]),
+                poff_idx=jnp.where(poff_fire, -1, c["poff_idx"]))
+
+            # 3. Manager invocation on the carried DRS schedule; deferred
+            # per cell while its power actions are in flight.
+            outstanding = (c["pon_idx"] >= 0) | (c["poff_idx"] >= 0)
+            can = (t >= c["next_drs"]) & ~outstanding
+            c = dict(c, next_drs=jnp.where(
+                can, t + static.drs_period_s,
+                jnp.where(t >= c["next_drs"], t + dt, c["next_drs"])))
+            c = jax.lax.cond(
+                jnp.any(can),
+                lambda cc: invocation(cc, can, t),
+                lambda cc: cc, c)
+
+            # 4. Demands at t from the (possibly just remapped) trace
+            # slots, then delivery + accounting at the post-invocation
+            # state.
+            cpu, mem = demands(t, trace=c["slots"])
+            on, caps = c["on"], c["caps"]
+            hosts = hosts_of(on)
+            active = c["slots"]["active"] & on[..., None]
+            tick, tp, td, mem_dem_h = deliver(
+                hosts, caps, on, active, c["slots"]["weights"],
+                c["slots"]["reservation"], c["slots"]["limit"],
+                c["slots"]["tag_masks"], cpu, mem)
+
+            # Budget invariant: powered-on caps plus the cap of a host whose
+            # power-on is pending (it holds its grant while joining).
+            pend_cap = jnp.where(
+                c["pon_idx"] >= 0,
+                gather_host(caps, jnp.clip(c["pon_idx"], 0, H - 1)), 0.0)
+            total = jnp.sum(caps * on, axis=-1) + pend_cap
+
+            # 6. DPM low-watermark tracking at delivered capacity, through
+            # the same utilization kernel the invocation's triggers use.
+            eff = jnp.clip(cpu, c["slots"]["reservation"],
+                           c["slots"]["limit"])
+            eff_h = jnp.sum(jnp.where(active, eff, 0.0), axis=-1)
+            cpu_util, mem_util = kernels.host_utilizations(
+                jnp, hosts, caps, eff_h, mem_dem_h, host_mem_spec)
+            low = on & (cpu_util < dpmp.low_util) & (
+                mem_util < dpmp.low_util)
+            entering = low & jnp.isnan(c["low_since"])
+            low_since = jnp.where(entering, t, c["low_since"])
+            low_since = jnp.where(on & ~low, jnp.nan, low_since)
+
+            c = dict(
+                c, low_since=low_since,
+                acc={k: c["acc"][k] + tick[k] * dt for k in c["acc"]},
+                win={k: c["win"][k] + jnp.where(in_win, tick[k], 0.0) * dt
+                     for k in c["win"]},
+                tag_pay=c["tag_pay"] + tp * dt,
+                tag_dem=c["tag_dem"] + td * dt,
+                over_budget=jnp.maximum(c["over_budget"],
+                                        total - a["budget"]))
+            return c, None
+
+        zeros = {k: jnp.zeros(S) for k in FIELDS}
+        zi = jnp.zeros(S, dtype=jnp.int32)
+        init = {
+            "caps": a["caps0"], "on": a["on"],
+            "slots": {k: a[k] for k in slot_keys},
+            "low_since": jnp.full((S, H), jnp.nan),
+            "last_cfg": jnp.full(S, -1e18),
+            "next_drs": jnp.full(S, static.drs_first_at_s),
+            "pon_idx": jnp.full(S, -1, dtype=jnp.int64),
+            "pon_end": jnp.zeros(S),
+            "poff_idx": jnp.full(S, -1, dtype=jnp.int64),
+            "poff_end": jnp.zeros(S),
+            "pend_caps": a["caps0"], "pend_cnt": zi,
+            "pend_mask": jnp.zeros((S, H), dtype=bool),
+            "ev_done": jnp.zeros((S, static.n_events), dtype=bool),
+            "acc": dict(zeros), "win": dict(zeros),
+            "tag_pay": jnp.zeros((S, static.n_tags)),
+            "tag_dem": jnp.zeros((S, static.n_tags)),
+            "n_changes": zi, "vmotions": zi,
+            "power_ons": zi, "power_offs": zi,
+            "over_budget": jnp.full(S, -jnp.inf),
+            "slot_pressure": jnp.zeros(S, dtype=bool),
+        }
+        xs = (a["ts"], a["win_mask"])
+        c, _ = jax.lax.scan(step, init, xs)
+        return {"acc": c["acc"], "win": c["win"],
+                "tag_payload": c["tag_pay"], "tag_demand": c["tag_dem"],
+                "cap_changes": c["n_changes"], "vmotions": c["vmotions"],
+                "power_ons": c["power_ons"], "power_offs": c["power_offs"],
+                "max_total_cap": c["over_budget"],
+                "over_budget": c["over_budget"],
+                "final_caps": c["caps"], "final_on": c["on"],
+                "slot_pressure": c["slot_pressure"]}
+
+    program = build_churn if static.churn else build_static
     return jax.jit(program)
 
 
@@ -258,17 +655,25 @@ class BatchedSimulator:
     """Simulate S scenario cells as one compiled program.
 
     Cells must share the time grid (``duration_s``/``tick_s``) and DRS
-    schedule; host counts, VM counts, traces, budgets, policies, and windows
-    vary freely per cell (smaller cells are padded).
+    schedule; host counts, VM counts, traces, budgets, policies, windows,
+    DPM flags, and scripted power events vary freely per cell (smaller
+    cells are padded).
 
     ``waterfill_iters`` defaults to 100: the lockstep bisection reaches its
     float64 fixed point in ~60 trips for realistic magnitudes, so this
     matches the NumPy primitive's 200-trip result exactly at half the cost.
+
+    ``slot_slack`` over-provisions the per-host VM slot axis for
+    capacity-churn grids so DPM evacuations have somewhere to land; if a
+    run's consolidation would exceed it, the engine raises after the run
+    (``slot_pressure``) rather than silently diverging.
     """
 
     def __init__(self, cells: Sequence[BatchCell],
                  balance: Optional[kernels.BalanceParams] = None,
-                 waterfill_iters: int = 100):
+                 dpm: Optional[kernels.DPMParams] = None,
+                 waterfill_iters: int = 100,
+                 slot_slack: float = 2.0):
         if not cells:
             raise ValueError("no cells")
         self.cells = list(cells)
@@ -279,14 +684,51 @@ class BatchedSimulator:
                     and c.config.drs_period_s == cfg.drs_period_s
                     and c.config.drs_first_at_s == cfg.drs_first_at_s)
             if not same:
-                raise ValueError(
+                raise BatchUnsupported(
                     f"cell {c.name!r} disagrees on the shared time grid")
         self.config = cfg
-        self._pack(balance or kernels.BalanceParams(), waterfill_iters)
+        self._churn = any(c.dpm_enabled or c.config.power_events
+                          for c in cells)
+        self._validate()
+        self._pack(balance or kernels.BalanceParams(),
+                   dpm or kernels.DPMParams(), waterfill_iters, slot_slack)
+
+    # ---------------------------------------------------------- validation
+    def _validate(self) -> None:
+        """Reject regimes the jitted program cannot replay exactly, loudly
+        (the alternative -- freezing the unsupported dimension -- produces
+        plausible-looking wrong results)."""
+        cfg = self.config
+        for c in self.cells:
+            if c.dpm_enabled and not c.config.instant_migrations:
+                raise BatchUnsupported(
+                    f"cell {c.name!r}: DPM in the batched engine models "
+                    "evacuation as an atomic slot remap; set "
+                    "config.instant_migrations=True (and use the same on "
+                    "the reference engine) or run it on the vector engine")
+            if c.dpm_enabled and c.snapshot.rules:
+                raise BatchUnsupported(
+                    f"cell {c.name!r}: DPM evacuation with placement rules "
+                    "is not batched; run this cell on the vector engine")
+            if self._churn:
+                same = (c.config.power_on_latency_s
+                        == cfg.power_on_latency_s
+                        and c.config.power_off_latency_s
+                        == cfg.power_off_latency_s)
+                if not same:
+                    raise BatchUnsupported(
+                        f"cell {c.name!r} disagrees on power latencies "
+                        "(shared across a capacity-churn batch)")
+            for t, host_id, _ in c.config.power_events:
+                if host_id not in c.snapshot.hosts:
+                    raise BatchUnsupported(
+                        f"cell {c.name!r}: power event at t={t} targets "
+                        f"unknown host {host_id!r}")
 
     # ------------------------------------------------------------- packing
     def _pack(self, balance: kernels.BalanceParams,
-              waterfill_iters: int) -> None:
+              dpm: kernels.DPMParams, waterfill_iters: int,
+              slot_slack: float) -> None:
         cells = self.cells
         S = len(cells)
         H = max(len(c.snapshot.hosts) for c in cells)
@@ -294,10 +736,10 @@ class BatchedSimulator:
         T = ts.shape[0]
 
         # Pass 1: per-cell VM columns and the dense slot assignment.  Each
-        # cell's *active* VMs (powered on, placed on a powered-on host) are
-        # grouped under their resident host; inactive VMs contribute nothing
-        # to delivery or accounting, exactly as the object engines'
-        # active-mask semantics.  All per-VM work is vectorized: one stable
+        # cell's placed, powered-on VMs are grouped under their resident
+        # host (a VM on a powered-off host occupies a slot but delivers
+        # nothing until the host comes on -- the object engines'
+        # active-mask semantics).  All per-VM work is vectorized: one stable
         # sort by host index yields every VM's (host, slot) coordinate.
         prepped = []
         n_bps = 1
@@ -306,13 +748,10 @@ class BatchedSimulator:
             vms = list(snap.vms.values())
             vm_ids = [v.vm_id for v in vms]
             host_idx = {hid: j for j, hid in enumerate(snap.hosts)}
-            host_on = np.array([h.powered_on
-                                for h in snap.hosts.values()], dtype=bool)
             host_j = np.array([host_idx.get(v.host_id, -1) for v in vms],
                               dtype=np.int64)
             act = np.array([v.powered_on for v in vms], dtype=bool)
             act &= host_j >= 0
-            act[act] &= host_on[host_j[act]]
             order = np.nonzero(act)[0]
             hj = host_j[order]
             srt = np.argsort(hj, kind="stable")
@@ -324,7 +763,7 @@ class BatchedSimulator:
             bank = TraceBank.from_traces(c.traces, vm_ids)
             if bank.fallback:
                 bad = [vm_ids[r] for r, _ in bank.fallback]
-                raise ValueError(
+                raise BatchUnsupported(
                     f"cell {c.name!r}: traces without a declarative spec "
                     f"cannot be batched: {bad[:5]}")
             if bank.rows.size:
@@ -332,32 +771,42 @@ class BatchedSimulator:
             prepped.append((vms, bank, order, hj, slot, counts))
         J = max(max((int(p[5].max()) for p in prepped if p[5].size),
                     default=1), 1)
+        if self._churn and any(c.dpm_enabled for c in cells):
+            # Headroom for DPM consolidation: evacuees land in free slots.
+            J = int(math.ceil(J * max(slot_slack, 1.0)))
 
         tag_names = sorted({t for c in cells
                             for v in c.snapshot.vms.values() for t in v.tags})
         G = len(tag_names)
+        E = max([len(c.config.power_events) for c in cells] + [1])
 
         def host_col(fill=0.0):
             return np.full((S, H), fill, dtype=np.float64)
 
         a = {
             "on": np.zeros((S, H), dtype=bool),
+            "exists": np.zeros((S, H), dtype=bool),
             # Padded hosts keep a nonzero idle->peak range so Eq. 3 stays
-            # finite; the `on` mask zeroes everything they would produce.
+            # finite; the `on`/`exists` masks zero everything they produce.
             "idle": host_col(1.0), "peak": host_col(2.0),
             "cap_peak": host_col(1.0), "hyp": host_col(0.0),
             "host_mem": host_col(0.0), "caps0": host_col(0.0),
             "cpu_res": host_col(0.0),
             "budget": np.zeros(S), "enabled": np.zeros(S, dtype=bool),
+            "dpm": np.zeros(S, dtype=bool),
             "active": np.zeros((S, H, J), dtype=bool),
             "reservation": np.zeros((S, H, J)),
             "limit": np.full((S, H, J), np.inf),
             "weights": np.full((S, H, J), 1e-12),
-            "tag_masks": np.zeros((G, S, H, J), dtype=bool),
+            "migratable": np.ones((S, H, J), dtype=bool),
+            "tag_masks": np.zeros((S, H, J, G), dtype=bool),
             "bps": np.full((S, H, J, n_bps), np.inf),
             "cpu_vals": np.zeros((S, H, J, n_bps)),
             "mem_vals": np.zeros((S, H, J, n_bps)),
             "period": np.full((S, H, J), np.inf),
+            "ev_t": np.full((S, E), np.inf),
+            "ev_host": np.zeros((S, E), dtype=np.int64),
+            "ev_on": np.zeros((S, E), dtype=bool),
             "ts": ts, "drs_mask": drs_mask,
             "win_mask": np.zeros((T, S), dtype=bool),
         }
@@ -366,8 +815,10 @@ class BatchedSimulator:
         for i, c in enumerate(cells):
             snap = c.snapshot
             vms, bank, order, hj, slot, counts = prepped[i]
+            host_idx = {hid: j for j, hid in enumerate(snap.hosts)}
             for j, h in enumerate(snap.hosts.values()):
                 a["on"][i, j] = h.powered_on
+                a["exists"][i, j] = True
                 a["idle"][i, j] = h.spec.power_idle
                 a["peak"][i, j] = h.spec.power_peak
                 a["cap_peak"][i, j] = h.spec.capacity_peak
@@ -381,11 +832,16 @@ class BatchedSimulator:
             a["limit"][i, hj, slot] = np.array([v.limit for v in vms])[order]
             a["weights"][i, hj, slot] = np.maximum(
                 np.array([v.shares for v in vms]), 1e-12)[order]
-            a["cpu_res"][i, :] = np.bincount(hj, weights=res[order],
-                                             minlength=H)
+            a["migratable"][i, hj, slot] = np.array(
+                [v.migratable for v in vms], dtype=bool)[order]
+            host_on = np.zeros(H, dtype=bool)
+            host_on[:len(snap.hosts)] = [h.powered_on
+                                         for h in snap.hosts.values()]
+            a["cpu_res"][i, :] = np.where(
+                host_on, np.bincount(hj, weights=res[order], minlength=H), 0.0)
             for g, tag in enumerate(tag_names):
                 tagged = np.array([tag in v.tags for v in vms], dtype=bool)
-                a["tag_masks"][g, i, hj, slot] = tagged[order]
+                a["tag_masks"][i, hj, slot, g] = tagged[order]
             # Demand traces in TraceBank's padded step-function layout;
             # trace-less VMs freeze at their initial demand.
             dem0 = np.array([v.demand for v in vms])
@@ -409,15 +865,25 @@ class BatchedSimulator:
             a["period"][i, hj, slot] = period[order]
             a["budget"][i] = snap.power_budget
             a["enabled"][i] = c.powercap_enabled
+            a["dpm"][i] = c.dpm_enabled
+            for e, (ev_t, host_id, on) in enumerate(
+                    sorted(c.config.power_events)):
+                a["ev_t"][i, e] = ev_t
+                a["ev_host"][i, e] = host_idx[host_id]
+                a["ev_on"][i, e] = bool(on)
             if c.window is not None:
                 w0, w1 = c.window
                 a["win_mask"][:, i] = (w0 <= ts) & (ts < w1)
         self._arrays = a
         self._tag_names = tag_names
         self._static = _StaticSpec(
-            n_cells=S, n_hosts=H, n_slots=J, n_tags=G,
+            n_cells=S, n_hosts=H, n_slots=J, n_tags=G, n_events=E,
             tick_s=self.config.tick_s, waterfill_iters=waterfill_iters,
-            balance=balance)
+            balance=balance, churn=self._churn, dpm=dpm,
+            drs_period_s=self.config.drs_period_s,
+            drs_first_at_s=self.config.drs_first_at_s,
+            power_on_latency_s=self.config.power_on_latency_s,
+            power_off_latency_s=self.config.power_off_latency_s)
         self._ticks = T
 
     # ------------------------------------------------------------- running
@@ -434,8 +900,17 @@ class BatchedSimulator:
                    for k, v in out.items()}
         wall = time.perf_counter() - t0
 
-        # The tick-level budget invariant, checked in one shot post-hoc.
-        over = out["max_total_cap"] - self._arrays["budget"]
+        # Post-hoc invariants, checked in one shot for the whole grid.
+        if bool(out["slot_pressure"].any()):
+            bad = [self.cells[i].name
+                   for i in np.nonzero(out["slot_pressure"])[0]]
+            raise RuntimeError(
+                f"slot capacity bound an evacuation decision in cells "
+                f"{bad[:5]}: repack with a larger slot_slack")
+        if self._static.churn:
+            over = out["over_budget"]
+        else:
+            over = out["max_total_cap"] - self._arrays["budget"]
         assert float(over.max()) <= 1e-6, (
             f"budget violated during execution: worst overshoot "
             f"{float(over.max()):.3f} W (cell "
@@ -450,11 +925,15 @@ class BatchedSimulator:
             mem_demand_mb_s=acc["mem_demand_mb_s"],
             energy_j=acc["energy_j"],
             cap_changes=out["cap_changes"],
+            vmotions=out["vmotions"],
+            power_ons=out["power_ons"],
+            power_offs=out["power_offs"],
             tag_names=self._tag_names,
             tag_payload=out["tag_payload"],
             tag_demand=out["tag_demand"],
             window_fields=out["win"],
             has_window=np.array([c.window is not None for c in self.cells]),
             final_caps=out["final_caps"],
+            final_on=out["final_on"],
             ticks=self._ticks,
             wall_s=wall)

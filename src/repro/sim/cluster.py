@@ -35,6 +35,17 @@ class SimConfig:
     power_on_latency_s: float = 120.0
     power_off_latency_s: float = 30.0
     record_timeline: bool = True
+    # Migrations complete at the tick they start, with no copy window and no
+    # vMotion CPU overhead.  This is the capacity-churn regime the batched
+    # engine models (evacuation as an atomic slot remap); enabling it here
+    # keeps the object/vector engines on the identical protocol.
+    instant_migrations: bool = False
+    # Scripted host lifecycle events -- ((t_s, host_id, powered_on), ...) --
+    # applied at the first tick with t >= t_s: maintenance windows, host
+    # failures, capacity arriving.  External to the manager: no actions are
+    # emitted and no budget is redistributed until the next DRS invocation
+    # reacts to the new powered-on capacity.
+    power_events: tuple = ()
 
 
 @dataclasses.dataclass
@@ -71,6 +82,8 @@ class Simulator:
         self.last_config_change = -1e18
         self.timeline: list = []
         self.events: list = []
+        self._power_events = sorted(self.config.power_events)
+        self._next_power_event = 0
         # Bumped whenever executed actions mutate placement, power state, or
         # caps; array-backed subclasses use it to refresh their columns.
         self._topology_version = 0
@@ -85,6 +98,41 @@ class Simulator:
     def _migration_duration(self, vm) -> float:
         mb = max(vm.mem_demand, 64.0)
         return max(mb / self.config.vmotion_rate_mb_s, self.config.tick_s)
+
+    def _apply_power_events(self, t: float) -> None:
+        """Scripted host lifecycle: external power state flips at their
+        scheduled tick (failures, maintenance).  Counts as a configuration
+        change for DPM's stability window, like any power action."""
+        while (self._next_power_event < len(self._power_events)
+               and self._power_events[self._next_power_event][0] <= t):
+            _, host_id, on = self._power_events[self._next_power_event]
+            self._next_power_event += 1
+            host = self.live.hosts[host_id]
+            if host.powered_on != bool(on):
+                if on:
+                    # A returning host boots with at most the unallocated
+                    # budget as its cap (the manager may have reabsorbed
+                    # its watts while it was away); the next DRS redivvy
+                    # funds its reserved floor.  Grants held by hosts with
+                    # a power-on still in flight count as allocated, like
+                    # the budget invariant counts them.
+                    total = sum(h.power_cap
+                                for h in self.live.powered_on_hosts())
+                    for p in self.pending:
+                        if p.action.kind == "power_on" and \
+                                p.state in ("waiting", "running"):
+                            tgt = self.live.hosts[p.action.target]
+                            if not tgt.powered_on:
+                                total += tgt.power_cap
+                    host.power_cap = min(
+                        host.power_cap,
+                        max(self.live.power_budget - total, 0.0))
+                host.powered_on = bool(on)
+                self._topology_version += 1
+                self.last_config_change = t
+                self.events.append(
+                    (t, f"power_event {host_id} "
+                        f"{'on' if on else 'off'}"))
 
     def _prereqs_done(self, p: _Pending) -> bool:
         return all(pid in self.done_ids for pid in p.action.prereqs)
@@ -143,12 +191,22 @@ class Simulator:
                 self.done_ids.add(a.action_id)
                 self.events.append((t, f"cap {a.target}={a.value:.0f}W"))
             elif a.kind == "migrate":
-                if running_migrations >= self.config.max_concurrent_migrations:
-                    continue
                 vm = self.live.vms[a.target]
                 if vm.host_id == a.dest:   # already there (stale rec)
                     p.state = "done"
                     self.done_ids.add(a.action_id)
+                    continue
+                if self.config.instant_migrations:
+                    # Atomic remap: no copy window, no endpoint overhead.
+                    vm.host_id = a.dest
+                    self._topology_version += 1
+                    self.acc.vmotions += 1
+                    if self.window_acc is not None and self._in_window(t):
+                        self.window_acc.vmotions += 1
+                    p.state = "done"
+                    self.done_ids.add(a.action_id)
+                    continue
+                if running_migrations >= self.config.max_concurrent_migrations:
                     continue
                 p.state = "running"
                 p.end_time = t + self._migration_duration(vm)
@@ -256,6 +314,7 @@ class Simulator:
         next_drs = cfg.drs_first_at_s
         t = 0.0
         while t < cfg.duration_s:
+            self._apply_power_events(t)
             self._update_demands(t)
             self._complete_actions(t)
             self._start_actions(t)

@@ -2,8 +2,11 @@
 
 :class:`VectorSimulator` runs the exact same protocol as
 :class:`repro.sim.cluster.Simulator` -- identical action execution, manager
-invocations, accounting semantics -- but keeps host caps, VM demands, and
-Eq. 1 power accounting in struct-of-arrays form.  Each tick costs one
+invocations (both adapt over :class:`repro.core.manager_core.ManagerCore`
+through the ``CloudPowerCapManager`` facade), accounting semantics,
+scripted power events, and the host lifecycle (DPM power-on/off with
+evacuations) -- but keeps host caps, VM demands, and Eq. 1 power
+accounting in struct-of-arrays form.  Each tick costs one
 batched-waterfill delivery pass plus a handful of ``bincount`` reductions
 over all VMs, instead of a Python loop over hosts and VMs; a 1,000-host /
 10,000-VM cluster ticks in milliseconds.

@@ -2,17 +2,24 @@
 
 The paper evaluates CloudPowerCap on 3 hosts / 30 VMs; this module
 generates whole families of scenarios -- cluster size x rack budget x
-spike pattern x host-spec mix -- and runs each policy on the vectorized
-engine, reporting throughput (ticks/sec) alongside the paper's payload /
-power metrics.  It feeds the ``sweep_scale`` benchmark entry
-(``python -m benchmarks.run``) whose headline cell is a 1,000-host /
-10,000-VM cluster.
+spike pattern x host-spec mix x capacity churn -- and runs each policy on
+the vectorized engine, reporting throughput (ticks/sec) alongside the
+paper's payload / power metrics.  It feeds the ``sweep_scale`` /
+``sweep_grid`` / ``sweep_grid_dpm`` benchmark entries
+(``python -m benchmarks.run``).
 
 Design notes:
-  * DPM and migration search are disabled in sweeps (``max_moves=0``):
-    at thousand-host scale the interesting regime is cap-only management
-    (cf. prediction-based oversubscription at Azure); migration search at
-    this scale is its own future work item.
+  * Migration *search* stays disabled in sweeps (``max_moves=0``): at
+    thousand-host scale the interesting regimes are cap-only management
+    and capacity churn (cf. prediction-based oversubscription at Azure);
+    full migration search at this scale is its own future work item.
+  * Capacity-churn families (``SweepSpec.churn``) exercise the host
+    lifecycle: ``dpm`` (a demand valley consolidates and powers a host
+    off, a later burst powers it back on with Powercap Redistribution
+    funding the cap), ``maintenance`` (a scripted power-off/power-on
+    window), and ``failure`` (a scripted power-off that stays down, with
+    DPM free to bring capacity back).  Churn cells run with instantaneous
+    migrations so all three engines replay the identical protocol.
   * Scenarios use zero reservations and default shares so admission
     control stays trivial and the sweep isolates powercap behavior.
 """
@@ -21,6 +28,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Optional, Sequence
 
 import numpy as np
@@ -44,6 +52,7 @@ SMALL_HOST = HostPowerSpec(
 )
 
 SPIKES = ("flat", "burst", "step", "prime")
+CHURNS = ("none", "dpm", "maintenance", "failure")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -56,6 +65,7 @@ class SweepSpec:
     rack_budget_w: Optional[float] = None   # default: 250 W per host
     spike: str = "burst"                    # one of SPIKES
     heterogeneous: bool = False             # mix PAPER_HOST with SMALL_HOST
+    churn: str = "none"                     # one of CHURNS
     duration_s: float = 1200.0
     tick_s: float = 10.0
     drs_period_s: float = 300.0
@@ -69,6 +79,11 @@ class SweepSpec:
     @property
     def n_vms(self) -> int:
         return self.n_hosts * self.vms_per_host
+
+    @property
+    def dpm_enabled(self) -> bool:
+        """Churn families where the manager itself drives the lifecycle."""
+        return self.churn in ("dpm", "failure")
 
 
 def _specs_for(spec: SweepSpec) -> list[HostPowerSpec]:
@@ -88,6 +103,8 @@ def build_sweep(spec: SweepSpec, policy: str
     """
     if spec.spike not in SPIKES:
         raise ValueError(f"unknown spike pattern {spec.spike!r}")
+    if spec.churn not in CHURNS:
+        raise ValueError(f"unknown churn family {spec.churn!r}")
     host_specs = _specs_for(spec)
     budget = spec.budget
     total_peak = sum(s.power_peak for s in host_specs)
@@ -128,6 +145,17 @@ def build_sweep(spec: SweepSpec, policy: str
                             host_id=host_id)
         vms.append(vm)
         mem = 2 * 1024.0
+        if spec.churn == "dpm":
+            # Valley-then-burst: the middle third idles the cluster into
+            # DPM's power-off band; the final third runs hot enough to trip
+            # the power-on trigger, so Powercap Redistribution must free a
+            # consolidating host's budget and later fund its return.
+            traces[vm.vm_id] = workloads.step_trace([
+                (0.0, base[v], mem),
+                (spec.duration_s / 3.0, 0.2 * base[v], mem),
+                (2.0 * spec.duration_s / 3.0, 2.2 * base[v] + 1500.0, mem),
+            ])
+            continue
         if spec.spike == "flat":
             traces[vm.vm_id] = workloads.constant(base[v], mem)
         elif spec.spike == "burst":
@@ -154,17 +182,29 @@ def build_sweep(spec: SweepSpec, policy: str
                 prime_start_frac=float(phase_frac[v]), prime_frac=0.4)
 
     snap = ClusterSnapshot(hosts, vms, power_budget=budget)
+    power_events: tuple = ()
+    if spec.churn == "maintenance":
+        # One powered-on host leaves for the middle third and returns.
+        power_events = ((spec.duration_s / 3.0, on_hosts[0], False),
+                        (2.0 * spec.duration_s / 3.0, on_hosts[0], True))
+    elif spec.churn == "failure":
+        # Abrupt capacity loss at mid-run; DPM may repair it.
+        power_events = ((spec.duration_s / 2.0, on_hosts[0], False),)
     cfg = SimConfig(duration_s=spec.duration_s, tick_s=spec.tick_s,
                     drs_period_s=spec.drs_period_s,
                     drs_first_at_s=spec.drs_period_s,
-                    record_timeline=False)
+                    record_timeline=False,
+                    instant_migrations=spec.dpm_enabled,
+                    power_events=power_events)
     return snap, traces, cfg
 
 
-def _sweep_manager(policy: str) -> CloudPowerCapManager:
+def _sweep_manager(policy: str,
+                   spec: Optional[SweepSpec] = None) -> CloudPowerCapManager:
     cfg = ManagerConfig(powercap_enabled=(policy == "cpc"),
-                        dpm_enabled=False)
-    # Cap-only management at scale: no migration search (see module note).
+                        dpm_enabled=bool(spec and spec.dpm_enabled))
+    # No migration *search* at scale (see module note); DPM's targeted
+    # evacuations still run for the churn families.
     cfg.balancer = balancer_mod.BalancerConfig(max_moves=0)
     return CloudPowerCapManager(cfg)
 
@@ -181,12 +221,14 @@ class SweepCellResult:
     energy_j: float
     cap_changes: int
     vmotions: int
+    power_ons: int = 0
+    power_offs: int = 0
 
 
 def run_cell(spec: SweepSpec, policy: str,
              engine: str = "vector") -> SweepCellResult:
     snap, traces, cfg = build_sweep(spec, policy)
-    manager = _sweep_manager(policy)
+    manager = _sweep_manager(policy, spec)
     sim = ENGINES[engine](snap, manager, traces, cfg)
     t0 = time.perf_counter()
     result = sim.run()
@@ -200,21 +242,39 @@ def run_cell(spec: SweepSpec, policy: str,
         cpu_payload_mhz_s=acc.cpu_payload_mhz_s,
         energy_j=acc.energy_j,
         cap_changes=acc.cap_changes,
-        vmotions=acc.vmotions)
+        vmotions=acc.vmotions,
+        power_ons=acc.power_ons,
+        power_offs=acc.power_offs)
 
 
 def run_sweep(specs: Sequence[SweepSpec],
               policies: Sequence[str] = POLICIES,
-              engine: str = "vector"
+              engine: str = "vector",
+              on_unsupported: str = "raise"
               ) -> dict[str, dict[str, SweepCellResult]]:
     """Run the grid; returns results[spec.name][policy].
 
     ``engine="batch"`` routes the whole grid through the jit-compiled
     :class:`repro.sim.batch.BatchedSimulator` -- one program for every
     (spec, policy) cell -- instead of cell-at-a-time Python execution.
+    A grid requesting a regime the batched engine cannot replay exactly
+    raises :class:`repro.sim.batch.BatchUnsupported` (the default), or --
+    with ``on_unsupported="fallback"`` -- falls back to the sequential
+    ``VectorSimulator`` path with a warning, never silently freezing the
+    unsupported dimension.
     """
     if engine == "batch":
-        return run_sweep_batched(specs, policies)
+        from repro.sim.batch import BatchUnsupported
+        try:
+            return run_sweep_batched(specs, policies)
+        except BatchUnsupported as e:
+            if on_unsupported != "fallback":
+                raise
+            warnings.warn(
+                f"batched engine cannot run this grid ({e}); falling back "
+                "to the sequential vector engine", RuntimeWarning,
+                stacklevel=2)
+            engine = "vector"
     out: dict[str, dict[str, SweepCellResult]] = {}
     for spec in specs:
         out[spec.name] = {p: run_cell(spec, p, engine=engine)
@@ -223,14 +283,15 @@ def run_sweep(specs: Sequence[SweepSpec],
 
 
 def run_sweep_batched(specs: Sequence[SweepSpec],
-                      policies: Sequence[str] = POLICIES
+                      policies: Sequence[str] = POLICIES,
+                      slot_slack: float = 3.0
                       ) -> dict[str, dict[str, SweepCellResult]]:
     """One jitted program over the whole (spec x policy) grid.
 
     All specs must share ``duration_s``/``tick_s``/``drs_period_s`` (true
     for :func:`scenario_families` grids); cluster size, budget, spike
-    family, host mix, and policy vary per cell.  Wall time is measured for
-    the batch and attributed evenly: per-cell ``wall_s`` is
+    family, host mix, churn family, and policy vary per cell.  Wall time is
+    measured for the batch and attributed evenly: per-cell ``wall_s`` is
     ``batch_wall / n_cells``, so ``ticks_per_s`` reads as aggregate
     throughput.
     """
@@ -242,9 +303,10 @@ def run_sweep_batched(specs: Sequence[SweepSpec],
             snap, traces, cfg = build_sweep(spec, p)
             cells.append(BatchCell(
                 name=f"{spec.name}/{p}", snapshot=snap, traces=traces,
-                config=cfg, powercap_enabled=(p == "cpc")))
+                config=cfg, powercap_enabled=(p == "cpc"),
+                dpm_enabled=spec.dpm_enabled))
             keys.append((spec, p))
-    sim = BatchedSimulator(cells)
+    sim = BatchedSimulator(cells, slot_slack=slot_slack)
     t0 = time.perf_counter()
     res = sim.run()
     wall = time.perf_counter() - t0
@@ -260,7 +322,9 @@ def run_sweep_batched(specs: Sequence[SweepSpec],
             cpu_payload_mhz_s=acc.cpu_payload_mhz_s,
             energy_j=acc.energy_j,
             cap_changes=acc.cap_changes,
-            vmotions=0)
+            vmotions=acc.vmotions,
+            power_ons=acc.power_ons,
+            power_offs=acc.power_offs)
     return out
 
 
@@ -268,20 +332,23 @@ def scenario_families(sizes: Sequence[int] = (10, 100, 1000),
                       budgets_per_host_w: Sequence[float] = (250.0,),
                       spikes: Sequence[str] = ("burst", "prime"),
                       heterogeneous: Sequence[bool] = (False, True),
+                      churns: Sequence[str] = ("none",),
                       duration_s: float = 1200.0,
                       tick_s: float = 10.0) -> list[SweepSpec]:
-    """The full scenario grid: size x budget x spike x host mix."""
+    """The full scenario grid: size x budget x spike x host mix x churn."""
     specs = []
     for n in sizes:
         for b in budgets_per_host_w:
             for spike in spikes:
                 for het in heterogeneous:
-                    name = (f"h{n}_b{int(b)}w_{spike}"
-                            f"{'_het' if het else ''}")
-                    specs.append(SweepSpec(
-                        name=name, n_hosts=n, rack_budget_w=b * n,
-                        spike=spike, heterogeneous=het,
-                        duration_s=duration_s, tick_s=tick_s))
+                    for churn in churns:
+                        name = (f"h{n}_b{int(b)}w_{spike}"
+                                f"{'_het' if het else ''}"
+                                f"{'' if churn == 'none' else '_' + churn}")
+                        specs.append(SweepSpec(
+                            name=name, n_hosts=n, rack_budget_w=b * n,
+                            spike=spike, heterogeneous=het, churn=churn,
+                            duration_s=duration_s, tick_s=tick_s))
     return specs
 
 

@@ -4,21 +4,32 @@ The jit-compiled grid engine replays the paper's three evaluation scenarios
 (all three policies packed as one batch per scenario) in the cap-only
 management regime the sweeps isolate (no DPM, no migration search) and must
 match the NumPy vector engine cell by cell: exact cap-change counts, float
-tolerance for the payload/energy integrals.  Also covers the JAX waterfill
-primitive against the NumPy one and the engine's packing constraints.
+tolerance for the payload/energy integrals.  Capacity-churn parity pins the
+full host-lifecycle protocol -- DPM power-off with evacuation, Powercap
+Redistribution funding a burst-driven power-on, scripted power events --
+with exact cap-change / power-on / power-off / vmotion counts.  Also covers
+the JAX waterfill primitive against the NumPy one and the engine's packing
+constraints.
 """
 
 import numpy as np
 import pytest
 
+from repro.core.kernels import DPMParams
 from repro.core.manager import CloudPowerCapManager, ManagerConfig
+from repro.core.power_model import PAPER_HOST
 from repro.drs import balancer as balancer_mod
-from repro.sim.batch import BatchCell, BatchedSimulator
+from repro.drs import dpm as dpm_mod
+from repro.drs.snapshot import ClusterSnapshot, Host, VirtualMachine
+from repro.sim import workloads
+from repro.sim.batch import BatchCell, BatchedSimulator, BatchUnsupported
+from repro.sim.cluster import SimConfig
 from repro.sim.engine import VectorSimulator
 from repro.sim.experiments import POLICIES, SCENARIOS
 
 FLOAT_FIELDS = ("cpu_payload_mhz_s", "cpu_demand_mhz_s", "mem_payload_mb_s",
                 "mem_demand_mb_s", "energy_j")
+INT_FIELDS = ("cap_changes", "vmotions", "power_ons", "power_offs")
 
 
 def _cap_only_manager(policy: str) -> CloudPowerCapManager:
@@ -85,6 +96,164 @@ def test_flexible_scenario_parity():
     res = bsim.run()
     for i, policy in enumerate(POLICIES):
         _assert_cell_parity(refs[policy], res, i)
+
+
+# ------------------------------------------------------ capacity churn
+def _churn_build(budget_per_host=300.0):
+    """Paper-Sec.-V-C-style valley-then-burst on 3 hosts / 30 VMs with
+    budget headroom: DPM consolidates and powers host0 off mid-run, the
+    burst trips the power-on trigger, and Powercap Redistribution funds
+    host0's return from the unallocated pool plus donors."""
+    hosts = [Host(f"host{i}", PAPER_HOST, power_cap=250.0)
+             for i in range(3)]
+    vms, traces = [], {}
+    for i in range(30):
+        vm = VirtualMachine(vm_id=f"vm{i}", vcpus=1, memory_mb=8 * 1024,
+                            host_id=f"host{i // 10}")
+        vms.append(vm)
+        traces[vm.vm_id] = workloads.step_trace([
+            (0.0, 1200.0, 2 * 1024),
+            (700.0, 300.0, 2 * 1024),
+            (1400.0, 2400.0, 2 * 1024),
+        ])
+    snap = ClusterSnapshot(hosts, vms, power_budget=3 * budget_per_host)
+    cfg = SimConfig(duration_s=2100.0, drs_first_at_s=300.0,
+                    record_timeline=False, instant_migrations=True)
+    return snap, traces, cfg
+
+
+def _churn_manager(policy: str) -> CloudPowerCapManager:
+    cfg = ManagerConfig(powercap_enabled=(policy == "cpc"),
+                        dpm_enabled=True)
+    cfg.dpm = dpm_mod.DPMConfig(stable_window_s=150.0)
+    cfg.balancer = balancer_mod.BalancerConfig(max_moves=0)
+    return CloudPowerCapManager(cfg)
+
+
+def _churn_pair(policies=("cpc", "static")):
+    refs, cells = {}, []
+    for policy in policies:
+        snap, traces, cfg = _churn_build()
+        sim = VectorSimulator(snap, _churn_manager(policy), traces, cfg)
+        refs[policy] = sim.run()
+        snap2, traces2, cfg2 = _churn_build()
+        cells.append(BatchCell(
+            name=policy, snapshot=snap2, traces=traces2, config=cfg2,
+            powercap_enabled=(policy == "cpc"), dpm_enabled=True))
+    bsim = BatchedSimulator(cells, dpm=DPMParams(stable_window_s=150.0),
+                            slot_slack=3.0)
+    return refs, bsim
+
+
+def test_churn_power_off_then_on_parity():
+    """Acceptance: the power-off -> burst -> funded power-on lifecycle runs
+    end-to-end in one jitted program with exact action-count and
+    float-tolerance energy parity against VectorSimulator."""
+    policies = ("cpc", "static")
+    refs, bsim = _churn_pair(policies)
+    res = bsim.run()
+    for i, policy in enumerate(policies):
+        ref, acc = refs[policy], res.accumulators(i)
+        for f in INT_FIELDS:
+            assert getattr(acc, f) == getattr(ref.acc, f), (policy, f)
+        for f in FLOAT_FIELDS:
+            np.testing.assert_allclose(getattr(acc, f),
+                                       getattr(ref.acc, f),
+                                       rtol=1e-9, err_msg=(policy, f))
+    # The scenario must actually churn: a power-off AND a power-on, with
+    # the cpc cell's power-on funded by emitted cap changes.
+    cpc = res.accumulators(policies.index("cpc"))
+    assert cpc.power_offs == 1 and cpc.power_ons == 1
+    assert cpc.vmotions == 10           # host0's evacuation
+    assert cpc.cap_changes > 0
+    # host0 ends powered back on in both planes.
+    assert bool(res.final_on[policies.index("cpc"), 0])
+    assert refs["cpc"].final.hosts["host0"].powered_on
+
+
+def test_churn_scripted_events_parity():
+    """Scripted maintenance window (off at 700 s, back at 1400 s) replayed
+    identically by both engines, without DPM."""
+    refs, cells = {}, []
+    for policy in ("cpc", "static"):
+        snap, traces, cfg = _churn_build()
+        cfg.power_events = ((700.0, "host1", False), (1400.0, "host1", True))
+        sim = VectorSimulator(snap, _cap_only_manager(policy), traces, cfg)
+        refs[policy] = sim.run()
+        snap2, traces2, cfg2 = _churn_build()
+        cfg2.power_events = cfg.power_events
+        cells.append(BatchCell(
+            name=policy, snapshot=snap2, traces=traces2, config=cfg2,
+            powercap_enabled=(policy == "cpc")))
+    res = BatchedSimulator(cells).run()
+    for i, policy in enumerate(("cpc", "static")):
+        ref, acc = refs[policy], res.accumulators(i)
+        for f in INT_FIELDS:
+            assert getattr(acc, f) == getattr(ref.acc, f), (policy, f)
+        for f in FLOAT_FIELDS:
+            np.testing.assert_allclose(getattr(acc, f),
+                                       getattr(ref.acc, f),
+                                       rtol=1e-9, err_msg=(policy, f))
+        assert bool(res.final_on[i, 1])      # host1 came back
+
+
+def test_churn_event_boot_during_pending_power_off_parity():
+    """A scripted power-on that fires while a DPM power-off's deferred cap
+    actions are pending: the booted host's (clamped) cap must survive the
+    deferred application -- only hosts with emitted actions change."""
+    refs, cells = {}, []
+    for policy in ("cpc", "static"):
+        snaps = []
+        for _ in range(2):
+            snap, traces, cfg = _churn_build()
+            # A 4th standby host that a scripted event boots at 920 s --
+            # inside the [900, 930) pending window of the DPM power-off
+            # the valley triggers at the 900 s DRS tick.
+            snap.hosts["spare"] = Host("spare", PAPER_HOST,
+                                       power_cap=120.0, powered_on=False)
+            cfg.power_events = ((920.0, "spare", True),)
+            snaps.append((snap, traces, cfg))
+        snap, traces, cfg = snaps[0]
+        sim = VectorSimulator(snap, _churn_manager(policy), traces, cfg)
+        refs[policy] = sim.run()
+        snap2, traces2, cfg2 = snaps[1]
+        cells.append(BatchCell(
+            name=policy, snapshot=snap2, traces=traces2, config=cfg2,
+            powercap_enabled=(policy == "cpc"), dpm_enabled=True))
+    res = BatchedSimulator(cells, dpm=DPMParams(stable_window_s=150.0),
+                           slot_slack=3.0).run()
+    for i, policy in enumerate(("cpc", "static")):
+        ref, acc = refs[policy], res.accumulators(i)
+        assert ref.acc.power_offs >= 1          # the window was live
+        for f in INT_FIELDS:
+            assert getattr(acc, f) == getattr(ref.acc, f), (policy, f)
+        for f in FLOAT_FIELDS:
+            np.testing.assert_allclose(getattr(acc, f),
+                                       getattr(ref.acc, f),
+                                       rtol=1e-9, err_msg=(policy, f))
+        np.testing.assert_allclose(
+            res.final_caps[i, 3],
+            refs[policy].final.hosts["spare"].power_cap, rtol=1e-9)
+
+
+def test_dpm_cell_requires_instant_migrations():
+    snap, traces, cfg = _churn_build()
+    cfg.instant_migrations = False
+    with pytest.raises(BatchUnsupported, match="instant_migrations"):
+        BatchedSimulator([BatchCell("a", snap, traces, cfg,
+                                    dpm_enabled=True)])
+
+
+def test_slot_pressure_raises_instead_of_diverging():
+    """A slot axis too tight for the consolidation the scenario performs
+    must fail loudly, not silently diverge from the object plane."""
+    snap, traces, cfg = _churn_build()
+    cells = [BatchCell("a", snap, traces, cfg, powercap_enabled=True,
+                       dpm_enabled=True)]
+    bsim = BatchedSimulator(cells, dpm=DPMParams(stable_window_s=150.0),
+                            slot_slack=1.0)
+    with pytest.raises(RuntimeError, match="slot_slack"):
+        bsim.run()
 
 
 def test_batch_requires_uniform_time_grid():

@@ -1,0 +1,135 @@
+"""DPM edge cases: triggers, evacuation search, and capacity projection.
+
+Deterministic companions to the trigger tests in ``test_drs.py``: the
+power-on/power-off priority when both candidates exist, evacuations with no
+viable target, the stability window against recent configuration changes,
+and the ``capacity_at_util`` guards (powered-off hosts, zero demand).
+"""
+
+import pytest
+
+from repro.core.power_model import PAPER_HOST
+from repro.drs import dpm
+from repro.drs.snapshot import ClusterSnapshot, Host, VirtualMachine
+
+
+def _cluster(demands_per_host, cap=250.0, standby=0, mem_demand=1024.0,
+             migratable=True, memory_mb=8 * 1024):
+    """One host per entry in ``demands_per_host`` (list of per-VM demands),
+    plus ``standby`` powered-off hosts with a zero cap."""
+    hosts, vms = [], []
+    for i, dems in enumerate(demands_per_host):
+        hosts.append(Host(f"h{i}", PAPER_HOST, power_cap=cap))
+        for k, d in enumerate(dems):
+            vms.append(VirtualMachine(
+                vm_id=f"vm{i}_{k}", demand=d, mem_demand=mem_demand,
+                memory_mb=memory_mb, host_id=f"h{i}",
+                migratable=migratable))
+    for s in range(standby):
+        hosts.append(Host(f"standby{s}", PAPER_HOST, power_cap=0.0,
+                          powered_on=False))
+    budget = cap * len(demands_per_host)
+    return ClusterSnapshot(hosts, vms, power_budget=budget)
+
+
+def _util_demand(cap, util, n_vms):
+    return util * PAPER_HOST.managed_capacity(cap) / n_vms
+
+
+# ------------------------------------------------------- trigger priority
+def test_simultaneous_candidates_power_on_wins():
+    """One hot host and every *other* host idle: the power-on trigger takes
+    priority over consolidation (run_dpm returns early)."""
+    hot = [_util_demand(250.0, 0.95, 2)] * 2
+    idle = [_util_demand(250.0, 0.05, 2)] * 2
+    snap = _cluster([hot, idle, idle], standby=1)
+    cfg = dpm.DPMConfig(stable_window_s=0.0)
+    rec = dpm.run_dpm(snap, cfg, low_since={"h1": 0.0, "h2": 0.0}, now=1e5)
+    assert rec.power_on == "standby0"
+    assert rec.power_off is None
+    assert rec.evacuations == []
+
+
+def test_hot_cluster_without_standby_recommends_nothing():
+    hot = [_util_demand(250.0, 0.95, 2)] * 2
+    snap = _cluster([hot, hot], standby=0)
+    rec = dpm.run_dpm(snap, dpm.DPMConfig())
+    assert rec.power_on is None and rec.power_off is None
+
+
+# ------------------------------------------------------ stability window
+def test_stability_window_not_elapsed_blocks_power_off():
+    idle = [_util_demand(250.0, 0.05, 2)] * 2
+    snap = _cluster([idle, idle])
+    cfg = dpm.DPMConfig(stable_window_s=300.0)
+    low = {"h0": 0.0, "h1": 0.0}
+    assert dpm.run_dpm(snap, cfg, low_since=low, now=299.0).power_off is None
+    assert dpm.run_dpm(snap, cfg, low_since=low,
+                       now=300.0).power_off is not None
+
+
+def test_recent_config_change_restarts_the_window():
+    """A power action inside the window resets stability even when every
+    host has been low for longer."""
+    idle = [_util_demand(250.0, 0.05, 2)] * 2
+    snap = _cluster([idle, idle])
+    cfg = dpm.DPMConfig(stable_window_s=300.0)
+    low = {"h0": 0.0, "h1": 0.0}
+    rec = dpm.run_dpm(snap, cfg, low_since=low, now=1000.0,
+                      last_config_change=900.0)
+    assert rec.power_off is None
+    rec = dpm.run_dpm(snap, cfg, low_since=low, now=1000.0,
+                      last_config_change=700.0)
+    assert rec.power_off is not None
+
+
+# ---------------------------------------------------- evacuation failures
+def test_no_viable_evacuation_target_cancels_power_off():
+    """Targets sit just under the low band but above target_util headroom:
+    any evacuee would push them past the ceiling, so nothing is emitted."""
+    near = [_util_demand(250.0, 0.44, 4)] * 4
+    tiny = [_util_demand(250.0, 0.10, 2)] * 2
+    snap = _cluster([near, near, tiny])
+    cfg = dpm.DPMConfig(stable_window_s=0.0, target_util=0.45)
+    rec = dpm.run_dpm(snap, cfg, low_since={f"h{i}": 0.0 for i in range(3)},
+                      now=1e5)
+    assert rec.power_off is None
+    assert rec.evacuations == []
+
+
+def test_unmigratable_vm_cancels_power_off():
+    idle = [_util_demand(250.0, 0.05, 2)] * 2
+    snap = _cluster([idle, idle], migratable=False)
+    cfg = dpm.DPMConfig(stable_window_s=0.0)
+    rec = dpm.run_dpm(snap, cfg, low_since={"h0": 0.0, "h1": 0.0}, now=1e5)
+    assert rec.power_off is None
+
+
+def test_successful_power_off_evacuates_least_utilized_host():
+    light = [_util_demand(250.0, 0.04, 2)] * 2
+    heavy = [_util_demand(250.0, 0.20, 2)] * 2
+    snap = _cluster([heavy, light, heavy])
+    cfg = dpm.DPMConfig(stable_window_s=0.0)
+    rec = dpm.run_dpm(snap, cfg, low_since={f"h{i}": 0.0 for i in range(3)},
+                      now=1e5)
+    assert rec.power_off == "h1"
+    assert sorted(vm for vm, _ in rec.evacuations) == ["vm1_0", "vm1_1"]
+    assert all(dest in ("h0", "h2") for _, dest in rec.evacuations)
+
+
+# ------------------------------------------------------- capacity_at_util
+def test_capacity_at_util_excludes_powered_off_hosts():
+    """VMs parked on a powered-off host must not project phantom capacity."""
+    snap = _cluster([[1000.0, 1000.0]])
+    snap.hosts["h0"].powered_on = False
+    assert dpm.capacity_at_util(snap, "h0", 0.5) == 0.0
+
+
+def test_capacity_at_util_zero_demand_is_zero():
+    snap = _cluster([[0.0, 0.0]])
+    assert dpm.capacity_at_util(snap, "h0", 0.5) == 0.0
+
+
+def test_capacity_at_util_projects_demand():
+    snap = _cluster([[600.0, 400.0]])
+    assert dpm.capacity_at_util(snap, "h0", 0.5) == pytest.approx(2000.0)

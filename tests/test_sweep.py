@@ -123,6 +123,48 @@ def test_run_sweep_batched_matches_sequential():
                                        a.cpu_satisfaction, rtol=1e-9)
 
 
+def test_run_sweep_batched_matches_sequential_churn():
+    """Capacity-churn cells (DPM lifecycle, scripted events) reproduce the
+    sequential sweep exactly, including the power action counts."""
+    specs = scenario_families(sizes=(6,), budgets_per_host_w=(250.0,),
+                              spikes=("burst",), heterogeneous=(False,),
+                              churns=("none", "dpm", "maintenance",
+                                      "failure"),
+                              duration_s=1500.0, tick_s=30.0)
+    policies = ("cpc", "static")
+    seq = run_sweep(specs, policies=policies, engine="vector")
+    bat = run_sweep(specs, policies=policies, engine="batch")
+    churned = False
+    for name in seq:
+        for p in policies:
+            a, b = seq[name][p], bat[name][p]
+            assert (b.cap_changes, b.vmotions, b.power_ons, b.power_offs) \
+                == (a.cap_changes, a.vmotions, a.power_ons,
+                    a.power_offs), (name, p)
+            np.testing.assert_allclose(b.cpu_payload_mhz_s,
+                                       a.cpu_payload_mhz_s, rtol=1e-9)
+            np.testing.assert_allclose(b.energy_j, a.energy_j, rtol=1e-9)
+            churned |= a.power_ons + a.power_offs > 0
+    assert churned                       # the grid exercised the lifecycle
+
+
+def test_run_sweep_batch_fallback_on_unsupported():
+    """A grid the batched engine cannot replay exactly either raises or --
+    on request -- falls back to the vector engine with a warning."""
+    from repro.sim.batch import BatchUnsupported
+
+    specs = [SweepSpec(name="a", n_hosts=4, spike="flat", duration_s=300.0,
+                       tick_s=30.0),
+             SweepSpec(name="b", n_hosts=4, spike="flat", duration_s=600.0,
+                       tick_s=30.0)]         # mixed time grids
+    with pytest.raises(BatchUnsupported, match="time grid"):
+        run_sweep(specs, policies=("cpc",), engine="batch")
+    with pytest.warns(RuntimeWarning, match="falling back"):
+        res = run_sweep(specs, policies=("cpc",), engine="batch",
+                        on_unsupported="fallback")
+    assert set(res) == {"a", "b"}
+
+
 def test_run_sweep_batched_policy_separation():
     """CPC beats Static under host-correlated bursts on the batch engine."""
     spec = SweepSpec(name="sep", n_hosts=12, vms_per_host=8, spike="burst",
