@@ -46,6 +46,14 @@ def _grids():
             sizes=(20,), budgets_per_host_w=(250.0,),
             spikes=("burst",), heterogeneous=(False, True),
             churns=("dpm", "failure"), duration_s=1500.0, tick_s=30.0),
+        # Migration layer live: constraint-correction bursts and
+        # cap-blocked (Fig. 1a) corrections with the hill-climb balancer
+        # (see sweep_grid_rules).
+        "sweep_grid_rules": scenario_families(
+            sizes=(20,), budgets_per_host_w=(250.0,),
+            spikes=("burst",), heterogeneous=(False, True),
+            rules=("violation_burst", "cap_blocked"),
+            duration_s=600.0, tick_s=10.0),
     }
 
 

@@ -22,7 +22,7 @@ from __future__ import annotations
 
 from typing import NamedTuple
 
-from repro.drs.entitlement import waterfill_core
+from repro.drs.entitlement import waterfill_core, waterfill_dense
 
 #: Minimum cap delta that counts as a change -- must match the emission
 #: threshold in ``repro.drs.actions.order_cap_changes`` so the batched
@@ -55,6 +55,44 @@ class DPMParams(NamedTuple):
     low_util: float = 0.45         # power-off consideration band
     target_util: float = 0.45      # post-consolidation ceiling on targets
     stable_window_s: float = 300.0 # utilization must be low this long
+
+
+class MigrationParams(NamedTuple):
+    """Static configuration of the migration balancer (mirrors
+    ``repro.drs.balancer.BalancerConfig``)."""
+
+    imbalance_threshold: float = 0.05
+    max_moves: int = 16
+    min_goodness: float = 1e-3
+    cost_per_gb: float = 2e-4
+    contention_threshold: float = 0.9
+
+
+class RulesMeta(NamedTuple):
+    """Static shape of a grid's rule set (compile-time loop bounds)."""
+
+    n_groups: int = 0              # merged affinity groups
+    n_anti: int = 0                # anti-affinity rules
+    n_vmhost: int = 0              # VM-host rules
+    max_group_members: int = 0     # largest affinity group
+    max_anti_members: int = 0      # total anti-rule members
+
+    @property
+    def move_bound(self) -> int:
+        """Upper bound on constraint-correction moves per invocation."""
+        return (self.n_groups * self.max_group_members + self.n_vmhost
+                + self.max_anti_members)
+
+    @property
+    def any(self) -> bool:
+        return (self.n_groups + self.n_anti + self.n_vmhost) > 0
+
+
+#: Waterfill trips used by the migration kernels in *every* engine -- the
+#: object-plane adapters and the jitted batch program must bisect the same
+#: number of times so their entitlement scores (and therefore their greedy
+#: argmax decisions) agree bit-for-bit.
+MIGRATION_WATERFILL_ITERS = 100
 
 
 # ------------------------------------------------------------ power model
@@ -384,7 +422,7 @@ def power_off_reabsorb_caps(xp, hosts: HostCols, caps, off_idx, budget):
 
 def plan_evacuation(be, hosts: HostCols, caps, victim, occ, eff_slot,
                     mem_slot, res_slot, migratable, host_mem,
-                    target_util: float):
+                    target_util: float, allowed=None, anti=None):
     """DPM evacuation planning on the dense slot layout ``(S, H, J)``.
 
     Replays ``repro.drs.dpm.run_dpm``'s greedy: the victim's VMs leave in
@@ -399,11 +437,18 @@ def plan_evacuation(be, hosts: HostCols, caps, victim, occ, eff_slot,
     k-th evacuee (-1 when unused), and ``slot_pressure`` flags cells where
     the ``J`` slot bound excluded an otherwise-feasible destination (the
     caller must treat those results as invalid -- repack with more slack).
+
+    ``allowed`` (``(S, H, J, H)``) and ``anti`` (``(S, H, J, R)``) add rule
+    admission to the fit check (the object plane's ``placement.fits``):
+    each evacuee may only land on a host its VM-host bitmask allows and
+    where no member of any of its anti-affinity rules lives -- counting
+    evacuees already placed earlier in the same plan.
     """
     xp = be.xp
     s, h, j = occ.shape
     on = hosts.on
     h_idx = xp.arange(h)
+    s_idx = xp.arange(s)
     managed = managed_capacity(xp, hosts, caps)
     act = occ & on[..., None]
     eff_h = xp.sum(xp.where(act, eff_slot, 0.0), axis=-1)
@@ -413,7 +458,9 @@ def plan_evacuation(be, hosts: HostCols, caps, victim, occ, eff_slot,
     is_vic = h_idx == victim[..., None]
 
     def at_victim(col):
-        idx = victim[..., None, None] * xp.ones((s, 1, j), dtype=victim.dtype)
+        shape = (s, 1) + col.shape[2:]
+        idx = xp.broadcast_to(
+            victim.reshape((s,) + (1,) * (col.ndim - 1)), shape)
         return xp.take_along_axis(col, idx, axis=1)[:, 0]
 
     vic_occ = at_victim(occ)
@@ -421,49 +468,612 @@ def plan_evacuation(be, hosts: HostCols, caps, victim, occ, eff_slot,
     vic_mem = at_victim(mem_slot)
     vic_res = at_victim(res_slot)
     vic_mig = at_victim(migratable)
+    vic_allowed = at_victim(allowed) if allowed is not None else None
+    vic_anti = at_victim(anti) if anti is not None else None
     order = be.argsort(xp.where(vic_occ, -vic_mem, xp.inf), axis=-1)
     n_vic = xp.sum(vic_occ, axis=-1)
 
-    def take_k(col, k):
-        idx = xp.take_along_axis(order, xp.full((s, 1), k, order.dtype),
-                                 axis=-1)
-        return xp.take_along_axis(col, idx, axis=-1)[..., 0]
+    def order_k(k):
+        return xp.take_along_axis(order, xp.full((s, 1), k, order.dtype),
+                                  axis=-1)[..., 0]
 
     def body(k, st):
-        eff_h, mem_h, res_h, cnt_h, dests, ok, pressure = st
+        eff_h = st["eff_h"]
+        mem_h = st["mem_h"]
+        res_h = st["res_h"]
+        cnt_h = st["cnt_h"]
         valid = k < n_vic
-        e = take_k(vic_eff, k)
-        m = take_k(vic_mem, k)
-        r = take_k(vic_res, k)
-        mig = take_k(vic_mig, k)
+        ko = order_k(k)
+        e = vic_eff[s_idx, ko]
+        m = vic_mem[s_idx, ko]
+        r = vic_res[s_idx, ko]
+        mig = vic_mig[s_idx, ko]
         fit = on & ~is_vic
         fit = fit & (res_h + r[..., None] <= managed + 1e-9)
         fit = fit & (mem_h + m[..., None] <= host_mem + 1e-9)
         util_after = (eff_h + e[..., None]) / xp.maximum(managed, 1e-9)
         mem_after = (mem_h + m[..., None]) / xp.maximum(host_mem, 1e-9)
         fit = fit & (util_after <= target_util) & (mem_after <= target_util)
+        if vic_allowed is not None:
+            fit = fit & vic_allowed[s_idx, ko]
+        a_k = None
+        if vic_anti is not None:
+            a_k = vic_anti[s_idx, ko]                       # (S, R)
+            conflict = xp.matmul(
+                (st["anti_cnt"] > 0).astype(xp.float64),    # (S, H, R)
+                a_k[..., None].astype(xp.float64))[..., 0] > 0.5
+            fit = fit & ~conflict
         slot_ok = cnt_h < j
-        pressure = pressure | xp.any(
+        pressure = st["pressure"] | xp.any(
             valid[..., None] & fit & ~slot_ok, axis=-1)
         fit = fit & slot_ok
         score = xp.where(fit, util_after, xp.inf)
         best = xp.argmin(score, axis=-1)
         found = xp.isfinite(xp.min(score, axis=-1))
-        ok = ok & (~valid | (mig & found))
+        ok = st["ok"] & (~valid | (mig & found))
         place = valid & ok
         upd = place[..., None] & (h_idx == best[..., None])
         col_k = xp.arange(j) == k
         dests = xp.where(col_k[None, :] & place[..., None],
-                         best[..., None], dests)
-        return (eff_h + xp.where(upd, e[..., None], 0.0),
-                mem_h + xp.where(upd, m[..., None], 0.0),
-                res_h + xp.where(upd, r[..., None], 0.0),
-                cnt_h + upd.astype(cnt_h.dtype),
-                dests, ok, pressure)
+                         best[..., None], st["dests"])
+        out = dict(
+            st, dests=dests, ok=ok, pressure=pressure,
+            eff_h=eff_h + xp.where(upd, e[..., None], 0.0),
+            mem_h=mem_h + xp.where(upd, m[..., None], 0.0),
+            res_h=res_h + xp.where(upd, r[..., None], 0.0),
+            cnt_h=cnt_h + upd.astype(cnt_h.dtype))
+        if a_k is not None:
+            out["anti_cnt"] = st["anti_cnt"] + (
+                upd[..., None] & a_k[:, None, :]).astype(st["anti_cnt"].dtype)
+        return out
 
-    init = (eff_h, mem_h, res_h, cnt_h,
-            xp.full((s, j), -1, dtype=victim.dtype),
-            xp.ones(s, dtype=bool), xp.zeros(s, dtype=bool))
-    _, _, _, _, dests, ok, pressure = be.fori(j, body, init)
+    init = {"eff_h": eff_h, "mem_h": mem_h, "res_h": res_h, "cnt_h": cnt_h,
+            "dests": xp.full((s, j), -1, dtype=victim.dtype),
+            "ok": xp.ones(s, dtype=bool),
+            "pressure": xp.zeros(s, dtype=bool)}
+    if vic_anti is not None:
+        init["anti_cnt"] = xp.sum(
+            (anti & act[..., None]).astype(xp.int64), axis=2)   # (S, H, R)
+    st = be.fori(j, body, init)
+    ok, dests, pressure = st["ok"], st["dests"], st["pressure"]
     n_evac = xp.where(ok, n_vic, 0)
     return ok, order, dests, n_evac, pressure
+
+
+# ------------------------------------------------------- migration layer
+#
+# The migration decisions (constraint correction and the DRS load-balancing
+# hill-climb) operate on the dense slot layout ``(S, H, J)`` -- the same
+# layout the batched sweep engine carries through its ``lax.scan`` -- so one
+# kernel source serves the object plane (NumPy, S == 1, via
+# ``repro.core.migration_core.MigrationCore``) and the jitted grid program.
+# Rules arrive pre-scattered into slot space (see
+# ``repro.drs.arrays.RulesPack``): ``aff_group`` (S, H, J) int, ``allowed``
+# (S, H, J, H) bool, ``anti`` (S, H, J, R) bool.
+
+#: Pad values restored to a slot when its VM moves away.  Engines carrying
+#: extra per-slot columns (demand traces, tag masks) extend this mapping.
+SLOT_PAD = {
+    "occ": False, "reservation": 0.0, "limit": float("inf"),
+    "weights": 1e-12, "migratable": True, "cpu": 0.0, "mem": 0.0,
+    "aff_group": -1, "allowed": True, "anti": False,
+}
+
+
+def _tail(mask, ndim):
+    """Broadcast a leading-axes mask against an array with trailing dims."""
+    return mask.reshape(mask.shape + (1,) * (ndim - mask.ndim))
+
+
+def move_slot(xp, work, do, src, j, dst, pads=SLOT_PAD):
+    """Move slot ``(src, j)`` to ``dst``'s first *free* slot, per cell.
+
+    ``work`` maps column names to ``(S, H, J, ...)`` arrays (must contain
+    ``"occ"``); every column travels with the VM and the vacated slot is
+    restored to its pad value.  Free slots are found by occupancy (argmin
+    over the ``occ`` row), so holes left by earlier moves are reused --
+    unlike an occupancy-count cursor, this stays correct after arbitrary
+    move sequences.  Returns ``(work, moved)`` where ``moved`` masks the
+    cells whose destination actually had a free slot (callers gate on the
+    admission kernels, which already require one).
+    """
+    occ = work["occ"]
+    s_ax, h_ax, j_ax = occ.shape
+    s_idx = xp.arange(s_ax)
+    src_c = xp.clip(src, 0, h_ax - 1)
+    j_c = xp.clip(j, 0, j_ax - 1)
+    dst_c = xp.clip(dst, 0, h_ax - 1)
+    occ_d = occ[s_idx, dst_c]                        # (S, J)
+    ns = xp.argmin(occ_d, axis=-1)                   # first free (False)
+    free = ~occ_d[s_idx, ns]
+    moved = do & free
+    out = {}
+    for key, arr in work.items():
+        # Scatter-style two-point update: O(cells * trailing) per move,
+        # not O(whole column) -- the trace columns riding along make a
+        # full-array rewrite per move the dominant cost otherwise.
+        val = arr[s_idx, src_c, j_c]                 # (S, *trailing)
+        m = _tail(moved, val.ndim)
+        cur_d = arr[s_idx, dst_c, ns]
+        new_d = xp.where(m, val, cur_d)
+        if hasattr(arr, "at"):                       # JAX: XLA scatter
+            arr = arr.at[s_idx, dst_c, ns].set(new_d)
+            cur_s = arr[s_idx, src_c, j_c]
+            arr = arr.at[s_idx, src_c, j_c].set(
+                xp.where(m, pads[key], cur_s))
+        else:                                        # NumPy: copy + assign
+            arr = arr.copy()
+            arr[s_idx, dst_c, ns] = new_d
+            arr[s_idx, src_c, j_c] = xp.where(m, pads[key],
+                                              arr[s_idx, src_c, j_c])
+        out[key] = arr
+    return out, moved
+
+
+def record_move(xp, moves, n_moves, do, src, j, dst):
+    """Append ``(src, j, dst)`` at each cell's cursor position where ``do``.
+
+    ``moves`` is ``(S, M, 3)`` int (-1 padded), ``n_moves`` the per-cell
+    cursor.  Returns the updated ``(moves, n_moves)``.
+    """
+    m = moves.shape[1]
+    at = xp.arange(m)[None, :] == n_moves[:, None]   # (S, M)
+    triple = xp.stack(
+        [src, j, dst], axis=-1).astype(moves.dtype)  # (S, 3)
+    upd = (at & do[:, None])[..., None]
+    moves = xp.where(upd, triple[:, None, :], moves)
+    return moves, n_moves + do.astype(n_moves.dtype)
+
+
+def _gather_slots(xp, col, srcs, js):
+    """Gather per-slot columns at K (host, slot) coordinates: (S, K, ...)."""
+    s_idx = xp.arange(col.shape[0])[:, None]
+    return col[s_idx, srcs, js]
+
+
+def _affinity_keep_slots(xp, work, act, n_groups: int, srcs, js):
+    """Mask of (gathered slot, dest) moves that do not *create* an affinity
+    split: a grouped VM may move only where a group mate already lives (or
+    if it is its group's only placed member).  ``(S, K, H)``."""
+    s_ax, h_ax, _ = act.shape
+    k_ax = srcs.shape[-1]
+    if "aff_group" not in work or n_groups == 0:
+        return xp.ones((s_ax, k_ax, h_ax), dtype=bool)
+    grp = work["aff_group"]
+    g_idx = xp.arange(n_groups)
+    member = (grp[..., None] == g_idx) & act[..., None]   # (S, H, J, G)
+    per_host = xp.sum(member, axis=2)                     # (S, H, G)
+    total = xp.sum(per_host, axis=1)                      # (S, G)
+    g_v = _gather_slots(xp, grp, srcs, js)                # (S, K)
+    g_c = xp.clip(g_v, 0, max(n_groups - 1, 0))
+    tot_v = xp.take_along_axis(total, g_c, axis=1)        # (S, K)
+    host_g = xp.swapaxes(per_host, 1, 2)                  # (S, G, H)
+    dest_cnt = xp.take_along_axis(
+        host_g, g_c[..., None] * xp.ones((1, 1, h_ax), dtype=g_c.dtype),
+        axis=1)                                           # (S, K, H)
+    return (g_v[..., None] < 0) | (tot_v[..., None] <= 1) | (dest_cnt > 0)
+
+
+def _admission_slots(xp, on, work, capacity, host_mem, srcs, js):
+    """Reservation + memory + rules + free-slot admission for K gathered
+    candidate slots against every destination: ``(S, K, H)``.
+
+    Returns ``(fit, fit_unbounded, res_h, mem_h)`` where ``fit_unbounded``
+    ignores the free-slot bound (for slot-pressure detection) and
+    ``res_h``/``mem_h`` are the per-host rollups at the current placement.
+    The capacity column is the *injected* view -- current-cap or
+    fundable-cap managed capacity (paper Fig. 3) -- zero for powered-off
+    hosts.  Gathering the candidates first keeps every admission pass
+    O(K * H) instead of O(V * H) with K = the few slots a phase can
+    actually move.
+    """
+    occ = work["occ"]
+    act = occ & on[..., None]
+    res_h = xp.sum(xp.where(act, work["reservation"], 0.0), axis=-1)
+    mem_h = xp.sum(xp.where(act, work["mem"], 0.0), axis=-1)
+    h_ax = occ.shape[1]
+    h_idx = xp.arange(h_ax)
+    res_v = _gather_slots(xp, work["reservation"], srcs, js)   # (S, K)
+    mem_v = _gather_slots(xp, work["mem"], srcs, js)
+    fit = on[:, None, :] & (h_idx[None, None, :] != srcs[..., None])
+    fit = fit & (res_h[:, None, :] + res_v[..., None]
+                 <= capacity[:, None, :] + 1e-9)
+    fit = fit & (mem_h[:, None, :] + mem_v[..., None]
+                 <= host_mem[:, None, :] + 1e-9)
+    if "allowed" in work:
+        fit = fit & _gather_slots(xp, work["allowed"], srcs, js)
+    if "anti" in work and work["anti"].shape[-1] > 0:
+        anti_cnt = xp.sum(work["anti"] & act[..., None], axis=2)  # (S,H,R)
+        a_v = _gather_slots(xp, work["anti"], srcs, js)           # (S,K,R)
+        conflict = xp.matmul(
+            a_v.astype(xp.float64),
+            xp.swapaxes((anti_cnt > 0).astype(xp.float64), 1, 2)) > 0.5
+        fit = fit & ~conflict
+    free_slot = xp.any(~occ, axis=-1)                 # (S, H)
+    return fit & free_slot[:, None, :], fit, res_h, mem_h
+
+
+def correct_constraints_slots(be, hosts: HostCols, capacity, work, host_mem,
+                              rmeta: RulesMeta, enabled, moves, n_moves,
+                              pads=SLOT_PAD):
+    """Constraint correction on the dense slot layout (paper Fig. 1a/3).
+
+    Replays the object plane's correction protocol as bounded array loops:
+
+      1. *Affinity*: per group, gather every member onto one home host,
+         all-or-nothing -- the anchor's host (the member with the largest
+         reservation) when it can admit the group, else the feasible
+         member host with the most free capacity; with no feasible home
+         the group stays split (reported upstream).
+      2. *VM-host*: each misplaced VM moves to the admissible allowed host
+         with the most free capacity.
+      3. *Anti-affinity*: while some rule has two members sharing a host,
+         move the first surplus member with a feasible destination to the
+         admissible host with the most free capacity.
+
+    ``capacity`` is the injected admission view (current-cap managed
+    capacity for static policies, fundable capacity during Powercap
+    Allocation).  Moves mutate ``work`` in slot space and are appended to
+    ``moves``/``n_moves``; returns ``(work, moves, n_moves, pressure)``
+    where ``pressure`` flags cells whose J slot bound blocked an
+    otherwise-feasible correction.
+    """
+    xp = be.xp
+    on = hosts.on
+    s_ax, h_ax, j_ax = work["occ"].shape
+    h_idx = xp.arange(h_ax)
+    pressure = xp.zeros(s_ax, dtype=bool)
+
+    # ---------------------------------------------------- 1. affinity
+    def aff_body(g, state):
+        work, moves, n_moves, pressure = state
+        occ = work["occ"]
+        act = occ & on[..., None]
+        res = work["reservation"]
+        memb = act & (work["aff_group"] == g)
+        cnt_h = xp.sum(memb, axis=-1)                     # (S, H)
+        violated = xp.sum(cnt_h > 0, axis=-1) > 1
+        total = xp.sum(cnt_h, axis=-1)
+
+        # Gather-feasibility of EVERY candidate home at once (vectorized
+        # over H): a home must host a member, admit every other member's
+        # reservation/memory under the injected capacity view, respect
+        # each mover's VM-host bitmask and anti-affinity rules, and have
+        # the free slots -- the object plane's historical multi-home
+        # retry, evaluated in one pass.
+        n_movers = total[:, None] - cnt_h                 # (S, H)
+        nm_h = xp.sum(memb & ~work["migratable"], axis=-1)
+        ok = (xp.sum(nm_h, axis=-1)[:, None] - nm_h) == 0
+        if "allowed" in work:
+            bad = memb[..., None] & ~work["allowed"]      # (S, H, J, H)
+            bad_total = xp.sum(bad, axis=(1, 2))          # (S, H) per home
+            bad_on_home = xp.sum(xp.moveaxis(
+                xp.diagonal(bad, axis1=1, axis2=3), -1, 1), axis=-1)
+            ok = ok & ((bad_total - bad_on_home) == 0)
+        if "anti" in work and rmeta.n_anti:
+            anti = work["anti"]
+            c_rh = xp.sum(anti & act[..., None], axis=2)    # (S, H, R)
+            g_rh = xp.sum(anti & memb[..., None], axis=2)   # (S, H, R)
+            m_r = xp.sum(g_rh, axis=1)[:, None, :] - g_rh   # movers in r
+            ok = ok & xp.all((m_r == 0) | (c_rh + m_r <= 1), axis=-1)
+        res_h = xp.sum(xp.where(act, res, 0.0), axis=-1)
+        mem_h = xp.sum(xp.where(act, work["mem"], 0.0), axis=-1)
+        memb_res_h = xp.sum(xp.where(memb, res, 0.0), axis=-1)
+        memb_mem_h = xp.sum(xp.where(memb, work["mem"], 0.0), axis=-1)
+        moving_res = xp.sum(memb_res_h, axis=-1)[:, None] - memb_res_h
+        moving_mem = xp.sum(memb_mem_h, axis=-1)[:, None] - memb_mem_h
+        ok = ok & (res_h + moving_res <= capacity + 1e-9)
+        ok = ok & (mem_h + moving_mem <= host_mem + 1e-9)
+        ok = ok & (cnt_h > 0)
+        free_h = j_ax - xp.sum(occ, axis=-1)
+        ok_full = ok & (free_h >= n_movers)
+        feasible = xp.any(ok_full, axis=-1)
+        pressure = pressure | (enabled & violated & ~feasible
+                               & xp.any(ok, axis=-1))
+
+        # Home choice: the anchor's host (the member with the largest
+        # reservation -- hardest to move) when feasible, else the feasible
+        # member host with the most free admission capacity.
+        flat = xp.where(memb, res, -xp.inf).reshape(s_ax, -1)
+        anchor_home = xp.argmax(flat, axis=-1) // j_ax    # (S,)
+        anchor_ok = xp.take_along_axis(
+            ok_full, anchor_home[:, None], axis=-1)[..., 0]
+        best_home = xp.argmax(
+            xp.where(ok_full, capacity - res_h, -xp.inf), axis=-1)
+        home = xp.where(anchor_ok, anchor_home, best_home)
+        on_home = h_idx[None, :, None] == home[:, None, None]
+        do_g = enabled & violated & feasible
+
+        def mover_body(_, st):
+            work, moves, n_moves = st
+            movers_now = ((work["occ"] & on[..., None])
+                          & (work["aff_group"] == g) & ~on_home)
+            any_m = xp.any(movers_now, axis=(-1, -2))
+            first = xp.argmax(movers_now.reshape(s_ax, -1), axis=-1)
+            src = first // j_ax
+            jj = first % j_ax
+            do = do_g & any_m
+            work, moved = move_slot(xp, work, do, src, jj, home, pads)
+            moves, n_moves = record_move(xp, moves, n_moves, moved, src,
+                                         jj, home)
+            return work, moves, n_moves
+
+        work, moves, n_moves = be.fori(
+            rmeta.max_group_members, mover_body, (work, moves, n_moves))
+        return work, moves, n_moves, pressure
+
+    if rmeta.n_groups:
+        work, moves, n_moves, pressure = be.fori(
+            rmeta.n_groups, aff_body, (work, moves, n_moves, pressure))
+
+    # ----------------------------------- shared mover for phases 2 and 3
+    def greedy_move(work, moves, n_moves, pressure, viol, k_bound):
+        """Move the first slot in ``viol`` that has a feasible destination
+        to the admissible host with the most free capacity.
+
+        Gathers the first ``k_bound`` violating slots per cell (``k_bound``
+        is the phase's rule-count bound, so no violator is ever missed) and
+        evaluates admission only for those -- O(K * H) per step instead of
+        O(V * H)."""
+        flat = viol.reshape(s_ax, -1)
+        big = h_ax * j_ax
+        keys = xp.where(flat, xp.arange(big), big)
+        order = be.argsort(keys, axis=-1)[:, :k_bound]     # (S, K)
+        kvalid = xp.take_along_axis(keys, order, axis=-1) < big
+        srcs = order // j_ax
+        js = order % j_ax
+        fit, fit_unb, res_h, _ = _admission_slots(
+            xp, on, work, capacity, host_mem, srcs, js)
+        mig_v = _gather_slots(xp, work["migratable"], srcs, js)
+        ok_v = (kvalid & mig_v)[..., None]
+        fit = fit & ok_v
+        fit_unb = fit_unb & ok_v
+        has_dest = xp.any(fit, axis=-1)                    # (S, K)
+        pressure = pressure | (
+            enabled & xp.any(xp.any(fit_unb, axis=-1) & ~has_dest,
+                             axis=-1))
+        found = enabled & xp.any(has_dest, axis=-1)
+        first_k = xp.argmax(has_dest, axis=-1)             # (S,)
+        s_idx = xp.arange(s_ax)
+        src = srcs[s_idx, first_k]
+        jj = js[s_idx, first_k]
+        free = capacity - res_h                            # (S, H)
+        fit_v = fit[s_idx, first_k]                        # (S, H)
+        dest = xp.argmax(xp.where(fit_v, free, -xp.inf), axis=-1)
+        work, moved = move_slot(xp, work, found, src, jj, dest, pads)
+        moves, n_moves = record_move(xp, moves, n_moves, moved, src, jj,
+                                     dest)
+        return work, moves, n_moves, pressure, found
+
+    # ---------------------------------------------------- 2. VM-host
+    if rmeta.n_vmhost:
+        def vh_viol(work):
+            act = work["occ"] & on[..., None]
+            allowed_self = xp.moveaxis(
+                xp.diagonal(work["allowed"], axis1=1, axis2=3), -1, 1)
+            return act & ~allowed_self
+
+        def vh_cond(state):
+            work, moves, n_moves, pressure, go, k = state
+            return (k < rmeta.n_vmhost) & xp.any(go)
+
+        def vh_body(state):
+            work, moves, n_moves, pressure, go, k = state
+            work, moves, n_moves, pressure, found = greedy_move(
+                work, moves, n_moves, pressure, vh_viol(work),
+                rmeta.n_vmhost)
+            return work, moves, n_moves, pressure, go & found, k + 1
+
+        go0 = enabled & xp.any(vh_viol(work), axis=(-1, -2))
+        work, moves, n_moves, pressure, _, _ = be.while_loop(
+            vh_cond, vh_body, (work, moves, n_moves, pressure, go0, 0))
+
+    # ------------------------------------------------ 3. anti-affinity
+    if rmeta.n_anti:
+        def anti_extra(work):
+            act = work["occ"] & on[..., None]
+            member = work["anti"] & act[..., None]          # (S, H, J, R)
+            cnt = xp.sum(member, axis=2)                    # (S, H, R)
+            keeper_j = xp.argmax(member, axis=2)            # (S, H, R)
+            j_col = xp.arange(j_ax)[None, None, :, None]
+            extra = (member & (j_col != keeper_j[:, :, None, :])
+                     & (cnt[:, :, None, :] > 1))
+            return xp.any(extra, axis=-1)                   # (S, H, J)
+
+        def anti_cond(state):
+            work, moves, n_moves, pressure, go, k = state
+            return (k < rmeta.max_anti_members) & xp.any(go)
+
+        def anti_body(state):
+            work, moves, n_moves, pressure, go, k = state
+            work, moves, n_moves, pressure, found = greedy_move(
+                work, moves, n_moves, pressure, anti_extra(work),
+                rmeta.max_anti_members)
+            return work, moves, n_moves, pressure, go & found, k + 1
+
+        go0 = enabled & xp.any(anti_extra(work), axis=(-1, -2))
+        work, moves, n_moves, pressure, _, _ = be.while_loop(
+            anti_cond, anti_body, (work, moves, n_moves, pressure, go0, 0))
+
+    return work, moves, n_moves, pressure
+
+
+def balance_migrations(be, hosts: HostCols, caps, work, host_mem,
+                       params: MigrationParams, rmeta: RulesMeta, enabled,
+                       moves, n_moves, pads=SLOT_PAD,
+                       iters: int = MIGRATION_WATERFILL_ITERS):
+    """DRS's greedy hill-climb balancer (paper Sec. IV-A), batched.
+
+    One move per round: every (migratable slot on the *most-strained*
+    donor host, below-average destination) candidate that passes
+    reservation + memory + rule admission is scored by the drop in the
+    imbalance metric it would produce -- the stddev of normalized
+    entitlements with the moved VM carrying its current entitlement -- and
+    the argmax wins if its gain beats the risk-cost-benefit floor
+    (``min_goodness`` plus the memory-proportional migration cost).
+    Rounds continue until the imbalance threshold is met, no candidate
+    passes, the true imbalance stops improving, or ``max_moves`` is
+    reached.  The contention gate (no strained host => migration cost
+    outweighs benefit) is evaluated once on entry, as in the object plane.
+
+    Two deliberate departures from the historical object-plane loop, shared
+    by every engine so parity is exact by construction:
+
+      * scoring is a closed-form update of the stddev from per-host
+        entitlement sums instead of a full re-waterfill per candidate
+        (which made a balancer pass O(V^2 H)); after a committed move only
+        the two touched hosts are re-waterfilled (bit-identical, since the
+        bisection is per-host independent);
+      * candidates come from the hottest host each round -- the greedy
+        argmax move relieves it anyway, and the restriction keeps a round
+        O(J * H) instead of O(V * H).
+    """
+    xp = be.xp
+    on = hosts.on
+    s_ax, h_ax, j_ax = work["occ"].shape
+    if params.max_moves <= 0:
+        return (work, moves, n_moves, xp.zeros(s_ax, dtype=bool))
+    n_on = xp.sum(on, axis=-1)
+    managed = managed_capacity(xp, hosts, caps)
+
+    def _fill(managed_cols, occ, res, lim, cpu, weights, on_cols):
+        act = occ & on_cols[..., None]
+        eff = xp.where(act, xp.clip(cpu, res, lim), 0.0)
+        floors = xp.where(act, xp.minimum(res, lim), 0.0)
+        alloc = waterfill_dense(xp, be.fori, managed_cols, floors, eff,
+                                weights, iters)
+        alloc = xp.where(act, alloc, 0.0)
+        ents = xp.sum(alloc, axis=-1)
+        ns = xp.where(managed_cols > 0.0,
+                      ents / xp.maximum(managed_cols, 1e-300), 0.0)
+        return act, alloc, ents, ns
+
+    def entitlements(work):
+        return _fill(managed, work["occ"], work["reservation"],
+                     work["limit"], work["cpu"], work["weights"], on)
+
+    _, alloc0, ents0, ns0 = entitlements(work)
+    strained = xp.max(xp.where(on, ns0, 0.0), axis=-1)
+    done0 = (~enabled | (n_on < 2)
+             | (strained <= params.contention_threshold))
+    pressure0 = xp.zeros(s_ax, dtype=bool)
+    h_idx = xp.arange(h_ax)
+
+    def _refill_pair(work, alloc, ents, ns, moved, src, dest):
+        """Re-waterfill only the two hosts a move touched (the bisection
+        is per-host independent, so this is bit-identical to a full
+        pass), scattering the refreshed rows back into the carried
+        entitlement state."""
+        idx2 = xp.stack([src, dest], axis=-1)               # (S, 2)
+
+        def g3(col):                                        # (S,H,J)->(S,2,J)
+            return xp.take_along_axis(
+                col, idx2[..., None]
+                * xp.ones((1, 1, j_ax), dtype=idx2.dtype), axis=1)
+
+        def g2(col):                                        # (S,H) -> (S,2)
+            return xp.take_along_axis(col, idx2, axis=-1)
+
+        _, alloc2, ents2, ns2 = _fill(
+            g2(managed), g3(work["occ"]), g3(work["reservation"]),
+            g3(work["limit"]), g3(work["cpu"]), g3(work["weights"]),
+            g2(on))
+        src_row = h_idx[None, :] == src[:, None]
+        dst_row = h_idx[None, :] == dest[:, None]
+        m2 = moved[:, None]
+        m3 = moved[:, None, None]
+        alloc = xp.where(m3 & src_row[..., None], alloc2[:, :1], alloc)
+        alloc = xp.where(m3 & dst_row[..., None], alloc2[:, 1:], alloc)
+        ents = xp.where(m2 & src_row, ents2[:, :1], ents)
+        ents = xp.where(m2 & dst_row, ents2[:, 1:], ents)
+        ns = xp.where(m2 & src_row, ns2[:, :1], ns)
+        ns = xp.where(m2 & dst_row, ns2[:, 1:], ns)
+        return alloc, ents, ns
+
+    def cond(state):
+        (work, moves, n_moves, done, prev_imb, pressure, alloc, ents, ns,
+         k) = state
+        return (k < params.max_moves) & ~xp.all(done)
+
+    j_arange = xp.arange(j_ax)
+
+    def body(state):
+        (work, moves, n_moves, done, prev_imb, pressure, alloc, ents, ns,
+         k) = state
+        act = work["occ"] & on[..., None]
+        imb = _masked_std(xp, ns, on, n_on)
+        halt = (imb <= params.imbalance_threshold) | (imb >= prev_imb)
+        mean_n = xp.sum(ns * on, axis=-1) / xp.maximum(n_on, 1)
+        s_idx = xp.arange(s_ax)
+
+        # Candidates come from the most-strained donor host this round:
+        # the hill climb moves one VM per round anyway and the
+        # argmax-gain move relieves the hottest host, so restricting the
+        # candidate scan to it keeps every round O(J * H) instead of
+        # O(V * H) -- at grid scale the difference between a migration
+        # round and a full admission sweep.
+        hot = xp.argmax(xp.where(on, ns, -xp.inf), axis=-1)     # (S,)
+        ns_hot = ns[s_idx, hot]
+        halt = halt | (ns_hot <= mean_n)                   # nothing above avg
+        srcs = hot[:, None] * xp.ones((1, j_ax), dtype=hot.dtype)
+        js = j_arange[None, :] * xp.ones((s_ax, 1), dtype=hot.dtype)
+        cand = (_gather_slots(xp, act, srcs, js)
+                & _gather_slots(xp, work["migratable"], srcs, js))
+        # A destination with no managed capacity would starve the mover
+        # (its normalized entitlement is pinned at 0): never a receiver.
+        recv = (on & (ns <= mean_n[..., None]) & (managed > 0.0))
+        fit, fit_unb, _, _ = _admission_slots(
+            xp, on, work, managed, host_mem, srcs, js)
+        aff_ok = _affinity_keep_slots(xp, work, act, rmeta.n_groups, srcs,
+                                      js)
+        fit = fit & aff_ok & cand[..., None] & recv[:, None, :]
+        fit_unb = fit_unb & aff_ok & cand[..., None] & recv[:, None, :]
+        live = ~done & ~halt
+        pressure = pressure | (live & xp.any(
+            fit_unb & ~fit, axis=(-1, -2)))
+
+        # Closed-form stddev after the move: the VM carries its current
+        # entitlement e_v from the hot host to the destination.
+        e_v = _gather_slots(xp, alloc, srcs, js)           # (S, J)
+        safe_cap = xp.where(managed > 0.0, managed, 1.0)
+        cap_src = safe_cap[s_idx, hot][:, None]
+        cap_d = safe_cap[:, None, :]
+        ns_src = ns_hot[:, None]
+        ns_d = ns[:, None, :]
+        ents_src = ents[s_idx, hot][:, None]
+        ns_src_new = (ents_src - e_v) / cap_src            # (S, J)
+        ns_d_new = (ents[:, None, :] + e_v[..., None]) / cap_d
+        t1 = xp.sum(ns * on, axis=-1)[:, None, None]
+        t2 = xp.sum(ns * ns * on, axis=-1)[:, None, None]
+        t1n = (t1 - ns_src[..., None] - ns_d
+               + ns_src_new[..., None] + ns_d_new)
+        t2n = (t2 - (ns_src ** 2)[..., None] - ns_d ** 2
+               + (ns_src_new ** 2)[..., None] + ns_d_new ** 2)
+        denom = xp.maximum(n_on, 1)[:, None, None]
+        var = xp.maximum(t2n / denom - (t1n / denom) ** 2, 0.0)
+        gain = imb[:, None, None] - xp.sqrt(var)
+        cost = (params.min_goodness
+                + params.cost_per_gb
+                * _gather_slots(xp, work["mem"], srcs, js) / 1024.0)
+        score = xp.where(fit & (gain > cost[..., None]), gain, -xp.inf)
+
+        flat = score.reshape(s_ax, -1)                     # (S, J*H)
+        best = xp.argmax(flat, axis=-1)
+        found = xp.isfinite(
+            xp.take_along_axis(flat, best[:, None], axis=-1)[..., 0])
+        jj = best // h_ax
+        dest = best % h_ax
+        do = live & found
+        work, moved = move_slot(xp, work, do, hot, jj, dest, pads)
+        moves, n_moves = record_move(xp, moves, n_moves, moved, hot, jj,
+                                     dest)
+        alloc, ents, ns = _refill_pair(work, alloc, ents, ns, moved, hot,
+                                       dest)
+        return (work, moves, n_moves, done | halt | ~found, imb, pressure,
+                alloc, ents, ns, k + 1)
+
+    state = (work, moves, n_moves, done0, xp.full(s_ax, xp.inf), pressure0,
+             alloc0, ents0, ns0, 0)
+    (work, moves, n_moves, _, _, pressure, _, _, _, _) = be.while_loop(
+        cond, body, state)
+    return work, moves, n_moves, pressure

@@ -18,12 +18,18 @@ over it rather than reimplementing it:
     emitted :mod:`repro.drs.actions` list with its prerequisite edges;
   * the jitted ``BatchedSimulator`` (``repro.sim.batch``) replays the same
     sequence inside ``lax.scan`` from the same decision kernels
-    (``repro.core.kernels``: ``redivvy_caps`` -> ``balance_caps`` ->
+    (``repro.core.kernels``: ``correct_constraints_slots`` ->
+    ``redivvy_caps`` -> ``balance_caps`` -> ``balance_migrations`` ->
     ``dpm_hot_mask``/``dpm_all_low`` -> ``power_on_funding_caps`` /
     ``power_off_reabsorb_caps`` / ``plan_evacuation``), applying the same
     action schema semantics (decreases before the increases they fund,
     funding before power-on, evacuation before power-off) as timer state
     carried through the scan.
+
+The *migration* decisions inside phases 1 and 2 -- constraint correction
+and the hill-climb balancer -- have their own engine-neutral owner,
+:class:`repro.core.migration_core.MigrationCore`; ``drs/placement.py``
+and ``drs/balancer.py`` are thin adapters over it.
 
 Because the decision math lives in the kernels, a change to any phase's
 policy lands in all three engines at once; parity is enforced by
@@ -178,7 +184,7 @@ class ManagerCore:
             evac = [act.migrate(vm, dest, reason="dpm-evacuate")
                     for vm, dest in rec.evacuations]
             for vm, dest in rec.evacuations:
-                working.vms[vm].host_id = dest
+                working.move_vm(vm, dest)
             poff = act.power_off(
                 rec.power_off,
                 prereqs=tuple(a.action_id for a in evac), reason="dpm")

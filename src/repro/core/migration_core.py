@@ -1,0 +1,187 @@
+"""MigrationCore: the constraint-correction + load-balancing migration
+protocol, engine-neutral (sibling of :class:`repro.core.manager_core.ManagerCore`).
+
+One DRS invocation generates migrations in two places:
+
+  * *constraint correction* (phase 1): moves that fix affinity /
+    anti-affinity / VM-host rule violations, with the fit check seeing an
+    injected capacity view -- the current cap, or the *fundable* capacity a
+    host could reach if its cap were raised from the unreserved budget
+    (paper Fig. 1a / Fig. 3);
+  * *entitlement balancing* (phase 2 residue): DRS's greedy hill-climb,
+    one risk-cost-benefit-filtered move at a time, after BalancePowerCap
+    has removed what imbalance Watts can.
+
+The decisions live in ``repro.core.kernels`` (``correct_constraints_slots``,
+``balance_migrations``, ``move_slot``) over the dense slot layout
+``(S, H, J)`` with rules encoded as arrays (``repro.drs.arrays.RulesPack``).
+This module is the object-plane adapter: it packs a ``ClusterSnapshot`` into
+a one-cell slot layout, runs the same kernels the batched sweep engine
+compiles into its ``lax.scan``, and replays the emitted slot moves onto the
+snapshot as ``(vm_id, dest_host)`` pairs.  ``repro.drs.placement`` and
+``repro.drs.balancer`` are thin wrappers over this class, so the object,
+vector, and batched engines run the identical migration protocol; parity is
+enforced by ``tests/test_migration_parity.py``.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro import backend as backend_mod
+from repro.core import kernels
+from repro.drs.arrays import RulesPack, dense_slot_assignment
+from repro.drs.snapshot import ClusterSnapshot
+
+
+class _DenseCell:
+    """One snapshot packed into the kernels' dense slot layout (S == 1)."""
+
+    def __init__(self, snapshot: ClusterSnapshot, extra_slots: int,
+                 pack: Optional[RulesPack] = None):
+        hosts = list(snapshot.hosts.values())
+        self.host_ids = [h.host_id for h in hosts]
+        host_index = {hid: i for i, hid in enumerate(self.host_ids)}
+        n_hosts = len(hosts)
+        vms, order, hj, slot, counts = dense_slot_assignment(
+            snapshot, n_hosts)
+        n_slots = int(max(counts.max() if counts.size else 0, 1)
+                      + max(extra_slots, 1))
+        f64 = np.float64
+
+        def col(vals, fill, dtype=f64, trailing=()):
+            arr = np.full((1, n_hosts, n_slots) + trailing, fill,
+                          dtype=dtype)
+            arr[0, hj, slot] = np.asarray(vals)[order]
+            return arr
+
+        self.work = {
+            "occ": col(np.ones(len(vms), dtype=bool), False, bool),
+            "reservation": col([v.reservation for v in vms], 0.0),
+            "limit": col([v.limit for v in vms], np.inf),
+            "weights": col([max(v.shares, 1e-12) for v in vms], 1e-12),
+            "migratable": col([v.migratable for v in vms], True, bool),
+            "cpu": col([v.demand for v in vms], 0.0),
+            "mem": col([v.mem_demand for v in vms], 0.0),
+        }
+        if pack is None:
+            pack = _rules_pack(snapshot)
+        self.rmeta = pack.meta()
+        if pack.n_groups:
+            self.work["aff_group"] = col(pack.affinity_group, -1, np.int64)
+        if pack.n_vmhost:
+            self.work["allowed"] = col(pack.allowed, True, bool,
+                                       trailing=(n_hosts,))
+        if pack.n_anti:
+            self.work["anti"] = col(pack.anti_member.T, False, bool,
+                                    trailing=(pack.n_anti,))
+        self.hosts = kernels.HostCols(
+            on=np.array([[h.powered_on for h in hosts]], dtype=bool),
+            power_idle=np.array([[h.spec.power_idle for h in hosts]],
+                                dtype=f64),
+            power_peak=np.array([[h.spec.power_peak for h in hosts]],
+                                dtype=f64),
+            capacity_peak=np.array([[h.spec.capacity_peak for h in hosts]],
+                                   dtype=f64),
+            hyp_overhead=np.array(
+                [[h.spec.hypervisor_overhead for h in hosts]], dtype=f64))
+        self.caps = np.array([[h.power_cap for h in hosts]], dtype=f64)
+        self.host_mem = np.array([[h.spec.memory_mb for h in hosts]],
+                                 dtype=f64)
+        # Slot -> VM-row map for replaying kernel moves onto the snapshot.
+        self._slot_vm = np.full((n_hosts, n_slots), -1, dtype=np.int64)
+        self._slot_vm[hj, slot] = order
+        self._occ = self.work["occ"][0].copy()
+        self._vms = vms
+
+    def replay(self, snapshot: ClusterSnapshot, moves: np.ndarray,
+               n_moves: int) -> list[tuple[str, str]]:
+        """Apply kernel moves to the snapshot, mirroring ``move_slot``'s
+        first-free-slot placement so slot coordinates stay aligned."""
+        out: list[tuple[str, str]] = []
+        for src, j, dst in moves[0, :n_moves]:
+            row = int(self._slot_vm[src, j])
+            ns = int(np.argmin(self._occ[dst]))
+            self._slot_vm[dst, ns] = row
+            self._slot_vm[src, j] = -1
+            self._occ[dst, ns] = True
+            self._occ[src, j] = False
+            vm_id = self._vms[row].vm_id
+            dest_host = self.host_ids[int(dst)]
+            snapshot.move_vm(vm_id, dest_host)
+            out.append((vm_id, dest_host))
+        return out
+
+
+class MigrationCore:
+    """Drives the migration protocol for one snapshot (object plane)."""
+
+    def __init__(self,
+                 params: Optional[kernels.MigrationParams] = None):
+        self.params = params or kernels.MigrationParams()
+
+    # ------------------------------------------------------------------
+    def _moves_buffer(self, bound: int):
+        bound = max(bound, 1)
+        return (np.full((1, bound, 3), -1, dtype=np.int64),
+                np.zeros(1, dtype=np.int64))
+
+    def correct(self, snapshot: ClusterSnapshot,
+                capacity_fn: Callable[[ClusterSnapshot, str], float]
+                ) -> list[tuple[str, str]]:
+        """Constraint correction: fix rule violations, mutating
+        ``snapshot`` in place; returns the (vm_id, dest_host) moves."""
+        pack = _rules_pack(snapshot)
+        meta = pack.meta()
+        if not meta.any:
+            return []
+        # Worst case every correction lands on one host (several affinity
+        # groups anchoring on the same fullest host): provision the full
+        # move bound so the slot axis can never bind a decision.
+        cell = _DenseCell(snapshot, extra_slots=max(meta.move_bound, 1),
+                          pack=pack)
+        capacity = np.array(
+            [[capacity_fn(snapshot, hid) if snapshot.hosts[hid].powered_on
+              else 0.0 for hid in cell.host_ids]], dtype=np.float64)
+        moves, n_moves = self._moves_buffer(cell.rmeta.move_bound)
+        enabled = np.ones(1, dtype=bool)
+        _, moves, n_moves, pressure = kernels.correct_constraints_slots(
+            backend_mod.NUMPY, cell.hosts, capacity, cell.work,
+            cell.host_mem, cell.rmeta, enabled, moves, n_moves)
+        _check_pressure(pressure)
+        return cell.replay(snapshot, moves, int(n_moves[0]))
+
+    def balance(self, snapshot: ClusterSnapshot) -> list[tuple[str, str]]:
+        """Greedy hill-climb balancing; mutates ``snapshot`` (what-if) and
+        returns the chosen moves."""
+        if self.params.max_moves <= 0:
+            return []
+        cell = _DenseCell(snapshot,
+                          extra_slots=max(self.params.max_moves, 1))
+        moves, n_moves = self._moves_buffer(self.params.max_moves)
+        enabled = np.ones(1, dtype=bool)
+        _, moves, n_moves, pressure = kernels.balance_migrations(
+            backend_mod.NUMPY, cell.hosts, cell.caps, cell.work,
+            cell.host_mem, self.params, cell.rmeta, enabled, moves, n_moves)
+        _check_pressure(pressure)
+        return cell.replay(snapshot, moves, int(n_moves[0]))
+
+
+def _check_pressure(pressure: np.ndarray) -> None:
+    """The slot axis binding a migration decision must fail loudly (the
+    batched engine's invariant); the headroom above makes this provably
+    unreachable, so tripping it is an internal sizing bug."""
+    if bool(np.asarray(pressure).any()):
+        raise RuntimeError(
+            "slot capacity bound a migration decision on the object plane; "
+            "dense-cell slot headroom undersized")
+
+
+def _rules_pack(snapshot: ClusterSnapshot) -> RulesPack:
+    """Build the snapshot's RulesPack (VM/host rows in inventory order --
+    the same order ``dense_slot_assignment`` enumerates)."""
+    return RulesPack.from_rules(
+        snapshot.rules, {v: i for i, v in enumerate(snapshot.vms)},
+        {h: i for i, h in enumerate(snapshot.hosts)})

@@ -27,6 +27,128 @@ from repro.core import kernels
 
 
 @dataclasses.dataclass
+class RulesPack:
+    """Placement rules as dense arrays (the kernel layer's rule encoding).
+
+    * ``affinity_group``: per-VM affinity-group id (``-1`` = none).  VMs
+      appearing in several :class:`repro.drs.rules.AffinityRule`\\ s are
+      merged into one group (union semantics), ids numbered in first-rule
+      order.
+    * ``anti_member``: per-rule membership masks ``(R, V)`` -- rule ``r``
+      forbids any two of its members from sharing a host (the pairwise
+      expansion of :class:`AntiAffinityRule`).
+    * ``allowed``: per-VM allowed-host bitmask ``(V, H)`` -- the AND over
+      every :class:`VMHostRule` naming the VM (all-True without a rule).
+
+    Scattered into the dense slot layout by the engine packers so the
+    admission kernels read rules as pure array lookups.
+    """
+
+    n_groups: int
+    n_anti: int
+    n_vmhost: int
+    max_group_members: int          # static loop bound for correction
+    max_anti_members: int           # total anti-rule members (move bound)
+    affinity_group: np.ndarray      # (V,) int64
+    anti_member: np.ndarray         # (R, V) bool
+    allowed: np.ndarray             # (V, H) bool
+
+    def meta(self) -> "kernels.RulesMeta":
+        """The kernel layer's static-shape view of this pack -- the single
+        source of the compile-time loop/slack bounds for every engine."""
+        return kernels.RulesMeta(
+            n_groups=self.n_groups, n_anti=self.n_anti,
+            n_vmhost=self.n_vmhost,
+            max_group_members=self.max_group_members,
+            max_anti_members=self.max_anti_members)
+
+    @classmethod
+    def from_rules(cls, rules, vm_index: dict, host_index: dict
+                   ) -> "RulesPack":
+        from repro.drs import rules as rules_mod  # local import, no cycle
+        n_vms, n_hosts = len(vm_index), len(host_index)
+        group = np.full(n_vms, -1, dtype=np.int64)
+        anti_rows: list[np.ndarray] = []
+        allowed = np.ones((n_vms, n_hosts), dtype=bool)
+        n_vmhost = 0
+        # Affinity: union-find over rule memberships, ids in rule order.
+        parent: dict[int, int] = {}
+
+        def find(x: int) -> int:
+            while parent.setdefault(x, x) != x:
+                parent[x] = parent[parent[x]]
+                x = parent[x]
+            return x
+
+        aff_rules = [r for r in rules
+                     if isinstance(r, rules_mod.AffinityRule)]
+        for rule in aff_rules:
+            rows = [vm_index[v] for v in rule.vm_ids if v in vm_index]
+            for a, b in zip(rows, rows[1:]):
+                parent[find(a)] = find(b)
+        roots: dict[int, int] = {}
+        for rule in aff_rules:
+            for v in rule.vm_ids:
+                if v not in vm_index:
+                    continue
+                root = find(vm_index[v])
+                if root not in roots:
+                    roots[root] = len(roots)
+                group[vm_index[v]] = roots[root]
+        for rule in rules:
+            if isinstance(rule, rules_mod.AntiAffinityRule):
+                row = np.zeros(n_vms, dtype=bool)
+                for v in rule.vm_ids:
+                    if v in vm_index:
+                        row[vm_index[v]] = True
+                anti_rows.append(row)
+            elif isinstance(rule, rules_mod.VMHostRule):
+                if rule.vm_id in vm_index:
+                    n_vmhost += 1
+                    mask = np.zeros(n_hosts, dtype=bool)
+                    for h in rule.allowed_hosts:
+                        if h in host_index:
+                            mask[host_index[h]] = True
+                    allowed[vm_index[rule.vm_id]] &= mask
+        anti = (np.stack(anti_rows) if anti_rows
+                else np.zeros((0, n_vms), dtype=bool))
+        n_groups = len(roots)
+        sizes = np.bincount(group[group >= 0], minlength=max(n_groups, 1))
+        return cls(
+            n_groups=n_groups, n_anti=len(anti_rows), n_vmhost=n_vmhost,
+            max_group_members=int(sizes.max()) if n_groups else 0,
+            max_anti_members=int(anti.sum()),
+            affinity_group=group, anti_member=anti, allowed=allowed)
+
+
+def dense_slot_assignment(snapshot, n_hosts: int):
+    """Group placed, powered-on VMs under their resident host.
+
+    Returns ``(vms, order, hj, slot, counts)``: ``vms`` is the snapshot's VM
+    list, ``order`` the indices of active VMs sorted stably by host, ``hj``
+    and ``slot`` each active VM's (host, slot) coordinate in the dense
+    ``(H, J)`` layout, and ``counts`` the per-host occupancy.  Shared by the
+    batched engine's packer and the object plane's migration adapter so both
+    planes agree on slot coordinates (and therefore on every slot-ordered
+    tie-break).
+    """
+    vms = list(snapshot.vms.values())
+    host_idx = {hid: j for j, hid in enumerate(snapshot.hosts)}
+    host_j = np.array([host_idx.get(v.host_id, -1) for v in vms],
+                      dtype=np.int64)
+    act = np.array([v.powered_on for v in vms], dtype=bool)
+    act &= host_j >= 0
+    order = np.nonzero(act)[0]
+    hj = host_j[order]
+    srt = np.argsort(hj, kind="stable")
+    order, hj = order[srt], hj[srt]
+    counts = np.bincount(hj, minlength=n_hosts)
+    starts = np.concatenate(([0], np.cumsum(counts)[:-1]))
+    slot = np.arange(hj.size) - np.repeat(starts, counts)
+    return vms, order, hj, slot, counts
+
+
+@dataclasses.dataclass
 class ArrayView:
     """Flat arrays over all hosts (index ``h``) and all VMs (index ``v``)."""
 

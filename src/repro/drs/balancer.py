@@ -5,6 +5,13 @@ one greedy move at a time, each move passing a risk-cost-benefit filter.
 CloudPowerCap's BalancePowerCap (repro.core.balance) runs *before* this and
 removes as much imbalance as Watts can; whatever remains is fixed here by
 actual migrations.
+
+The decision procedure is the shared kernel
+``repro.core.kernels.balance_migrations`` (argmax-scored candidate moves on
+the dense slot layout, rule-aware admission, closed-form imbalance scoring);
+this module is the object-plane adapter over
+:class:`repro.core.migration_core.MigrationCore`, so the object, vector,
+and batched engines pick identical moves.
 """
 
 from __future__ import annotations
@@ -12,9 +19,6 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional
 
-import numpy as np
-
-from repro.drs import placement
 from repro.drs.snapshot import ClusterSnapshot
 
 
@@ -32,35 +36,15 @@ class BalancerConfig:
     # VM already receives its entitlement and the imbalance is cosmetic).
     contention_threshold: float = 0.9
 
-
-def _imbalance(snapshot: ClusterSnapshot) -> float:
-    return snapshot.imbalance()
-
-
-def _normalized_entitlement_map(snapshot: ClusterSnapshot) -> dict[str, float]:
-    """N_h for every powered-on host in one batched-waterfill pass."""
-    av = snapshot.as_arrays()
-    ns = av.normalized_entitlements()
-    return {hid: float(ns[i]) for i, hid in enumerate(av.host_ids)
-            if av.host_on[i]}
-
-
-def _candidate_moves(snapshot: ClusterSnapshot):
-    """(vm, dest) pairs from above-average-N hosts to below-average hosts."""
-    on = snapshot.powered_on_hosts()
-    ns = _normalized_entitlement_map(snapshot)
-    mean_n = float(np.mean(list(ns.values()))) if ns else 0.0
-    donors = [h for h in on if ns[h.host_id] > mean_n]
-    receivers = [h for h in on if ns[h.host_id] <= mean_n]
-    for donor in donors:
-        for vm in snapshot.vms_on(donor.host_id):
-            if not vm.migratable:
-                continue
-            for recv in receivers:
-                if recv.host_id == donor.host_id:
-                    continue
-                if placement.fits(snapshot, vm.vm_id, recv.host_id):
-                    yield vm.vm_id, recv.host_id
+    def params(self):
+        """The kernel layer's static-config twin of this dataclass."""
+        from repro.core import kernels  # local import, no cycle
+        return kernels.MigrationParams(
+            imbalance_threshold=self.imbalance_threshold,
+            max_moves=self.max_moves,
+            min_goodness=self.min_goodness,
+            cost_per_gb=self.cost_per_gb,
+            contention_threshold=self.contention_threshold)
 
 
 def balance(snapshot: ClusterSnapshot,
@@ -68,29 +52,7 @@ def balance(snapshot: ClusterSnapshot,
             ) -> list[tuple[str, str]]:
     """Mutates ``snapshot`` (what-if) and returns the chosen moves."""
     config = config or BalancerConfig()
-    moves: list[tuple[str, str]] = []
-    ns = _normalized_entitlement_map(snapshot)
-    if not ns or max(ns.values()) <= config.contention_threshold:
-        return moves  # no host strained: migration cost outweighs benefit
-    cur = _imbalance(snapshot)
-    while cur > config.imbalance_threshold and len(moves) < config.max_moves:
-        best: Optional[tuple[str, str]] = None
-        best_after = cur
-        for vm_id, dest in _candidate_moves(snapshot):
-            src = snapshot.vms[vm_id].host_id
-            snapshot.vms[vm_id].host_id = dest
-            after = _imbalance(snapshot)
-            snapshot.vms[vm_id].host_id = src
-            # Risk-cost-benefit filter: improvement must beat the migration
-            # cost proxy (scaled by the VM's in-memory state to move).
-            gain = cur - after
-            cost = config.min_goodness + config.cost_per_gb * (
-                snapshot.vms[vm_id].mem_demand / 1024.0)
-            if gain > cost and after < best_after:
-                best, best_after = (vm_id, dest), after
-        if best is None:
-            break
-        snapshot.vms[best[0]].host_id = best[1]
-        moves.append(best)
-        cur = best_after
-    return moves
+    if config.max_moves <= 0:
+        return []
+    from repro.core.migration_core import MigrationCore  # local: no cycle
+    return MigrationCore(config.params()).balance(snapshot)

@@ -132,7 +132,7 @@ def run_dpm(snapshot: ClusterSnapshot, config: DPMConfig,
         if best is None:
             ok = False
             break
-        trial.vms[vm.vm_id].host_id = best
+        trial.move_vm(vm.vm_id, best)
         evacuations.append((vm.vm_id, best))
     if ok:
         rec.power_off = victim.host_id

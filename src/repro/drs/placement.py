@@ -6,11 +6,19 @@ CloudPowerCap hooks in by letting the fit check see *fundable* capacity --
 the capacity a host could reach if its power cap were raised using the
 cluster's unreserved power budget -- instead of the capacity frozen at the
 current cap (paper Fig. 3 / Sec. IV-B).
+
+Since the migration layer moved into backend-neutral kernels
+(``repro.core.kernels`` via :class:`repro.core.migration_core.MigrationCore`),
+:func:`correct_constraints` is a thin adapter: it packs the snapshot into the
+dense slot layout, runs the same correction kernel the batched sweep engine
+compiles, and replays the emitted moves onto the object snapshot.  The
+per-VM :func:`fits` / :func:`place` helpers remain the object-plane
+primitives used by DPM's evacuation planning.
 """
 
 from __future__ import annotations
 
-from typing import Callable, Optional
+from typing import Callable
 
 from repro.drs import rules as rules_mod
 from repro.drs.snapshot import ClusterSnapshot
@@ -26,28 +34,34 @@ def current_capacity(snapshot: ClusterSnapshot, host_id: str) -> float:
 
 def fits(snapshot: ClusterSnapshot, vm_id: str, host_id: str,
          capacity_fn: CapacityFn = current_capacity) -> bool:
-    """Reservation + memory + rule admission check for a what-if move."""
+    """Reservation + memory + rule admission check for a what-if move.
+
+    Per-host reservation/memory sums come from the snapshot's cached
+    placement rollups (O(1) per candidate; kept coherent by
+    ``ClusterSnapshot.move_vm``), so a full candidate scan is O(V * H), not
+    O(V^2 * H).
+    """
     vm = snapshot.vms[vm_id]
     host = snapshot.hosts[host_id]
     if not host.powered_on:
         return False
     if not rules_mod.placement_allowed(snapshot, vm_id, host_id):
         return False
-    cpu_after = snapshot.cpu_reserved(host_id) + vm.reservation
+    cpu_after = snapshot.cached_cpu_reserved(host_id) + vm.reservation
     if cpu_after > capacity_fn(snapshot, host_id) + 1e-9:
         return False
-    mem_after = sum(v.mem_demand for v in snapshot.vms_on(host_id)) + vm.mem_demand
+    mem_after = snapshot.mem_demand_on(host_id) + vm.mem_demand
     return mem_after <= host.memory_mb + 1e-9
 
 
 def place(snapshot: ClusterSnapshot, vm_id: str,
-          capacity_fn: CapacityFn = current_capacity) -> Optional[str]:
+          capacity_fn: CapacityFn = current_capacity):
     """Initial placement: pick the admissible host with most free capacity."""
     best, best_free = None, -1.0
     for host in snapshot.powered_on_hosts():
         if fits(snapshot, vm_id, host.host_id, capacity_fn):
             free = (capacity_fn(snapshot, host.host_id)
-                    - snapshot.cpu_reserved(host.host_id))
+                    - snapshot.cached_cpu_reserved(host.host_id))
             if free > best_free:
                 best, best_free = host.host_id, free
     return best
@@ -57,72 +71,13 @@ def correct_constraints(snapshot: ClusterSnapshot,
                         capacity_fn: CapacityFn = current_capacity
                         ) -> list[tuple[str, str]]:
     """Return (vm_id, dest_host) moves fixing rule violations, applied to
-    ``snapshot`` in place (what-if semantics: callers pass a clone)."""
-    moves: list[tuple[str, str]] = []
-    for rule in snapshot.rules:
-        if isinstance(rule, rules_mod.AffinityRule):
-            if not rule.violations(snapshot):
-                continue
-            # Anchor on the VM with the largest reservation (hardest to move).
-            members = [snapshot.vms[v] for v in rule.vm_ids
-                       if snapshot.vms[v].powered_on]
-            anchor = max(members, key=lambda v: v.reservation)
-            # Try anchoring on each member host in reservation order.
-            candidates = sorted({m.host_id for m in members},
-                                key=lambda h: -snapshot.vms[anchor.vm_id].reservation
-                                if h == anchor.host_id else 0)
-            fixed = False
-            for home in candidates:
-                trial = snapshot.clone()
-                trial_moves = []
-                ok = True
-                for m in members:
-                    if m.host_id == home:
-                        continue
-                    if not m.migratable or not fits(trial, m.vm_id, home,
-                                                    capacity_fn):
-                        ok = False
-                        break
-                    trial.vms[m.vm_id].host_id = home
-                    trial_moves.append((m.vm_id, home))
-                if ok:
-                    for vm_id, dest in trial_moves:
-                        snapshot.vms[vm_id].host_id = dest
-                    moves.extend(trial_moves)
-                    fixed = True
-                    break
-            _ = fixed  # unfixable violations simply remain (reported upstream)
-        elif isinstance(rule, rules_mod.VMHostRule):
-            vm = snapshot.vms[rule.vm_id]
-            if not rule.violations(snapshot):
-                continue
-            for host_id in rule.allowed_hosts:
-                if vm.migratable and fits(snapshot, vm.vm_id, host_id,
-                                          capacity_fn):
-                    snapshot.vms[vm.vm_id].host_id = host_id
-                    moves.append((vm.vm_id, host_id))
-                    break
-        elif isinstance(rule, rules_mod.AntiAffinityRule):
-            while rule.violations(snapshot):
-                by_host: dict[str, list[str]] = {}
-                for v in rule.vm_ids:
-                    vm = snapshot.vms[v]
-                    if vm.powered_on:
-                        by_host.setdefault(vm.host_id, []).append(v)
-                moved = False
-                for host_id, residents in by_host.items():
-                    if len(residents) <= 1:
-                        continue
-                    for vm_id in residents[1:]:
-                        dest = place(snapshot, vm_id, capacity_fn)
-                        if dest is not None and dest != host_id and \
-                                snapshot.vms[vm_id].migratable:
-                            snapshot.vms[vm_id].host_id = dest
-                            moves.append((vm_id, dest))
-                            moved = True
-                            break
-                    if moved:
-                        break
-                if not moved:
-                    break  # uncorrectable with current capacities
-    return moves
+    ``snapshot`` in place (what-if semantics: callers pass a clone).
+
+    Thin adapter over the shared correction kernel; the batched sweep engine
+    runs the identical kernel inside its jitted program, so all three
+    engines produce the same moves for the same snapshot.
+    """
+    if not snapshot.rules:
+        return []
+    from repro.core.migration_core import MigrationCore  # local: no cycle
+    return MigrationCore().correct(snapshot, capacity_fn)

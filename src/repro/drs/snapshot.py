@@ -101,6 +101,7 @@ class ClusterSnapshot:
         self.vms: dict[str, VirtualMachine] = {v.vm_id: v for v in vms}
         self.power_budget = float(power_budget)
         self.rules = list(rules or [])
+        self._host_sums: Optional[dict] = None
         self._check_placements()
 
     # ------------------------------------------------------------------ util
@@ -115,7 +116,50 @@ class ClusterSnapshot:
         snap.vms = {k: copy.copy(v) for k, v in self.vms.items()}
         snap.power_budget = self.power_budget
         snap.rules = list(self.rules)
+        snap._host_sums = None
         return snap
+
+    # ------------------------------------------------- per-host sum cache
+    def _placement_sums(self) -> dict:
+        """Cached per-host ``{cpu_reserved, mem_demand}`` rollups.
+
+        Built lazily in one O(VMs) pass and maintained incrementally by
+        :meth:`move_vm`, so the placement fit check costs O(1) per candidate
+        instead of an O(VMs) rescan (which made a balancer pass O(V^2 * H)).
+        Any mutation that bypasses ``move_vm`` (adding VMs, toggling VM power
+        state, editing demands in place) must call
+        :meth:`invalidate_host_sums`.
+        """
+        if self._host_sums is None:
+            cpu = {hid: 0.0 for hid in self.hosts}
+            mem = {hid: 0.0 for hid in self.hosts}
+            for v in self.vms.values():
+                if v.powered_on and v.host_id in cpu:
+                    cpu[v.host_id] += v.reservation
+                    mem[v.host_id] += v.mem_demand
+            self._host_sums = {"cpu_reserved": cpu, "mem_demand": mem}
+        return self._host_sums
+
+    def invalidate_host_sums(self) -> None:
+        self._host_sums = None
+
+    def move_vm(self, vm_id: str, dest_host: Optional[str]) -> None:
+        """Re-place a VM, keeping the per-host sum cache coherent.
+
+        Every placement mutation in the manager/simulator plane goes through
+        here; only scratch snapshots that never consult the cached sums may
+        poke ``vm.host_id`` directly.
+        """
+        vm = self.vms[vm_id]
+        if self._host_sums is not None and vm.powered_on:
+            for key, val in (("cpu_reserved", vm.reservation),
+                             ("mem_demand", vm.mem_demand)):
+                col = self._host_sums[key]
+                if vm.host_id in col:
+                    col[vm.host_id] -= val
+                if dest_host in col:
+                    col[dest_host] += val
+        vm.host_id = dest_host
 
     def as_arrays(self):
         """Struct-of-arrays view (``repro.drs.arrays.ArrayView``).
@@ -139,6 +183,19 @@ class ClusterSnapshot:
     # ------------------------------------------------------- reservations
     def cpu_reserved(self, host_id: str) -> float:
         return sum(v.reservation for v in self.vms_on(host_id))
+
+    def cached_cpu_reserved(self, host_id: str) -> float:
+        """O(1) reserved-CPU sum for the placement fit check.
+
+        Valid only while placement mutations go through :meth:`move_vm`
+        (the manager's what-if flow); code that edits the inventory directly
+        must use :meth:`cpu_reserved` or :meth:`invalidate_host_sums`.
+        """
+        return self._placement_sums()["cpu_reserved"].get(host_id, 0.0)
+
+    def mem_demand_on(self, host_id: str) -> float:
+        """O(1) sum of resident VMs' memory demand (the fit-check column)."""
+        return self._placement_sums()["mem_demand"].get(host_id, 0.0)
 
     def mem_used(self, host_id: str) -> float:
         return sum(v.memory_mb for v in self.vms_on(host_id))

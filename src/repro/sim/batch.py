@@ -21,30 +21,41 @@ accelerator-friendly program and one bottlenecked on ``segment_sum``.
 
 Two regimes, chosen at pack time:
 
-  * **cap-only** (no cell has DPM or scripted power events): placements and
-    host power states are frozen, the static-schedule fast path of PR 2.
-  * **capacity-churn** (any cell has ``dpm_enabled`` or
-    ``config.power_events``): the host power-state axis becomes dynamic
-    scan state -- an ``on`` mask plus pending power-on/off timers carried
-    through the ``lax.scan``.  Every DRS invocation additionally runs the
-    DPM triggers and Powercap Redistribution kernels; a power-off's
-    evacuation is modeled as an atomic dense-slot remap (the object plane's
-    ``instant_migrations`` regime), its funded cap changes applied when the
-    power-off timer fires, exactly as the action schema's prerequisite
-    edges order them.  Scripted events (host failure, maintenance windows)
-    flip the mask on schedule.  DRS invocations defer while actions are in
-    flight, so the schedule itself is carried per cell.
+  * **cap-only** (no cell has DPM, scripted power events, or a reason to
+    migrate): placements and host power states are frozen, the
+    static-schedule fast path of PR 2.
+  * **dynamic** (any cell has ``dpm_enabled`` or ``config.power_events``,
+    or the grid can migrate -- placement-rule violations to correct, or a
+    live migration balancer): the host power-state axis and the dense slot
+    assignment both become scan state.  Every DRS invocation replays the
+    full object-plane sequence from the shared kernels: constraint
+    correction with the injected capacity view (fundable capacity under
+    CloudPowerCap, paper Fig. 3), RedivvyPowerCap, BalancePowerCap, the
+    greedy migration balancer (``kernels.balance_migrations``), then the
+    DPM triggers and Powercap Redistribution with rule-aware evacuation
+    planning.  Migrations are atomic dense-slot remaps (the object plane's
+    ``instant_migrations`` regime); a power-off's deferred cap changes
+    apply when its timer fires, exactly as the action schema's
+    prerequisite edges order them.  Scripted events (host failure,
+    maintenance windows) flip the mask on schedule.  DRS invocations
+    defer while power actions are in flight, so the schedule itself is
+    carried per cell.
+
+Placement rules ride along as dense slot columns (built from
+``repro.drs.arrays.RulesPack``): per-VM affinity-group ids, per-rule
+anti-affinity membership masks, and allowed-host bitmasks, all remapped
+with their VM when it moves.
 
 Within its regime the engine replays the exact protocol of
 ``Simulator.run()``; parity against ``VectorSimulator`` is enforced by
-``tests/test_batch_parity.py`` (cap-only and churn scenarios: exact
-cap-change / power-on / power-off / vmotion counts, float-tolerance
-payload/energy).
+``tests/test_batch_parity.py`` and ``tests/test_migration_parity.py``
+(exact cap-change / power-on / power-off / vmotion counts,
+float-tolerance payload/energy).
 
 Cells requesting anything the engine cannot replay exactly (per-VM trace
-callables without a declarative spec, DPM with timed migrations, DPM with
-placement rules, mixed time grids) raise :class:`BatchUnsupported` at pack
-time rather than silently freezing the unsupported dimension.
+callables without a declarative spec, migrations under the timed vMotion
+model, mixed time grids) raise :class:`BatchUnsupported` at pack time
+rather than silently freezing the unsupported dimension.
 
 Everything runs in float64 (``jax.experimental.enable_x64``) so the compiled
 program tracks the NumPy object plane to reduction-order rounding.
@@ -61,6 +72,8 @@ import numpy as np
 
 from repro.backend import jax_backend
 from repro.core import kernels
+from repro.drs import rules as rules_mod
+from repro.drs.arrays import RulesPack, dense_slot_assignment
 from repro.drs.entitlement import waterfill_dense
 from repro.drs.snapshot import ClusterSnapshot
 from repro.sim.cluster import SimConfig
@@ -83,6 +96,11 @@ class BatchCell:
     powercap_enabled: bool = True            # False => Static/StaticHigh
     window: Optional[tuple[float, float]] = None
     dpm_enabled: bool = False                # phase-3 DPM + redistribution
+    # Whether the hill-climb migration balancer runs for this cell (the
+    # simulator-level twin of the manager's ``BalancerConfig.max_moves``
+    # being nonzero); only meaningful when the batch is built with a
+    # ``balancer`` whose ``max_moves > 0``.
+    balancer_enabled: bool = True
 
 
 class _StaticSpec(NamedTuple):
@@ -102,6 +120,9 @@ class _StaticSpec(NamedTuple):
     drs_first_at_s: float
     power_on_latency_s: float
     power_off_latency_s: float
+    migration: bool = False                  # correction/balancer live
+    rules: kernels.RulesMeta = kernels.RulesMeta()
+    balancer: kernels.MigrationParams = kernels.MigrationParams(max_moves=0)
 
 
 @dataclasses.dataclass
@@ -173,10 +194,11 @@ def _drs_schedule(cfg: SimConfig) -> tuple[np.ndarray, np.ndarray]:
     return np.asarray(ts, dtype=np.float64), np.asarray(fire, dtype=bool)
 
 
-# Padding values restored to a slot when its VM evacuates to another host.
-_SLOT_PAD = {"active": False, "reservation": 0.0, "limit": np.inf,
-             "weights": 1e-12, "migratable": True, "period": np.inf,
-             "cpu_vals": 0.0, "mem_vals": 0.0, "tag_masks": False}
+# Padding values restored to a slot when its VM migrates to another host
+# (extends the kernel layer's pads with the trace/tag columns; "bps" needs
+# an array pattern and is added per-program).
+_SLOT_PAD = dict(kernels.SLOT_PAD, period=np.inf, cpu_vals=0.0,
+                 mem_vals=0.0, tag_masks=False)
 
 
 @functools.lru_cache(maxsize=None)
@@ -248,7 +270,7 @@ def _compiled_program(static: _StaticSpec):
         hosts = kernels.HostCols(a["on"], a["idle"], a["peak"],
                                  a["cap_peak"], a["hyp"])
         on = a["on"]
-        active = a["active"] & on[..., None]
+        active = a["occ"] & on[..., None]
         weights = a["weights"]
         floor_caps = kernels.reserved_floor_caps(jnp, hosts, a["cpu_res"])
         vm_floors = jnp.where(active,
@@ -322,9 +344,13 @@ def _compiled_program(static: _StaticSpec):
         exists = a["exists"]
         host_mem_spec = a["host_mem"]
 
-        slot_keys = ("active", "reservation", "limit", "weights",
+        rule_keys = tuple(k for k in ("aff_group", "allowed", "anti")
+                          if k in a)
+        slot_keys = ("occ", "reservation", "limit", "weights",
                      "migratable", "period", "bps", "cpu_vals", "mem_vals",
-                     "tag_masks")
+                     "tag_masks") + rule_keys
+        pads = dict(_SLOT_PAD, bps=jnp.where(
+            jnp.arange(a["bps"].shape[-1]) == 0, 0.0, jnp.inf))
 
         def hosts_of(on):
             return kernels.HostCols(on, a["idle"], a["peak"], a["cap_peak"],
@@ -335,19 +361,53 @@ def _compiled_program(static: _StaticSpec):
 
         # ---------------------------------------------------- invocation
         def invocation(c, can, t):
-            # Demands at t in the pre-invocation slot layout (evacuation
-            # planning sees them there; delivery re-evaluates post-remap).
+            # Demands at t in the pre-invocation slot layout; they ride in
+            # the working bundle so migrations move them with their VM
+            # (delivery re-evaluates from the post-move slots).
             cpu, mem = demands(t, trace=c["slots"])
             on = c["on"]
             hosts = hosts_of(on)
-            occ = c["slots"]["active"]
-            res = c["slots"]["reservation"]
-            lim = c["slots"]["limit"]
-            act3 = occ & on[..., None]
-            cpu_res = jnp.sum(jnp.where(act3, res, 0.0), axis=-1)
             caps = c["caps"]
+            work = dict(c["slots"], cpu=cpu, mem=mem)
+            vmot = jnp.zeros(S, dtype=jnp.int32)
+            mig_pressure = jnp.zeros(S, dtype=bool)
 
-            # Phase 1: reserved-floor redivvy (Powercap Allocation).
+            # Phase 1a: constraint correction under the injected capacity
+            # view -- fundable capacity (reserved-floor caps plus the whole
+            # unreserved pool, paper Fig. 3) for CloudPowerCap cells,
+            # managed capacity at the current caps for static policies.
+            if static.migration and static.rules.any:
+                act0 = work["occ"] & on[..., None]
+                res_pre = jnp.sum(
+                    jnp.where(act0, work["reservation"], 0.0), axis=-1)
+                floors_pre = kernels.reserved_floor_caps(jnp, hosts,
+                                                         res_pre)
+                spare = jnp.maximum(
+                    a["budget"] - jnp.sum(jnp.where(on, floors_pre, 0.0),
+                                          axis=-1), 0.0)
+                fundable = kernels.managed_capacity(
+                    jnp, hosts,
+                    jnp.minimum(floors_pre + spare[:, None], a["peak"]))
+                cap_view = jnp.where(
+                    a["enabled"][:, None], fundable,
+                    kernels.managed_capacity(jnp, hosts, caps))
+                cap_view = jnp.where(on, cap_view, 0.0)
+                work, _, n_corr, prs = kernels.correct_constraints_slots(
+                    be, hosts, cap_view, work, host_mem_spec, static.rules,
+                    can,
+                    jnp.full((S, max(static.rules.move_bound, 1), 3), -1,
+                             dtype=jnp.int64),
+                    jnp.zeros(S, dtype=jnp.int64), pads=pads)
+                vmot = vmot + n_corr.astype(jnp.int32)
+                mig_pressure = mig_pressure | prs
+
+            act3 = work["occ"] & on[..., None]
+            res = work["reservation"]
+            lim = work["limit"]
+            cpu_res = jnp.sum(jnp.where(act3, res, 0.0), axis=-1)
+
+            # Phase 1b: reserved-floor redivvy (Powercap Allocation) on
+            # the post-correction placements.
             apply_cpc = can & a["enabled"]
             floor_caps = kernels.reserved_floor_caps(jnp, hosts, cpu_res)
             redivvied = kernels.redivvy_caps(jnp, on, caps, floor_caps)
@@ -357,12 +417,12 @@ def _compiled_program(static: _StaticSpec):
 
             # Phase 2: BalancePowerCap.
             vm_floors = jnp.where(act3, jnp.minimum(res, lim), 0.0)
-            vm_ceils = jnp.where(act3, jnp.clip(cpu, res, lim), 0.0)
+            vm_ceils = jnp.where(act3, jnp.clip(work["cpu"], res, lim), 0.0)
 
             def ents_at(cc):
                 managed = kernels.managed_capacity(jnp, hosts, cc)
                 alloc = waterfill_dense(jnp, be.fori, managed, vm_floors,
-                                        vm_ceils, c["slots"]["weights"],
+                                        vm_ceils, work["weights"],
                                         wf_iters)
                 return jnp.sum(alloc, axis=-1)
 
@@ -372,7 +432,29 @@ def _compiled_program(static: _StaticSpec):
             changes = changes + jnp.where(
                 can, kernels.count_cap_changes(jnp, on, caps1, caps2), 0)
 
-            # Phase 3: DPM triggers + Powercap Redistribution.
+            # Phase 2b: residual imbalance fixed by actual migrations
+            # (DRS's hill-climb; runs for every policy, like the object
+            # plane's ManagerCore).
+            if static.migration and static.balancer.max_moves > 0:
+                work, _, n_bal, prs = kernels.balance_migrations(
+                    be, hosts, caps2, work, host_mem_spec, static.balancer,
+                    static.rules, can & a["bal_on"],
+                    jnp.full((S, static.balancer.max_moves, 3), -1,
+                             dtype=jnp.int64),
+                    jnp.zeros(S, dtype=jnp.int64), pads=pads,
+                    iters=kernels.MIGRATION_WATERFILL_ITERS)
+                vmot = vmot + n_bal.astype(jnp.int32)
+                mig_pressure = mig_pressure | prs
+                act3 = work["occ"] & on[..., None]
+                res = work["reservation"]
+                lim = work["limit"]
+                cpu_res = jnp.sum(jnp.where(act3, res, 0.0), axis=-1)
+
+            # Phase 3: DPM triggers + Powercap Redistribution, on the
+            # post-migration layout.
+            occ = work["occ"]
+            cpu = work["cpu"]
+            mem = work["mem"]
             eff_slot = jnp.where(act3, jnp.clip(cpu, res, lim), 0.0)
             eff_h = jnp.sum(eff_slot, axis=-1)
             mem_h = jnp.sum(jnp.where(act3, mem, 0.0), axis=-1)
@@ -425,11 +507,12 @@ def _compiled_program(static: _StaticSpec):
             victim = jnp.argmin(jnp.where(on, cpu_util, jnp.inf), axis=-1)
             ok, order, dests, n_evac, pressure = kernels.plan_evacuation(
                 be, hosts, caps2, victim, occ, eff_slot, mem,
-                res, c["slots"]["migratable"], host_mem_spec,
-                dpmp.target_util)
+                res, work["migratable"], host_mem_spec,
+                dpmp.target_util, allowed=work.get("allowed"),
+                anti=work.get("anti"))
             do_off = maybe_off & ok
-            slots = _apply_remap(c["slots"], do_off, victim, order, dests)
-            vmot = jnp.where(do_off, n_evac, 0).astype(jnp.int32)
+            work = _apply_remap(work, do_off, victim, order, dests)
+            vmot = vmot + jnp.where(do_off, n_evac, 0).astype(jnp.int32)
 
             reabsorbed = kernels.power_off_reabsorb_caps(
                 jnp, hosts, caps2, victim, a["budget"])
@@ -452,56 +535,33 @@ def _compiled_program(static: _StaticSpec):
             poff_end = jnp.where(do_off, t + static.power_off_latency_s,
                                  c["poff_end"])
 
-            c = dict(c, caps=caps3, slots=slots, pon_idx=pon_idx,
+            c = dict(c, caps=caps3,
+                     slots={k: work[k] for k in slot_keys},
+                     pon_idx=pon_idx,
                      pon_end=pon_end, poff_idx=poff_idx, poff_end=poff_end,
                      pend_caps=pend_caps, pend_mask=pend_mask,
                      pend_cnt=pend_cnt,
                      n_changes=c["n_changes"] + changes.astype(jnp.int32),
                      vmotions=c["vmotions"] + vmot,
-                     slot_pressure=c["slot_pressure"]
+                     slot_pressure=c["slot_pressure"] | mig_pressure
                      | (maybe_off & pressure))
             return c
 
-        def _apply_remap(slots, move, victim, order, dests):
-            """Move the victim's occupied slots to their destinations' first
-            free slots, restoring pad values behind them."""
-            cnt = jnp.sum(slots["active"], axis=-1).astype(jnp.int64)
-
-            def body(k, st):
-                slots, cnt = st
+        def _apply_remap(work, move, victim, order, dests):
+            """Move the victim's occupied slots to their destinations'
+            first free slots, restoring pad values behind them (one shared
+            ``move_slot`` per evacuee, so holes left by balancer moves are
+            reused correctly)."""
+            def body(k, w):
                 j = jnp.take_along_axis(
                     order, jnp.full((S, 1), k, order.dtype), axis=-1)[..., 0]
                 dest = jnp.take_along_axis(
                     dests, jnp.full((S, 1), k, dests.dtype), axis=-1)[..., 0]
                 do = move & (dest >= 0)
-                sd = jnp.clip(dest, 0, H - 1)
-                ns = jnp.minimum(
-                    jnp.take_along_axis(cnt, sd[..., None],
-                                        axis=-1)[..., 0],
-                    J - 1)
-                new_slots = {}
-                for key, arr in slots.items():
-                    val = arr[s_idx, victim, j]
-                    mask = do if arr.ndim == 3 else do[..., None]
-                    cur_d = arr[s_idx, sd, ns]
-                    arr = arr.at[s_idx, sd, ns].set(
-                        jnp.where(mask, val, cur_d))
-                    cur_s = arr[s_idx, victim, j]
-                    if key == "bps":
-                        pad_v = jnp.where(jnp.arange(arr.shape[-1]) == 0,
-                                          0.0, jnp.inf)
-                        pad_v = jnp.broadcast_to(pad_v, cur_s.shape)
-                    else:
-                        pad_v = jnp.full_like(cur_s, _SLOT_PAD[key])
-                    arr = arr.at[s_idx, victim, j].set(
-                        jnp.where(mask, pad_v, cur_s))
-                    new_slots[key] = arr
-                cnt = cnt + (do[..., None]
-                             & (h_idx[None, :] == sd[..., None]))
-                return new_slots, cnt
+                w, _ = kernels.move_slot(jnp, w, do, victim, j, dest, pads)
+                return w
 
-            slots, _ = be.fori(J, body, (slots, cnt))
-            return slots
+            return be.fori(J, body, work)
 
         # ----------------------------------------------------------- step
         def step(c, x):
@@ -576,7 +636,7 @@ def _compiled_program(static: _StaticSpec):
             cpu, mem = demands(t, trace=c["slots"])
             on, caps = c["on"], c["caps"]
             hosts = hosts_of(on)
-            active = c["slots"]["active"] & on[..., None]
+            active = c["slots"]["occ"] & on[..., None]
             tick, tp, td, mem_dem_h = deliver(
                 hosts, caps, on, active, c["slots"]["weights"],
                 c["slots"]["reservation"], c["slots"]["limit"],
@@ -663,67 +723,119 @@ class BatchedSimulator:
     float64 fixed point in ~60 trips for realistic magnitudes, so this
     matches the NumPy primitive's 200-trip result exactly at half the cost.
 
-    ``slot_slack`` over-provisions the per-host VM slot axis for
-    capacity-churn grids so DPM evacuations have somewhere to land; if a
-    run's consolidation would exceed it, the engine raises after the run
-    (``slot_pressure``) rather than silently diverging.
+    ``slot_slack`` over-provisions the per-host VM slot axis for dynamic
+    grids so DPM evacuations and balancer/correction migrations have
+    somewhere to land; if a run's consolidation would exceed it, the engine
+    raises after the run (``slot_pressure``) rather than silently diverging.
+
+    ``balancer`` (a ``kernels.MigrationParams``) enables the hill-climb
+    migration balancer for cells with ``balancer_enabled`` -- the batched
+    twin of the manager's ``BalancerConfig``; the default (``max_moves=0``)
+    matches the sweep regime with migration search disabled.
     """
 
     def __init__(self, cells: Sequence[BatchCell],
                  balance: Optional[kernels.BalanceParams] = None,
                  dpm: Optional[kernels.DPMParams] = None,
                  waterfill_iters: int = 100,
-                 slot_slack: float = 2.0):
+                 slot_slack: float = 2.0,
+                 balancer: Optional[kernels.MigrationParams] = None):
         if not cells:
             raise ValueError("no cells")
         self.cells = list(cells)
-        cfg = cells[0].config
-        for c in cells[1:]:
-            same = (c.config.duration_s == cfg.duration_s
-                    and c.config.tick_s == cfg.tick_s
-                    and c.config.drs_period_s == cfg.drs_period_s
-                    and c.config.drs_first_at_s == cfg.drs_first_at_s)
-            if not same:
-                raise BatchUnsupported(
-                    f"cell {c.name!r} disagrees on the shared time grid")
-        self.config = cfg
+        self.config = cells[0].config
+        self._balancer = balancer or kernels.MigrationParams(max_moves=0)
         self._churn = any(c.dpm_enabled or c.config.power_events
                           for c in cells)
+        # The migration layer compiles in when the grid can actually move a
+        # VM: rule violations to correct at t=0, a live hill-climb
+        # balancer, or rules that DPM evacuations might have to respect
+        # (and whose affinity groups a later correction must re-gather).
+        has_rules = any(c.snapshot.rules for c in cells)
+        violated = any(rules_mod.all_violations(c.snapshot)
+                       for c in cells)
+        balancer_live = (self._balancer.max_moves > 0
+                         and any(c.balancer_enabled for c in cells))
+        self._migration = (balancer_live or violated
+                           or (has_rules
+                               and any(c.dpm_enabled for c in cells)))
+        self._dynamic = self._churn or self._migration
         self._validate()
         self._pack(balance or kernels.BalanceParams(),
                    dpm or kernels.DPMParams(), waterfill_iters, slot_slack)
 
     # ---------------------------------------------------------- validation
+    @staticmethod
+    def _cell_reason(c: BatchCell, ref: SimConfig, churn: bool,
+                     balancer: kernels.MigrationParams,
+                     check_traces: bool = False) -> Optional[str]:
+        """Why this cell cannot join a batch anchored on ``ref`` (None if
+        it can)."""
+        same = (c.config.duration_s == ref.duration_s
+                and c.config.tick_s == ref.tick_s
+                and c.config.drs_period_s == ref.drs_period_s
+                and c.config.drs_first_at_s == ref.drs_first_at_s)
+        if not same:
+            return "disagrees on the shared time grid"
+        if c.dpm_enabled and not c.config.instant_migrations:
+            return ("DPM in the batched engine models evacuation as an "
+                    "atomic slot remap; set config.instant_migrations=True "
+                    "(and use the same on the reference engine) or run it "
+                    "on the vector engine")
+        can_move = ((balancer.max_moves > 0 and c.balancer_enabled)
+                    or (c.snapshot.rules
+                        and rules_mod.all_violations(c.snapshot)))
+        if can_move and not c.config.instant_migrations:
+            return ("migrations in the batched engine are atomic slot "
+                    "remaps; set config.instant_migrations=True (and use "
+                    "the same on the reference engine) or run it on the "
+                    "vector engine")
+        if churn:
+            same = (c.config.power_on_latency_s == ref.power_on_latency_s
+                    and c.config.power_off_latency_s
+                    == ref.power_off_latency_s)
+            if not same:
+                return ("disagrees on power latencies (shared across a "
+                        "capacity-churn batch)")
+        for t, host_id, _ in c.config.power_events:
+            if host_id not in c.snapshot.hosts:
+                return f"power event at t={t} targets unknown host {host_id!r}"
+        if check_traces:
+            bank = TraceBank.from_traces(c.traces,
+                                         list(c.snapshot.vms))
+            if bank.fallback:
+                return "traces without a declarative spec cannot be batched"
+        return None
+
+    @classmethod
+    def unsupported_cells(cls, cells: Sequence[BatchCell],
+                          balancer: Optional[kernels.MigrationParams] = None
+                          ) -> dict[str, str]:
+        """Map of cell name -> reason for every cell the batched engine
+        cannot replay, anchored on the first supportable cell's time grid.
+        Used by ``run_sweep``'s per-cell fallback partitioning."""
+        balancer = balancer or kernels.MigrationParams(max_moves=0)
+        churn = any(c.dpm_enabled or c.config.power_events for c in cells)
+        out: dict[str, str] = {}
+        ref: Optional[SimConfig] = None
+        for c in cells:
+            reason = cls._cell_reason(c, ref or c.config, churn, balancer,
+                                      check_traces=True)
+            if reason is None and ref is None:
+                ref = c.config
+            if reason is not None:
+                out[c.name] = reason
+        return out
+
     def _validate(self) -> None:
         """Reject regimes the jitted program cannot replay exactly, loudly
         (the alternative -- freezing the unsupported dimension -- produces
         plausible-looking wrong results)."""
-        cfg = self.config
         for c in self.cells:
-            if c.dpm_enabled and not c.config.instant_migrations:
-                raise BatchUnsupported(
-                    f"cell {c.name!r}: DPM in the batched engine models "
-                    "evacuation as an atomic slot remap; set "
-                    "config.instant_migrations=True (and use the same on "
-                    "the reference engine) or run it on the vector engine")
-            if c.dpm_enabled and c.snapshot.rules:
-                raise BatchUnsupported(
-                    f"cell {c.name!r}: DPM evacuation with placement rules "
-                    "is not batched; run this cell on the vector engine")
-            if self._churn:
-                same = (c.config.power_on_latency_s
-                        == cfg.power_on_latency_s
-                        and c.config.power_off_latency_s
-                        == cfg.power_off_latency_s)
-                if not same:
-                    raise BatchUnsupported(
-                        f"cell {c.name!r} disagrees on power latencies "
-                        "(shared across a capacity-churn batch)")
-            for t, host_id, _ in c.config.power_events:
-                if host_id not in c.snapshot.hosts:
-                    raise BatchUnsupported(
-                        f"cell {c.name!r}: power event at t={t} targets "
-                        f"unknown host {host_id!r}")
+            reason = self._cell_reason(c, self.config, self._churn,
+                                       self._balancer)
+            if reason is not None:
+                raise BatchUnsupported(f"cell {c.name!r}: {reason}")
 
     # ------------------------------------------------------------- packing
     def _pack(self, balance: kernels.BalanceParams,
@@ -743,22 +855,13 @@ class BatchedSimulator:
         # sort by host index yields every VM's (host, slot) coordinate.
         prepped = []
         n_bps = 1
+        rmeta = kernels.RulesMeta()
+        pack_rules = self._migration and any(c.snapshot.rules
+                                             for c in cells)
         for c in cells:
             snap = c.snapshot
-            vms = list(snap.vms.values())
+            vms, order, hj, slot, counts = dense_slot_assignment(snap, H)
             vm_ids = [v.vm_id for v in vms]
-            host_idx = {hid: j for j, hid in enumerate(snap.hosts)}
-            host_j = np.array([host_idx.get(v.host_id, -1) for v in vms],
-                              dtype=np.int64)
-            act = np.array([v.powered_on for v in vms], dtype=bool)
-            act &= host_j >= 0
-            order = np.nonzero(act)[0]
-            hj = host_j[order]
-            srt = np.argsort(hj, kind="stable")
-            order, hj = order[srt], hj[srt]
-            counts = np.bincount(hj, minlength=H)
-            starts = np.concatenate(([0], np.cumsum(counts)[:-1]))
-            slot = np.arange(hj.size) - np.repeat(starts, counts)
 
             bank = TraceBank.from_traces(c.traces, vm_ids)
             if bank.fallback:
@@ -768,11 +871,21 @@ class BatchedSimulator:
                     f"cannot be batched: {bad[:5]}")
             if bank.rows.size:
                 n_bps = max(n_bps, bank.bps.shape[1])
-            prepped.append((vms, bank, order, hj, slot, counts))
+            pack = None
+            if pack_rules:
+                pack = RulesPack.from_rules(
+                    snap.rules, {v: i for i, v in enumerate(vm_ids)},
+                    {hid: j for j, hid in enumerate(snap.hosts)})
+                # Grid bounds: fieldwise max of every cell's static shape.
+                rmeta = kernels.RulesMeta(
+                    *(max(a, b) for a, b in zip(rmeta, pack.meta())))
+            prepped.append((vms, bank, order, hj, slot, counts, pack))
         J = max(max((int(p[5].max()) for p in prepped if p[5].size),
                     default=1), 1)
-        if self._churn and any(c.dpm_enabled for c in cells):
-            # Headroom for DPM consolidation: evacuees land in free slots.
+        if (self._churn and any(c.dpm_enabled for c in cells)) \
+                or self._migration:
+            # Headroom for consolidation and balancer moves: migrating VMs
+            # land in free slots.
             J = int(math.ceil(J * max(slot_slack, 1.0)))
 
         tag_names = sorted({t for c in cells
@@ -794,7 +907,8 @@ class BatchedSimulator:
             "cpu_res": host_col(0.0),
             "budget": np.zeros(S), "enabled": np.zeros(S, dtype=bool),
             "dpm": np.zeros(S, dtype=bool),
-            "active": np.zeros((S, H, J), dtype=bool),
+            "bal_on": np.zeros(S, dtype=bool),
+            "occ": np.zeros((S, H, J), dtype=bool),
             "reservation": np.zeros((S, H, J)),
             "limit": np.full((S, H, J), np.inf),
             "weights": np.full((S, H, J), 1e-12),
@@ -811,10 +925,18 @@ class BatchedSimulator:
             "win_mask": np.zeros((T, S), dtype=bool),
         }
         a["bps"][..., 0] = 0.0
+        # Rule columns only exist when some cell actually has that rule
+        # kind -- absent columns skip their admission term entirely.
+        if pack_rules and rmeta.n_groups:
+            a["aff_group"] = np.full((S, H, J), -1, dtype=np.int64)
+        if pack_rules and rmeta.n_vmhost:
+            a["allowed"] = np.ones((S, H, J, H), dtype=bool)
+        if pack_rules and rmeta.n_anti:
+            a["anti"] = np.zeros((S, H, J, rmeta.n_anti), dtype=bool)
 
         for i, c in enumerate(cells):
             snap = c.snapshot
-            vms, bank, order, hj, slot, counts = prepped[i]
+            vms, bank, order, hj, slot, counts, pack = prepped[i]
             host_idx = {hid: j for j, hid in enumerate(snap.hosts)}
             for j, h in enumerate(snap.hosts.values()):
                 a["on"][i, j] = h.powered_on
@@ -827,7 +949,7 @@ class BatchedSimulator:
                 a["caps0"][i, j] = h.power_cap
             n = len(vms)
             res = np.array([v.reservation for v in vms])
-            a["active"][i, hj, slot] = True
+            a["occ"][i, hj, slot] = True
             a["reservation"][i, hj, slot] = res[order]
             a["limit"][i, hj, slot] = np.array([v.limit for v in vms])[order]
             a["weights"][i, hj, slot] = np.maximum(
@@ -842,6 +964,15 @@ class BatchedSimulator:
             for g, tag in enumerate(tag_names):
                 tagged = np.array([tag in v.tags for v in vms], dtype=bool)
                 a["tag_masks"][i, hj, slot, g] = tagged[order]
+            if pack_rules:
+                h_c = len(snap.hosts)
+                if "aff_group" in a:
+                    a["aff_group"][i, hj, slot] = pack.affinity_group[order]
+                if "allowed" in a:
+                    a["allowed"][i, hj, slot, :h_c] = pack.allowed[order]
+                if "anti" in a and pack.n_anti:
+                    a["anti"][i, hj, slot, :pack.n_anti] = \
+                        pack.anti_member.T[order]
             # Demand traces in TraceBank's padded step-function layout;
             # trace-less VMs freeze at their initial demand.
             dem0 = np.array([v.demand for v in vms])
@@ -866,6 +997,7 @@ class BatchedSimulator:
             a["budget"][i] = snap.power_budget
             a["enabled"][i] = c.powercap_enabled
             a["dpm"][i] = c.dpm_enabled
+            a["bal_on"][i] = c.balancer_enabled
             for e, (ev_t, host_id, on) in enumerate(
                     sorted(c.config.power_events)):
                 a["ev_t"][i, e] = ev_t
@@ -879,11 +1011,14 @@ class BatchedSimulator:
         self._static = _StaticSpec(
             n_cells=S, n_hosts=H, n_slots=J, n_tags=G, n_events=E,
             tick_s=self.config.tick_s, waterfill_iters=waterfill_iters,
-            balance=balance, churn=self._churn, dpm=dpm,
+            balance=balance, churn=self._dynamic, dpm=dpm,
             drs_period_s=self.config.drs_period_s,
             drs_first_at_s=self.config.drs_first_at_s,
             power_on_latency_s=self.config.power_on_latency_s,
-            power_off_latency_s=self.config.power_off_latency_s)
+            power_off_latency_s=self.config.power_off_latency_s,
+            migration=self._migration,
+            rules=rmeta if self._migration else kernels.RulesMeta(),
+            balancer=self._balancer)
         self._ticks = T
 
     # ------------------------------------------------------------- running
@@ -905,8 +1040,8 @@ class BatchedSimulator:
             bad = [self.cells[i].name
                    for i in np.nonzero(out["slot_pressure"])[0]]
             raise RuntimeError(
-                f"slot capacity bound an evacuation decision in cells "
-                f"{bad[:5]}: repack with a larger slot_slack")
+                f"slot capacity bound a migration/evacuation decision in "
+                f"cells {bad[:5]}: repack with a larger slot_slack")
         if self._static.churn:
             over = out["over_budget"]
         else:

@@ -94,6 +94,8 @@ class Simulator:
             cpu, mem = trace(t)
             vm = self.live.vms[vm_id]
             vm.demand, vm.mem_demand = cpu, mem
+        # Demand edits bypass move_vm: drop the cached per-host sums.
+        self.live.invalidate_host_sums()
 
     def _migration_duration(self, vm) -> float:
         mb = max(vm.mem_demand, 64.0)
@@ -156,7 +158,7 @@ class Simulator:
                 continue
             a = p.action
             if a.kind == "migrate":
-                self.live.vms[a.target].host_id = a.dest
+                self.live.move_vm(a.target, a.dest)
                 self._topology_version += 1
                 self.acc.vmotions += 1
                 if self.window_acc is not None and self._in_window(t):
@@ -198,7 +200,7 @@ class Simulator:
                     continue
                 if self.config.instant_migrations:
                     # Atomic remap: no copy window, no endpoint overhead.
-                    vm.host_id = a.dest
+                    self.live.move_vm(a.target, a.dest)
                     self._topology_version += 1
                     self.acc.vmotions += 1
                     if self.window_acc is not None and self._in_window(t):

@@ -242,6 +242,7 @@ class VectorSimulator(Simulator):
             vm = vms[vid]
             vm.demand = float(self._cpu_dem[row])
             vm.mem_demand = float(self._mem_dem[row])
+        self.live.invalidate_host_sums()
         self.low_since = {
             self._host_ids[i]: float(self._low_since_arr[i])
             for i in np.nonzero(~np.isnan(self._low_since_arr))[0]}

@@ -2,17 +2,20 @@
 
 The paper evaluates CloudPowerCap on 3 hosts / 30 VMs; this module
 generates whole families of scenarios -- cluster size x rack budget x
-spike pattern x host-spec mix x capacity churn -- and runs each policy on
-the vectorized engine, reporting throughput (ticks/sec) alongside the
-paper's payload / power metrics.  It feeds the ``sweep_scale`` /
-``sweep_grid`` / ``sweep_grid_dpm`` benchmark entries
-(``python -m benchmarks.run``).
+spike pattern x host-spec mix x capacity churn x placement rules -- and
+runs each policy on the vectorized engine, reporting throughput
+(ticks/sec) alongside the paper's payload / power metrics.  It feeds the
+``sweep_scale`` / ``sweep_grid`` / ``sweep_grid_dpm`` /
+``sweep_grid_rules`` benchmark entries (``python -m benchmarks.run``).
 
 Design notes:
-  * Migration *search* stays disabled in sweeps (``max_moves=0``): at
-    thousand-host scale the interesting regimes are cap-only management
-    and capacity churn (cf. prediction-based oversubscription at Azure);
-    full migration search at this scale is its own future work item.
+  * Migration *search* stays disabled in the cap-only/churn families
+    (``max_moves=0``): there the interesting regimes are cap-only
+    management and capacity churn (cf. prediction-based oversubscription
+    at Azure).  The *rule* families turn the full migration layer on --
+    constraint correction plus the hill-climb balancer
+    (:data:`RULE_BALANCER`) -- now that it runs as batched kernels
+    (``sweep_grid_rules``).
   * Capacity-churn families (``SweepSpec.churn``) exercise the host
     lifecycle: ``dpm`` (a demand valley consolidates and powers a host
     off, a later burst powers it back on with Powercap Redistribution
@@ -36,6 +39,7 @@ import numpy as np
 from repro.core.manager import CloudPowerCapManager, ManagerConfig
 from repro.core.power_model import PAPER_HOST, HostPowerSpec
 from repro.drs import balancer as balancer_mod
+from repro.drs.rules import AffinityRule, AntiAffinityRule, VMHostRule
 from repro.drs.snapshot import ClusterSnapshot, Host, VirtualMachine
 from repro.sim.cluster import SimConfig
 from repro.sim.experiments import ENGINES, POLICIES
@@ -53,6 +57,12 @@ SMALL_HOST = HostPowerSpec(
 
 SPIKES = ("flat", "burst", "step", "prime")
 CHURNS = ("none", "dpm", "maintenance", "failure")
+RULESETS = ("none", "violation_burst", "cap_blocked")
+
+#: The migration balancer used by rule-scenario cells, on every engine (the
+#: object manager for vector cells, ``kernels.MigrationParams`` for the
+#: batched program); non-rule sweep cells keep migration search disabled.
+RULE_BALANCER = balancer_mod.BalancerConfig(max_moves=8)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -66,6 +76,7 @@ class SweepSpec:
     spike: str = "burst"                    # one of SPIKES
     heterogeneous: bool = False             # mix PAPER_HOST with SMALL_HOST
     churn: str = "none"                     # one of CHURNS
+    rules: str = "none"                     # one of RULESETS
     duration_s: float = 1200.0
     tick_s: float = 10.0
     drs_period_s: float = 300.0
@@ -84,6 +95,11 @@ class SweepSpec:
     def dpm_enabled(self) -> bool:
         """Churn families where the manager itself drives the lifecycle."""
         return self.churn in ("dpm", "failure")
+
+    @property
+    def migration_enabled(self) -> bool:
+        """Rule families run the migration layer (correction + balancer)."""
+        return self.rules != "none"
 
 
 def _specs_for(spec: SweepSpec) -> list[HostPowerSpec]:
@@ -105,6 +121,8 @@ def build_sweep(spec: SweepSpec, policy: str
         raise ValueError(f"unknown spike pattern {spec.spike!r}")
     if spec.churn not in CHURNS:
         raise ValueError(f"unknown churn family {spec.churn!r}")
+    if spec.rules not in RULESETS:
+        raise ValueError(f"unknown rule family {spec.rules!r}")
     host_specs = _specs_for(spec)
     budget = spec.budget
     total_peak = sum(s.power_peak for s in host_specs)
@@ -181,7 +199,37 @@ def build_sweep(spec: SweepSpec, policy: str
                 period_s=spec.duration_s,
                 prime_start_frac=float(phase_frac[v]), prime_frac=0.4)
 
-    snap = ClusterSnapshot(hosts, vms, power_budget=budget)
+    rules: list = []
+    if spec.rules != "none":
+        on_count = len(on_hosts)
+        if on_count < 4:
+            raise ValueError("rule families need >= 4 powered-on hosts")
+        if spec.rules == "violation_burst":
+            # A burst of corrections for the first DRS invocation: two
+            # affinity groups split across hosts, two anti-affinity pairs
+            # co-placed, two VMs parked off their allowed hosts.
+            rules = [
+                AffinityRule(("vm0", "vm1")),
+                AffinityRule(("vm2", "vm3")),
+                AntiAffinityRule(("vm4", f"vm{4 + on_count}")),
+                AntiAffinityRule(("vm5", f"vm{5 + on_count}")),
+                VMHostRule("vm6", frozenset(
+                    {on_hosts[7 % on_count], on_hosts[8 % on_count]})),
+                VMHostRule("vm7", frozenset(
+                    {on_hosts[8 % on_count], on_hosts[9 % on_count]})),
+            ]
+        else:  # cap_blocked -- paper Fig. 1a at sweep scale
+            # Affinity correction whose fit only passes when the check
+            # sees *fundable* capacity: the anchor host must reach beyond
+            # its current cap (CloudPowerCap corrects; Static cannot).
+            anchor, mover = "vm2", "vm0"
+            filler = f"vm{on_count}"            # second VM on host 0
+            vm_by_id = {v.vm_id: v for v in vms}
+            vm_by_id[anchor].reservation = 14_000.0
+            vm_by_id[mover].reservation = 6_000.0
+            vm_by_id[filler].reservation = 12_000.0
+            rules = [AffinityRule((mover, anchor))]
+    snap = ClusterSnapshot(hosts, vms, power_budget=budget, rules=rules)
     power_events: tuple = ()
     if spec.churn == "maintenance":
         # One powered-on host leaves for the middle third and returns.
@@ -194,7 +242,8 @@ def build_sweep(spec: SweepSpec, policy: str
                     drs_period_s=spec.drs_period_s,
                     drs_first_at_s=spec.drs_period_s,
                     record_timeline=False,
-                    instant_migrations=spec.dpm_enabled,
+                    instant_migrations=(spec.dpm_enabled
+                                        or spec.migration_enabled),
                     power_events=power_events)
     return snap, traces, cfg
 
@@ -203,9 +252,14 @@ def _sweep_manager(policy: str,
                    spec: Optional[SweepSpec] = None) -> CloudPowerCapManager:
     cfg = ManagerConfig(powercap_enabled=(policy == "cpc"),
                         dpm_enabled=bool(spec and spec.dpm_enabled))
-    # No migration *search* at scale (see module note); DPM's targeted
-    # evacuations still run for the churn families.
-    cfg.balancer = balancer_mod.BalancerConfig(max_moves=0)
+    if spec is not None and spec.migration_enabled:
+        # Rule families exercise the full migration layer: constraint
+        # correction plus the hill-climb balancer.
+        cfg.balancer = dataclasses.replace(RULE_BALANCER)
+    else:
+        # No migration *search* at scale (see module note); DPM's targeted
+        # evacuations still run for the churn families.
+        cfg.balancer = balancer_mod.BalancerConfig(max_moves=0)
     return CloudPowerCapManager(cfg)
 
 
@@ -247,6 +301,29 @@ def run_cell(spec: SweepSpec, policy: str,
         power_offs=acc.power_offs)
 
 
+def _grid_balancer(specs: Sequence[SweepSpec]):
+    """The batched engine's MigrationParams when any spec runs migrations."""
+    if any(s.migration_enabled for s in specs):
+        return RULE_BALANCER.params()
+    return None
+
+
+def _build_batch_cells(specs: Sequence[SweepSpec],
+                       policies: Sequence[str]):
+    from repro.sim.batch import BatchCell
+    cells, keys = [], []
+    for spec in specs:
+        for p in policies:
+            snap, traces, cfg = build_sweep(spec, p)
+            cells.append(BatchCell(
+                name=f"{spec.name}/{p}", snapshot=snap, traces=traces,
+                config=cfg, powercap_enabled=(p == "cpc"),
+                dpm_enabled=spec.dpm_enabled,
+                balancer_enabled=spec.migration_enabled))
+            keys.append((spec, p))
+    return cells, keys
+
+
 def run_sweep(specs: Sequence[SweepSpec],
               policies: Sequence[str] = POLICIES,
               engine: str = "vector",
@@ -257,25 +334,57 @@ def run_sweep(specs: Sequence[SweepSpec],
     ``engine="batch"`` routes the whole grid through the jit-compiled
     :class:`repro.sim.batch.BatchedSimulator` -- one program for every
     (spec, policy) cell -- instead of cell-at-a-time Python execution.
-    A grid requesting a regime the batched engine cannot replay exactly
-    raises :class:`repro.sim.batch.BatchUnsupported` (the default), or --
-    with ``on_unsupported="fallback"`` -- falls back to the sequential
-    ``VectorSimulator`` path with a warning, never silently freezing the
-    unsupported dimension.
+    A grid with cells requesting a regime the batched engine cannot replay
+    exactly raises :class:`repro.sim.batch.BatchUnsupported` (the
+    default); with ``on_unsupported="fallback"`` the grid is
+    *partitioned* instead -- the supported cells run as one batched
+    program, only the offending cells (named in the warning) run on the
+    sequential ``VectorSimulator``, and the results are merged -- never
+    silently freezing the unsupported dimension.
     """
     if engine == "batch":
-        from repro.sim.batch import BatchUnsupported
-        try:
+        from repro.sim.batch import BatchedSimulator
+        if on_unsupported != "fallback":
             return run_sweep_batched(specs, policies)
-        except BatchUnsupported as e:
-            if on_unsupported != "fallback":
-                raise
-            warnings.warn(
-                f"batched engine cannot run this grid ({e}); falling back "
-                "to the sequential vector engine", RuntimeWarning,
-                stacklevel=2)
-            engine = "vector"
-    out: dict[str, dict[str, SweepCellResult]] = {}
+        cells, keys = _build_batch_cells(specs, policies)
+        reasons = BatchedSimulator.unsupported_cells(
+            cells, _grid_balancer(specs))
+        if not reasons:
+            return run_sweep_batched(specs, policies,
+                                     _prebuilt=(cells, keys))
+        warnings.warn(
+            "batched engine cannot run cells "
+            f"{sorted(reasons)[:5]}{'...' if len(reasons) > 5 else ''} "
+            f"({next(iter(reasons.values()))}); running those on the "
+            "sequential vector engine and batching the rest",
+            RuntimeWarning, stacklevel=2)
+        good = [(s, p) for s, p in keys
+                if f"{s.name}/{p}" not in reasons]
+        out: dict[str, dict[str, SweepCellResult]] = {}
+        if good:
+            good_specs = list(dict.fromkeys(s for s, _ in good))
+            by_spec: dict[str, list[str]] = {}
+            for s, p in good:
+                by_spec.setdefault(s.name, []).append(p)
+            # scenario_families grids are rectangular per spec; batch the
+            # supported sub-grid in one program, reusing the cells already
+            # built for the probe.
+            good_policies = [p for p in policies
+                             if all(p in by_spec[s.name]
+                                    for s in good_specs)]
+            sub = [(c, k) for c, k in zip(cells, keys)
+                   if k[0] in good_specs and k[1] in good_policies]
+            batched = run_sweep_batched(
+                good_specs, policies=good_policies,
+                _prebuilt=([c for c, _ in sub], [k for _, k in sub]))
+            for name, by_p in batched.items():
+                out.setdefault(name, {}).update(by_p)
+        for s, p in keys:
+            if p not in out.get(s.name, {}):
+                out.setdefault(s.name, {})[p] = run_cell(s, p,
+                                                         engine="vector")
+        return out
+    out = {}
     for spec in specs:
         out[spec.name] = {p: run_cell(spec, p, engine=engine)
                           for p in policies}
@@ -284,29 +393,25 @@ def run_sweep(specs: Sequence[SweepSpec],
 
 def run_sweep_batched(specs: Sequence[SweepSpec],
                       policies: Sequence[str] = POLICIES,
-                      slot_slack: float = 3.0
+                      slot_slack: float = 3.0,
+                      _prebuilt=None
                       ) -> dict[str, dict[str, SweepCellResult]]:
     """One jitted program over the whole (spec x policy) grid.
 
     All specs must share ``duration_s``/``tick_s``/``drs_period_s`` (true
     for :func:`scenario_families` grids); cluster size, budget, spike
-    family, host mix, churn family, and policy vary per cell.  Wall time is
-    measured for the batch and attributed evenly: per-cell ``wall_s`` is
-    ``batch_wall / n_cells``, so ``ticks_per_s`` reads as aggregate
-    throughput.
+    family, host mix, churn family, rule family, and policy vary per cell.
+    Wall time is measured for the batch and attributed evenly: per-cell
+    ``wall_s`` is ``batch_wall / n_cells``, so ``ticks_per_s`` reads as
+    aggregate throughput.
     """
-    from repro.sim.batch import BatchCell, BatchedSimulator
+    from repro.sim.batch import BatchedSimulator
 
-    cells, keys = [], []
-    for spec in specs:
-        for p in policies:
-            snap, traces, cfg = build_sweep(spec, p)
-            cells.append(BatchCell(
-                name=f"{spec.name}/{p}", snapshot=snap, traces=traces,
-                config=cfg, powercap_enabled=(p == "cpc"),
-                dpm_enabled=spec.dpm_enabled))
-            keys.append((spec, p))
-    sim = BatchedSimulator(cells, slot_slack=slot_slack)
+    # ``_prebuilt`` lets run_sweep's fallback probe hand over the grid it
+    # already constructed instead of rebuilding every cell.
+    cells, keys = _prebuilt or _build_batch_cells(specs, policies)
+    sim = BatchedSimulator(cells, slot_slack=slot_slack,
+                           balancer=_grid_balancer(specs))
     t0 = time.perf_counter()
     res = sim.run()
     wall = time.perf_counter() - t0
@@ -333,22 +438,26 @@ def scenario_families(sizes: Sequence[int] = (10, 100, 1000),
                       spikes: Sequence[str] = ("burst", "prime"),
                       heterogeneous: Sequence[bool] = (False, True),
                       churns: Sequence[str] = ("none",),
+                      rules: Sequence[str] = ("none",),
                       duration_s: float = 1200.0,
                       tick_s: float = 10.0) -> list[SweepSpec]:
-    """The full scenario grid: size x budget x spike x host mix x churn."""
+    """The full grid: size x budget x spike x host mix x churn x rules."""
     specs = []
     for n in sizes:
         for b in budgets_per_host_w:
             for spike in spikes:
                 for het in heterogeneous:
                     for churn in churns:
-                        name = (f"h{n}_b{int(b)}w_{spike}"
-                                f"{'_het' if het else ''}"
-                                f"{'' if churn == 'none' else '_' + churn}")
-                        specs.append(SweepSpec(
-                            name=name, n_hosts=n, rack_budget_w=b * n,
-                            spike=spike, heterogeneous=het, churn=churn,
-                            duration_s=duration_s, tick_s=tick_s))
+                        for rule in rules:
+                            name = (f"h{n}_b{int(b)}w_{spike}"
+                                    f"{'_het' if het else ''}"
+                                    f"{'' if churn == 'none' else '_' + churn}"
+                                    f"{'' if rule == 'none' else '_' + rule}")
+                            specs.append(SweepSpec(
+                                name=name, n_hosts=n, rack_budget_w=b * n,
+                                spike=spike, heterogeneous=het, churn=churn,
+                                rules=rule, duration_s=duration_s,
+                                tick_s=tick_s))
     return specs
 
 

@@ -1,0 +1,349 @@
+"""Migration-layer parity: the batched engine must reproduce the object
+plane's constraint corrections and hill-climb balancing move for move.
+
+All three engines route migration decisions through the same kernels
+(``repro.core.kernels.correct_constraints_slots`` / ``balance_migrations``
+via ``repro.core.migration_core.MigrationCore`` on the object plane, and
+inside the ``lax.scan`` program on the batched plane), so parity here is
+exact: identical move counts, final placements, and float-tight energy for
+affinity, anti-affinity, VM-host, and the fundable-capacity fit case
+(paper Fig. 1a / Fig. 3: a move admitted only because the fit check sees
+the capacity a host could reach if its cap were raised from the unreserved
+budget).  Also covers the dense rule encoding (``RulesPack``) and the
+per-host-sum cache behind the O(1) fit check.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.manager import CloudPowerCapManager, ManagerConfig
+from repro.core.power_model import PAPER_HOST
+from repro.drs import balancer as balancer_mod
+from repro.drs import dpm as dpm_mod
+from repro.drs import placement, rules as rules_mod
+from repro.drs.arrays import RulesPack
+from repro.drs.rules import AffinityRule, AntiAffinityRule, VMHostRule
+from repro.drs.snapshot import ClusterSnapshot, Host, VirtualMachine
+from repro.sim import workloads
+from repro.sim.batch import BatchCell, BatchedSimulator, BatchUnsupported
+from repro.sim.cluster import SimConfig
+from repro.sim.engine import VectorSimulator
+
+FLOAT_FIELDS = ("cpu_payload_mhz_s", "cpu_demand_mhz_s", "mem_payload_mb_s",
+                "mem_demand_mb_s", "energy_j")
+INT_FIELDS = ("cap_changes", "vmotions", "power_ons", "power_offs")
+POLICIES = ("cpc", "static")
+
+
+def _manager(policy, max_moves=8, dpm_enabled=False):
+    cfg = ManagerConfig(powercap_enabled=(policy == "cpc"),
+                        dpm_enabled=dpm_enabled)
+    cfg.balancer = balancer_mod.BalancerConfig(max_moves=max_moves)
+    if dpm_enabled:
+        cfg.dpm = dpm_mod.DPMConfig(stable_window_s=150.0)
+    return CloudPowerCapManager(cfg)
+
+
+def _pair(build, max_moves=8, dpm_enabled=False, slot_slack=3.0):
+    """(vector refs by policy, batched results) for one scenario builder."""
+    refs, cells = {}, []
+    for policy in POLICIES:
+        snap, traces, cfg = build()
+        sim = VectorSimulator(snap, _manager(policy, max_moves, dpm_enabled),
+                              traces, cfg)
+        refs[policy] = sim.run()
+        snap2, traces2, cfg2 = build()
+        cells.append(BatchCell(
+            name=policy, snapshot=snap2, traces=traces2, config=cfg2,
+            powercap_enabled=(policy == "cpc"), dpm_enabled=dpm_enabled,
+            balancer_enabled=max_moves > 0))
+    bal = balancer_mod.BalancerConfig(max_moves=max_moves).params()
+    from repro.core.kernels import DPMParams
+    bsim = BatchedSimulator(
+        cells, balancer=bal, slot_slack=slot_slack,
+        dpm=DPMParams(stable_window_s=150.0) if dpm_enabled else None)
+    return refs, bsim.run()
+
+
+def _assert_parity(refs, res, rtol=1e-9):
+    for i, policy in enumerate(POLICIES):
+        ref, acc = refs[policy], res.accumulators(i)
+        for f in INT_FIELDS:
+            assert getattr(acc, f) == getattr(ref.acc, f), (policy, f)
+        for f in FLOAT_FIELDS:
+            np.testing.assert_allclose(getattr(acc, f), getattr(ref.acc, f),
+                                       rtol=rtol, err_msg=(policy, f))
+
+
+# ------------------------------------------------------------- scenarios
+def _rules_build():
+    """All three rule kinds violated at t=0 on a 4-host cluster."""
+    hosts = [Host(f"host{i}", PAPER_HOST, power_cap=250.0)
+             for i in range(4)]
+    vms, traces, rng = [], {}, np.random.RandomState(0)
+    for i in range(24):
+        vm = VirtualMachine(vm_id=f"vm{i}", vcpus=1, memory_mb=8 * 1024,
+                            host_id=f"host{i % 4}", reservation=500.0)
+        vms.append(vm)
+        base = rng.uniform(800, 1500)
+        traces[vm.vm_id] = workloads.burst(
+            base_cpu=base, burst_cpu=2.2 * base + 2000, mem_mb=2048.0,
+            t_start=600.0, t_end=1500.0)
+    rules = [AffinityRule(("vm0", "vm1")),
+             AntiAffinityRule(("vm4", "vm8")),
+             VMHostRule("vm2", frozenset({"host0", "host1"}))]
+    snap = ClusterSnapshot(hosts, vms, power_budget=4 * 250.0, rules=rules)
+    cfg = SimConfig(duration_s=2100.0, drs_first_at_s=300.0,
+                    record_timeline=False, instant_migrations=True)
+    return snap, traces, cfg
+
+
+def _contended_build():
+    """Everything piled on host0: the hill-climb balancer must spread it."""
+    hosts = [Host(f"host{i}", PAPER_HOST, power_cap=250.0)
+             for i in range(3)]
+    vms, traces, rng = [], {}, np.random.RandomState(3)
+    for i in range(18):
+        vm = VirtualMachine(vm_id=f"vm{i}", vcpus=1, memory_mb=8 * 1024,
+                            host_id="host0")
+        vms.append(vm)
+        traces[vm.vm_id] = workloads.constant(rng.uniform(1500, 2500),
+                                              2048.0)
+    snap = ClusterSnapshot(hosts, vms, power_budget=3 * 250.0)
+    cfg = SimConfig(duration_s=1200.0, drs_first_at_s=300.0,
+                    record_timeline=False, instant_migrations=True)
+    return snap, traces, cfg
+
+
+def _cap_blocked_build():
+    """Paper Fig. 1a: the affinity correction fits only under the fundable
+    capacity view, so CloudPowerCap corrects and Static cannot."""
+    hosts = [Host("hA", PAPER_HOST, power_cap=250.0),
+             Host("hB", PAPER_HOST, power_cap=250.0)]
+    vms = [VirtualMachine(vm_id="vm1", reservation=12000.0, demand=12000.0,
+                          host_id="hA", mem_demand=1024.0),
+           VirtualMachine(vm_id="vm2", reservation=6000.0, demand=6000.0,
+                          host_id="hA", mem_demand=1024.0),
+           VirtualMachine(vm_id="vm3", reservation=14000.0, demand=14000.0,
+                          host_id="hB", mem_demand=1024.0)]
+    traces = {v.vm_id: workloads.constant(v.demand, v.mem_demand)
+              for v in vms}
+    snap = ClusterSnapshot(hosts, vms, power_budget=640.0,
+                           rules=[AffinityRule(("vm2", "vm3"))])
+    cfg = SimConfig(duration_s=900.0, drs_first_at_s=300.0,
+                    record_timeline=False, instant_migrations=True)
+    return snap, traces, cfg
+
+
+def _churn_rules_build():
+    """Valley->burst DPM churn with rules constraining evacuations."""
+    hosts = [Host(f"host{i}", PAPER_HOST, power_cap=250.0)
+             for i in range(3)]
+    vms, traces = [], {}
+    for i in range(30):
+        vm = VirtualMachine(vm_id=f"vm{i}", vcpus=1, memory_mb=8 * 1024,
+                            host_id=f"host{i // 10}")
+        vms.append(vm)
+        traces[vm.vm_id] = workloads.step_trace([
+            (0.0, 1200.0, 2 * 1024),
+            (700.0, 300.0, 2 * 1024),
+            (1400.0, 2400.0, 2 * 1024)])
+    rules = [AntiAffinityRule(("vm0", "vm10")),
+             VMHostRule("vm1", frozenset({"host0", "host2"}))]
+    snap = ClusterSnapshot(hosts, vms, power_budget=900.0, rules=rules)
+    cfg = SimConfig(duration_s=2100.0, drs_first_at_s=300.0,
+                    record_timeline=False, instant_migrations=True)
+    return snap, traces, cfg
+
+
+# ----------------------------------------------------------------- tests
+def test_rule_correction_parity():
+    """Affinity + anti-affinity + VM-host corrections: exact parity, and
+    the violations are actually fixed in both planes."""
+    refs, res = _pair(_rules_build)
+    _assert_parity(refs, res)
+    for policy in POLICIES:
+        assert refs[policy].acc.vmotions >= 3        # all three corrections
+        assert not rules_mod.all_violations(refs[policy].final)
+
+
+def test_balancer_parity_under_contention():
+    """The hill-climb balancer picks identical moves in both planes; CPC
+    moves fewer VMs because BalancePowerCap shifts Watts first."""
+    refs, res = _pair(_contended_build)
+    _assert_parity(refs, res)
+    assert refs["static"].acc.vmotions > 0
+    assert refs["cpc"].acc.vmotions < refs["static"].acc.vmotions
+    # Final placements agree: per-host occupancy from the batched engine's
+    # accounting equals the vector engine's final snapshot.
+    for policy, i in (("cpc", 0), ("static", 1)):
+        final = refs[policy].final
+        assert sum(len(final.vms_on(h)) for h in final.hosts) == 18
+
+
+def test_fundable_capacity_fit_parity():
+    """Fig. 3: the correction move is admitted only when the fit check sees
+    fundable capacity -- CPC corrects (with the cap changes that fund it),
+    Static leaves the violation -- identically in both planes."""
+    refs, res = _pair(_cap_blocked_build)
+    _assert_parity(refs, res)
+    assert refs["cpc"].acc.vmotions == 1
+    assert refs["cpc"].acc.cap_changes > 0
+    assert not rules_mod.all_violations(refs["cpc"].final)
+    assert refs["static"].acc.vmotions == 0
+    assert rules_mod.all_violations(refs["static"].final)
+
+
+def test_rule_aware_dpm_evacuation_parity():
+    """DPM power-off with placement rules (previously BatchUnsupported):
+    evacuation targets respect anti-affinity and VM-host rules, with exact
+    lifecycle-count parity."""
+    refs, res = _pair(_churn_rules_build, max_moves=0, dpm_enabled=True)
+    _assert_parity(refs, res)
+    assert refs["cpc"].acc.power_offs == 1
+    assert refs["cpc"].acc.vmotions == 10
+    # vm0 evacuated off host0 but never onto vm10's host1; vm1 only to its
+    # allowed hosts.
+    final = refs["cpc"].final
+    assert not rules_mod.all_violations(final)
+
+
+def test_final_placement_parity_via_object_adapter():
+    """MigrationCore drives the object snapshot to the same final placement
+    the kernels compute (replay fidelity, not just counts)."""
+    snap, _, _ = _rules_build()
+    work = snap.clone()
+    moves = placement.correct_constraints(work)
+    assert moves
+    for vm_id, dest in moves:
+        assert work.vms[vm_id].host_id == dest
+    assert not rules_mod.all_violations(work)
+
+
+def test_migration_requires_instant_migrations():
+    """A cell that can migrate under the timed vMotion model is rejected
+    loudly rather than silently diverging."""
+    snap, traces, cfg = _rules_build()
+    cfg.instant_migrations = False
+    with pytest.raises(BatchUnsupported, match="instant_migrations"):
+        BatchedSimulator([BatchCell("a", snap, traces, cfg)])
+
+
+def test_unsupported_cells_partition():
+    """The per-cell reason map names exactly the offending cells."""
+    import dataclasses
+    snap1, traces1, cfg1 = _rules_build()
+    snap2, traces2, cfg2 = _rules_build()
+    cfg2 = dataclasses.replace(cfg2, instant_migrations=False)
+    cells = [BatchCell("good", snap1, traces1, cfg1),
+             BatchCell("bad", snap2, traces2, cfg2)]
+    reasons = BatchedSimulator.unsupported_cells(cells)
+    assert set(reasons) == {"bad"}
+    assert "instant_migrations" in reasons["bad"]
+
+
+# ------------------------------------------------------- rule encoding
+def test_rules_pack_encoding():
+    vm_index = {f"vm{i}": i for i in range(6)}
+    host_index = {f"h{i}": i for i in range(3)}
+    pack = RulesPack.from_rules(
+        [AffinityRule(("vm0", "vm1")), AffinityRule(("vm1", "vm2")),
+         AntiAffinityRule(("vm3", "vm4")),
+         VMHostRule("vm5", frozenset({"h0", "h2"}))],
+        vm_index, host_index)
+    # Overlapping affinity rules merge into one group.
+    assert pack.n_groups == 1
+    assert pack.max_group_members == 3
+    g = pack.affinity_group
+    assert g[0] == g[1] == g[2] >= 0 and g[3] == g[4] == g[5] == -1
+    assert pack.n_anti == 1
+    assert list(pack.anti_member[0]) == [False, False, False, True, True,
+                                         False]
+    assert pack.n_vmhost == 1
+    assert list(pack.allowed[5]) == [True, False, True]
+    assert all(pack.allowed[i].all() for i in range(5))
+
+
+# --------------------------------------------- fit-check sum cache (perf)
+def test_fit_check_uses_cached_host_sums():
+    """The reservation/memory fit check must not rescan the VM inventory
+    per candidate (the old O(V^2 H) balancer pass)."""
+    snap, _, _ = _rules_build()
+    calls = {"n": 0}
+    orig = ClusterSnapshot.vms_on
+
+    def counting_vms_on(self, host_id):
+        calls["n"] += 1
+        return orig(self, host_id)
+
+    ClusterSnapshot.vms_on = counting_vms_on
+    try:
+        snap.mem_demand_on("host0")          # build the cache
+        calls["n"] = 0
+        for _ in range(50):
+            placement.fits(snap, "vm0", "host1")
+        assert calls["n"] == 0
+    finally:
+        ClusterSnapshot.vms_on = orig
+
+
+def test_host_sum_cache_tracks_moves():
+    """move_vm keeps the cached per-host sums exact through a long random
+    move sequence (regression for the incremental-update path)."""
+    snap, _, _ = _rules_build()
+    rng = np.random.RandomState(7)
+    hosts = list(snap.hosts)
+    snap.mem_demand_on(hosts[0])             # build the cache
+    vm_ids = list(snap.vms)
+    for _ in range(200):
+        snap.move_vm(vm_ids[rng.randint(len(vm_ids))],
+                     hosts[rng.randint(len(hosts))])
+    for h in hosts:
+        brute_mem = sum(v.mem_demand for v in snap.vms_on(h))
+        brute_cpu = sum(v.reservation for v in snap.vms_on(h))
+        np.testing.assert_allclose(snap.mem_demand_on(h), brute_mem)
+        np.testing.assert_allclose(snap.cached_cpu_reserved(h), brute_cpu)
+
+
+def test_multiple_affinity_groups_anchoring_same_host():
+    """Two affinity groups both anchoring on the fullest host must BOTH
+    gather there (regression: undersized slot headroom silently dropped
+    the second group's correction on the object plane)."""
+    hosts = [Host(f"host{i}", PAPER_HOST, power_cap=320.0)
+             for i in range(4)]
+    vms = []
+    for g, res in (("a", 100.0), ("b", 90.0)):
+        for i in range(4):
+            vms.append(VirtualMachine(
+                vm_id=f"{g}{i}", reservation=res if i == 0 else 10.0,
+                demand=200.0, mem_demand=256.0, host_id=f"host{i}"))
+    rules = [AffinityRule(("a0", "a1", "a2", "a3")),
+             AffinityRule(("b0", "b1", "b2", "b3"))]
+    snap = ClusterSnapshot(hosts, vms, power_budget=4 * 320.0, rules=rules)
+    moves = placement.correct_constraints(snap)
+    assert len(moves) == 6                       # 3 movers per group
+    assert not rules_mod.all_violations(snap)
+    assert all(v.host_id == "host0" for v in snap.vms.values())
+
+
+def test_affinity_retries_other_member_hosts():
+    """When the anchor's host cannot admit the group, correction gathers
+    it on another member host instead (regression: the multi-home retry
+    of the pre-kernel object plane)."""
+    hosts = [Host("h0", PAPER_HOST, power_cap=320.0),
+             Host("h1", PAPER_HOST, power_cap=320.0)]
+    vms = [
+        VirtualMachine(vm_id="big", reservation=10_000.0, demand=10_000.0,
+                       host_id="h0", mem_demand=512.0),
+        VirtualMachine(vm_id="filler", reservation=23_000.0,
+                       demand=23_000.0, host_id="h0", mem_demand=512.0),
+        VirtualMachine(vm_id="small", reservation=2_000.0, demand=2_000.0,
+                       host_id="h1", mem_demand=512.0),
+    ]
+    # managed(320 W) = 34,800 MHz: h0 cannot take small (35,000), but h1
+    # can take big (12,000) -- only the non-anchor home works.
+    snap = ClusterSnapshot(hosts, vms, power_budget=640.0,
+                           rules=[AffinityRule(("big", "small"))])
+    moves = placement.correct_constraints(snap)
+    assert moves == [("big", "h1")]
+    assert not rules_mod.all_violations(snap)

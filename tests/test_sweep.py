@@ -148,9 +148,33 @@ def test_run_sweep_batched_matches_sequential_churn():
     assert churned                       # the grid exercised the lifecycle
 
 
-def test_run_sweep_batch_fallback_on_unsupported():
-    """A grid the batched engine cannot replay exactly either raises or --
-    on request -- falls back to the vector engine with a warning."""
+def test_run_sweep_batched_matches_sequential_rules():
+    """Rule-family cells (constraint corrections, fundable-capacity fits,
+    hill-climb balancing) reproduce the sequential sweep exactly."""
+    specs = scenario_families(sizes=(8,), budgets_per_host_w=(250.0,),
+                              spikes=("burst",), heterogeneous=(False,),
+                              rules=("violation_burst", "cap_blocked"),
+                              duration_s=600.0, tick_s=10.0)
+    policies = ("cpc", "static")
+    seq = run_sweep(specs, policies=policies, engine="vector")
+    bat = run_sweep(specs, policies=policies, engine="batch")
+    migrated = False
+    for name in seq:
+        for p in policies:
+            a, b = seq[name][p], bat[name][p]
+            assert (b.cap_changes, b.vmotions) \
+                == (a.cap_changes, a.vmotions), (name, p)
+            np.testing.assert_allclose(b.cpu_payload_mhz_s,
+                                       a.cpu_payload_mhz_s, rtol=1e-9)
+            np.testing.assert_allclose(b.energy_j, a.energy_j, rtol=1e-9)
+            migrated |= a.vmotions > 0
+    assert migrated                 # the grid exercised the migration layer
+
+
+def test_run_sweep_batch_fallback_partitions_grid():
+    """A grid with cells the batched engine cannot replay exactly raises by
+    default; with on_unsupported="fallback" it is *partitioned* -- only the
+    offending cells run on the sequential vector engine."""
     from repro.sim.batch import BatchUnsupported
 
     specs = [SweepSpec(name="a", n_hosts=4, spike="flat", duration_s=300.0,
@@ -159,10 +183,17 @@ def test_run_sweep_batch_fallback_on_unsupported():
                        tick_s=30.0)]         # mixed time grids
     with pytest.raises(BatchUnsupported, match="time grid"):
         run_sweep(specs, policies=("cpc",), engine="batch")
-    with pytest.warns(RuntimeWarning, match="falling back"):
+    with pytest.warns(RuntimeWarning, match="sequential vector engine"):
         res = run_sweep(specs, policies=("cpc",), engine="batch",
                         on_unsupported="fallback")
     assert set(res) == {"a", "b"}
+    # Parity for both halves of the partition against the pure-vector run.
+    for specs_one in ([specs[0]], [specs[1]]):
+        ref = run_sweep(specs_one, policies=("cpc",), engine="vector")
+        name = specs_one[0].name
+        assert res[name]["cpc"].cap_changes == ref[name]["cpc"].cap_changes
+        np.testing.assert_allclose(res[name]["cpc"].energy_j,
+                                   ref[name]["cpc"].energy_j, rtol=1e-9)
 
 
 def test_run_sweep_batched_policy_separation():
