@@ -8,6 +8,14 @@ on the same hardware, so a CI runner's absolute cells/s cancels out, while
 a regression in the compiled program (an accidental host-sync, a carry that
 stopped aliasing, a kernel falling off the fused path) shows up directly.
 
+Also gates the fused Pallas allocation kernel (``kernel_waterfill``): the
+CI runner has no TPU, so interpret-mode wall time is correctness-grade
+noise and is recorded informationally only -- the gate is *parity*, the
+kernel's actual contract: bitwise-identical float64 output against the lax
+executor on a fixed problem.  Any drift in the fused kernel (a masking
+change, a reduction reorder, an accidental f32 cast) fails the gate even
+when every timing looks fine.
+
 The committed baseline lives in ``BENCH_sweep.json`` under ``"smoke"``;
 the gate fails when a grid's speedup drops more than ``--tolerance``
 (default 30%) below it.  The baseline should be refreshed with
@@ -82,6 +90,51 @@ def measure() -> dict:
     return out
 
 
+def measure_kernel() -> dict:
+    """``kernel_waterfill``: parity-gated, timing-informational.
+
+    Runs the fused Pallas dense waterfill and the dispatch-free lax
+    reference on the same fixed float64 problem (interpret mode off-TPU)
+    and records the max absolute difference -- the gate requires exactly
+    0.0, the bit-identity the differential test harness locks down.
+    """
+    import time
+
+    import numpy as np
+    import jax.numpy as jnp
+    from jax.experimental import enable_x64
+
+    from repro.kernels.powercap import ops, ref
+
+    rng = np.random.default_rng(0)
+    s, h, j = 4, 16, 8
+    floors = rng.uniform(0.0, 300.0, (s, h, j))
+    ceils = floors + rng.uniform(0.0, 500.0, (s, h, j))
+    weights = rng.uniform(0.1, 10.0, (s, h, j))
+    active = rng.random((s, h, j)) < 0.8
+    floors = np.where(active, floors, 0.0)
+    ceils = np.where(active, ceils, 0.0)
+    capacity = rng.uniform(0.0, 1.2, (s, h)) * np.maximum(
+        ceils.sum(axis=-1), 1.0)
+    with enable_x64():
+        args = tuple(jnp.asarray(a) for a in (capacity, floors, ceils,
+                                              weights))
+        act = jnp.asarray(active)
+        got = ops.pallas_waterfill_dense(*args, active=act)
+        want = ref.lax_waterfill_dense(*args, active=act)
+        got.block_until_ready()
+        t0 = time.perf_counter()
+        for _ in range(3):
+            ops.pallas_waterfill_dense(*args,
+                                       active=act).block_until_ready()
+        us = (time.perf_counter() - t0) / 3 * 1e6
+        return {
+            "bit_identical": bool(jnp.all(got == want)),
+            "max_abs_diff_vs_lax": float(jnp.abs(got - want).max()),
+            "us_per_call_interpret": us,
+        }
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--update-baseline", action="store_true",
@@ -97,6 +150,11 @@ def main() -> int:
               f"batched {m['cells_per_s_batched']:.1f} cells/s, "
               f"sequential {m['cells_per_s_sequential']:.1f} cells/s, "
               f"speedup {m['speedup']:.2f}x", flush=True)
+    measured["kernel_waterfill"] = mk = measure_kernel()
+    print(f"kernel_waterfill: max_abs_diff vs lax "
+          f"{mk['max_abs_diff_vs_lax']:.1e}, "
+          f"{mk['us_per_call_interpret']:.0f}us/call (interpret mode, "
+          f"informational)", flush=True)
 
     with open(BASELINE_PATH) as f:
         bench = json.load(f)
@@ -120,6 +178,16 @@ def main() -> int:
             print(f"FAIL {name}: grid missing from this run",
                   file=sys.stderr)
             failed = True
+            continue
+        if "bit_identical" in base:
+            # Parity gate: the fused kernel must stay bit-identical to the
+            # lax executor; interpret-mode timing is never gated.
+            ok = got["bit_identical"] and got["max_abs_diff_vs_lax"] == 0.0
+            status = "ok" if ok else "FAIL"
+            print(f"{status} {name}: pallas vs lax max_abs_diff "
+                  f"{got['max_abs_diff_vs_lax']:.1e} (gate: exactly 0)",
+                  flush=True)
+            failed |= not ok
             continue
         floor = base["speedup"] * (1.0 - args.tolerance)
         status = "ok" if got["speedup"] >= floor else "FAIL"

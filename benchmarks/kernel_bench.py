@@ -70,10 +70,60 @@ def bench_moe_gmm():
     return us, f"flops={flops:.2e};vmem_cell={vmem_kb:.0f}KB"
 
 
+def bench_kernel_waterfill():
+    from repro.kernels.powercap.ops import pallas_waterfill_dense
+    s, h, j, iters = 8, 32, 16, 200
+    ks = jax.random.split(jax.random.PRNGKey(3), 4)
+    floors = jax.random.uniform(ks[0], (s, h, j), maxval=300.0)
+    ceils = floors + jax.random.uniform(ks[1], (s, h, j), maxval=500.0)
+    weights = jax.random.uniform(ks[2], (s, h, j), minval=0.1, maxval=10.0)
+    capacity = jax.random.uniform(ks[3], (s, h), maxval=5000.0)
+    us = _time(lambda c, f, ce, w: pallas_waterfill_dense(c, f, ce, w),
+               capacity, floors, ceils, weights)
+    # Bisection: ~6 flops per slot per trip (scale, 2x clip, add, compare,
+    # select), plus the residual pro-rata pass.
+    flops = (iters * 6 + 10) * s * h * j
+    # Per grid cell: capacity (1,h) + four (1,h,j) f64 columns in, out.
+    vmem_kb = (h + 5 * h * j) * 8 / 1024
+    return us, f"flops={flops:.2e};vmem_cell={vmem_kb:.0f}KB"
+
+
+def bench_kernel_cap_balance():
+    from repro.core import kernels
+    from repro.kernels.powercap.ops import pallas_balance_caps
+    import numpy as np
+    s, h, j = 4, 16, 8
+    rng = np.random.default_rng(4)
+    floors = jnp.asarray(rng.uniform(0.0, 300.0, (s, h, j)))
+    ceils = floors + jnp.asarray(rng.uniform(0.0, 500.0, (s, h, j)))
+    weights = jnp.asarray(rng.uniform(0.1, 10.0, (s, h, j)))
+    active = jnp.asarray(rng.random((s, h, j)) < 0.8)
+    idle = rng.uniform(80.0, 120.0, (s, h))
+    peak = idle + rng.uniform(100.0, 200.0, (s, h))
+    hosts = kernels.HostCols(
+        jnp.ones((s, h), bool), jnp.asarray(idle), jnp.asarray(peak),
+        jnp.asarray(rng.uniform(2000.0, 4000.0, (s, h))),
+        jnp.asarray(rng.uniform(0.0, 50.0, (s, h))))
+    caps0 = jnp.asarray(rng.uniform(idle, peak))
+    cpu_res = jnp.zeros((s, h))
+    budget = jnp.sum(caps0, axis=-1)
+    enabled = jnp.ones((s,), bool)
+    dense = kernels.DenseCols(floors, ceils, weights, active)
+    us = _time(lambda c: pallas_balance_caps(hosts, c, dense, cpu_res,
+                                             budget, enabled,
+                                             kernels.BalanceParams()), caps0)
+    # Per round: one fused waterfill over every slot + O(H) balance math.
+    flops = (200 * 6 + 10) * s * h * j + 60 * s * h
+    vmem_kb = (5 * h * j + 16 * h) * 8 / 1024
+    return us, f"flops_round={flops:.2e};vmem_cell={vmem_kb:.0f}KB"
+
+
 BENCHES = [
     ("kernel_flash_attention", bench_flash_attention),
     ("kernel_ssd_scan", bench_ssd_scan),
     ("kernel_moe_gmm", bench_moe_gmm),
+    ("kernel_waterfill", bench_kernel_waterfill),
+    ("kernel_cap_balance", bench_kernel_cap_balance),
 ]
 
 

@@ -1,14 +1,28 @@
-"""Array backends: one kernel source, two executors (NumPy and JAX).
+"""Array backends: one kernel source, three executors.
 
 The allocation math in ``repro.core.kernels`` and ``repro.drs.entitlement``
 is written once against this tiny namespace-plus-segment-ops protocol and
-runs on either backend:
+runs on any of three executors:
 
-  * ``NUMPY`` -- eager NumPy.  Python-level loop drivers may early-exit on
-    concrete booleans, which keeps the per-object manager path cheap.
-  * ``JAX``   -- ``jax.numpy`` plus ``lax`` structured loops, so the same
-    kernels are `jit`/`vmap`-able and compile into the batched sweep engine
-    (``repro.sim.batch``) as a single program.
+  * ``numpy``      -- eager NumPy.  Python-level loop drivers may early-exit
+    on concrete booleans, which keeps the per-object manager path cheap.
+  * ``jax``        -- ``jax.numpy`` plus ``lax`` structured loops, so the
+    same kernels are `jit`/`vmap`-able and compile into the batched sweep
+    engine (``repro.sim.batch``) as a single program.
+  * ``jax-pallas`` -- the JAX executor with the hot allocation kernels
+    (dense waterfill, the fused waterfill + BalancePowerCap round) routed
+    through the Pallas kernels in ``repro.kernels.powercap`` instead of
+    plain lax ops.  Off-TPU the kernels run in interpret mode, where they
+    are bit-identical to the lax path (enforced by
+    ``tests/test_kernel_parity.py``).
+
+The active executor is selected by the ``REPRO_EXECUTOR`` environment
+variable or :func:`set_executor` / :func:`executor_scope`; it changes only
+*where* the allocation math executes, never the decision protocol --
+``ManagerCore`` (via the ``repro.core.balance`` adapter), the NumPy
+``VectorSimulator`` delivery path, and the jitted ``BatchedSimulator`` all
+pick up the selected executor through the ``repro.drs.entitlement`` /
+``repro.core.kernels`` dispatchers.
 
 Only the operations the kernels actually need are abstracted: the shared
 elementwise vocabulary (``where``/``clip``/``minimum``/...) is identical
@@ -20,6 +34,9 @@ per-object manager) never touches jax device state.
 """
 
 from __future__ import annotations
+
+import contextlib
+import os
 
 import numpy as np
 
@@ -112,3 +129,57 @@ def jax_backend() -> JaxBackend:
     if _JAX is None:
         _JAX = JaxBackend()
     return _JAX
+
+
+# --------------------------------------------------------------- executors
+#: Valid values for the allocation-kernel executor switch.
+EXECUTORS = ("numpy", "jax", "jax-pallas")
+
+#: Process-wide override set by :func:`set_executor`; ``None`` defers to the
+#: ``REPRO_EXECUTOR`` environment variable (default ``"jax"``: NumPy callers
+#: stay on NumPy, JAX callers use plain lax ops).
+_EXECUTOR_OVERRIDE: str | None = None
+
+
+def executor_name() -> str:
+    """The active allocation-kernel executor.
+
+    ``numpy``/``jax`` keep every caller on its native array plane (the
+    historical behavior).  ``jax-pallas`` routes the hot allocation kernels
+    -- dense waterfill and the fused BalancePowerCap round -- through the
+    Pallas kernels in ``repro.kernels.powercap``: JAX callers (the batched
+    sweep engine) swap them in place of the lax ops, and the object-plane
+    adapters (``repro.core.balance``, ``VectorSimulator`` delivery) lift
+    their columns onto the JAX plane to reach them.
+    """
+    name = _EXECUTOR_OVERRIDE or os.environ.get("REPRO_EXECUTOR", "jax")
+    if name not in EXECUTORS:
+        raise ValueError(
+            f"REPRO_EXECUTOR={name!r} is not one of {EXECUTORS}")
+    return name
+
+
+def set_executor(name: str | None) -> None:
+    """Set (or with ``None`` clear) the process-wide executor override."""
+    global _EXECUTOR_OVERRIDE
+    if name is not None and name not in EXECUTORS:
+        raise ValueError(f"executor {name!r} is not one of {EXECUTORS}")
+    _EXECUTOR_OVERRIDE = name
+
+
+@contextlib.contextmanager
+def executor_scope(name: str):
+    """Temporarily pin the executor (used by the batched engine so the
+    executor captured at pack time governs trace-time dispatch)."""
+    global _EXECUTOR_OVERRIDE
+    prev = _EXECUTOR_OVERRIDE
+    set_executor(name)
+    try:
+        yield
+    finally:
+        _EXECUTOR_OVERRIDE = prev
+
+
+def pallas_enabled() -> bool:
+    """Whether the hot allocation kernels should dispatch to Pallas."""
+    return executor_name() == "jax-pallas"

@@ -25,6 +25,7 @@ import dataclasses
 
 import numpy as np
 
+from repro import backend as backend_mod
 from repro.backend import NUMPY
 from repro.core import kernels
 from repro.drs import actions as act
@@ -61,22 +62,80 @@ def balance_power_cap(snapshot: ClusterSnapshot,
     hosts = av.host_cols()
     floors, ceils, weights, seg = av.waterfill_cols()
 
-    def ents_at(caps):
-        return kernels.entitlement_sums(NUMPY, hosts, caps, floors[None],
-                                        ceils[None], weights[None],
-                                        seg[None])
+    if backend_mod.pallas_enabled():
+        # Executor lift: rebuild the ragged VM lists as the dense slot
+        # layout and run the fused Pallas loop on the JAX plane.  Same
+        # protocol, same per-host waterfill math; entitlements differ from
+        # the segment form only by reduction-order rounding.
+        new_caps, did_balance = _balance_caps_pallas(
+            f, av, hosts, floors, ceils, weights,
+            snapshot.power_budget, config)
+    else:
+        def ents_at(caps):
+            return kernels.entitlement_sums(NUMPY, hosts, caps,
+                                            floors[None], ceils[None],
+                                            weights[None], seg[None])
 
-    caps, did = kernels.balance_caps(
-        NUMPY, hosts, av.power_cap[None].copy(), ents_at,
-        av.cpu_reserved()[None],
-        np.asarray([snapshot.power_budget]),
-        np.asarray([True]),
-        config.params())
-    did_balance = bool(did[0])
-    av.write_caps(f, caps[0])
+        caps, did = kernels.balance_caps(
+            NUMPY, hosts, av.power_cap[None].copy(), ents_at,
+            av.cpu_reserved()[None],
+            np.asarray([snapshot.power_budget]),
+            np.asarray([True]),
+            config.params())
+        new_caps, did_balance = caps[0], bool(did[0])
+    av.write_caps(f, new_caps)
     if did_balance:
         f.validate()
     return f, did_balance
+
+
+def _balance_caps_pallas(snapshot, av, hosts, floors, ceils, weights,
+                         budget: float, config: BalanceConfig):
+    """Run the balance loop through the fused Pallas kernel (``S == 1``).
+
+    Packs the active VMs into the dense ``(1, H, J)`` slot layout (the same
+    assignment the batched engine uses, so slot-ordered tie-breaks agree)
+    and hands ``kernels.balance_caps`` the ``DenseCols`` bundle; the
+    ``jax-pallas`` dispatch takes it from there.  Returns
+    ``(caps (H,), did)`` on the NumPy plane.
+    """
+    import jax.numpy as jnp
+    from jax.experimental import enable_x64
+
+    from repro.drs.arrays import dense_slot_assignment
+    from repro.drs.entitlement import waterfill_dense
+
+    H = av.n_hosts
+    _, order, hj, slot, counts = dense_slot_assignment(snapshot, H)
+    J = max(int(counts.max()) if counts.size else 0, 1)
+    fl = np.zeros((1, H, J))
+    ce = np.zeros((1, H, J))
+    w = np.full((1, H, J), 1e-12)
+    act = np.zeros((1, H, J), dtype=bool)
+    fl[0, hj, slot] = floors[order]
+    ce[0, hj, slot] = ceils[order]
+    w[0, hj, slot] = weights[order]
+    act[0, hj, slot] = True
+
+    be = backend_mod.jax_backend()
+    with enable_x64():
+        hosts_j = kernels.HostCols(*(jnp.asarray(c) for c in hosts))
+        dense = kernels.DenseCols(jnp.asarray(fl), jnp.asarray(ce),
+                                  jnp.asarray(w), jnp.asarray(act))
+
+        def ents_at(c):
+            managed = kernels.managed_capacity(jnp, hosts_j, c)
+            alloc = waterfill_dense(jnp, be.fori, managed, dense.floors,
+                                    dense.ceils, dense.weights,
+                                    active=dense.active)
+            return jnp.sum(alloc, axis=-1)
+
+        caps, did = kernels.balance_caps(
+            be, hosts_j, jnp.asarray(av.power_cap[None]), ents_at,
+            jnp.asarray(av.cpu_reserved()[None]),
+            jnp.asarray([budget]), jnp.asarray([True]),
+            config.params(), dense=dense)
+        return np.asarray(caps)[0], bool(np.asarray(did)[0])
 
 
 def emit_actions(before: ClusterSnapshot, after: ClusterSnapshot

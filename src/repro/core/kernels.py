@@ -22,6 +22,7 @@ from __future__ import annotations
 
 from typing import NamedTuple
 
+from repro import backend as backend_mod
 from repro.drs.entitlement import waterfill_core, waterfill_dense
 
 #: Minimum cap delta that counts as a change -- must match the emission
@@ -66,6 +67,25 @@ class MigrationParams(NamedTuple):
     min_goodness: float = 1e-3
     cost_per_gb: float = 2e-4
     contention_threshold: float = 0.9
+
+
+class DenseCols(NamedTuple):
+    """Dense-slot VM entitlement columns, ``(S, H, J)`` each.
+
+    Callers that hold their VMs in the dense slot layout can hand these to
+    :func:`balance_caps` alongside ``ents_at``; the ``jax-pallas`` executor
+    then fuses the per-round waterfill with the balance math in a single
+    kernel pass instead of materializing the ``(S, H, J)`` allocation
+    between them.  ``active`` is the live-slot mask (stale values in padded
+    slots are neutralized inside the primitive); ``iters`` the bisection
+    trip count (static).
+    """
+
+    floors: object                 # (S, H, J)
+    ceils: object                  # (S, H, J)
+    weights: object                # (S, H, J)
+    active: object                 # (S, H, J) bool
+    iters: int = 200
 
 
 class RulesMeta(NamedTuple):
@@ -202,8 +222,89 @@ def entitlement_sums(be, hosts: HostCols, caps, vm_floors, vm_ceils,
     return be.seg_sum(alloc, seg_flat, s * h).reshape(s, h)
 
 
+def balance_round(xp, hosts: HostCols, caps, managed, ents, ns, done, did,
+                  ents_at, cpu_reserved, budget, n_on, peak_managed,
+                  params: BalanceParams):
+    """One BalancePowerCap progressive-filling round (the body of the
+    :func:`balance_caps` loop, extracted so the fused Pallas kernel executes
+    the *same* function on its VMEM blocks -- bit-identity between the lax
+    and Pallas executors is by construction, not by parallel maintenance).
+
+    Takes and returns the loop state ``(caps, managed, ents, ns, done,
+    did)``; ``ents_at(caps) -> (S, H)`` supplies per-host VM-entitlement
+    sums at candidate caps.
+    """
+    on = hosts.on
+    imbalance = _masked_std(xp, ns, on, n_on)
+    total_cap = xp.sum(managed * on, axis=-1)
+    # Cluster-average normalized entitlement: the water level every
+    # host would sit at if capacity were perfectly divisible.
+    n_avg = xp.sum(ents * on, axis=-1) / xp.maximum(total_cap, 1e-300)
+    halt = ((imbalance <= params.imbalance_threshold)
+            | (total_cap <= 0.0) | (n_avg <= 1e-12))
+
+    # Batched progressive filling: every host above the average level
+    # is a recipient (bounded by its physical peak), every host below
+    # is a donor (bounded by the average level and by its reservations).
+    cbar = ents / xp.maximum(n_avg, 1e-300)[..., None]
+    recipients = on & (ns > n_avg[..., None])
+    donors = on & (ns < n_avg[..., None])
+    need = xp.where(
+        recipients,
+        xp.maximum(xp.minimum(peak_managed, cbar) - managed, 0.0), 0.0)
+    avail = xp.where(
+        donors,
+        xp.maximum(managed - xp.maximum(cbar, cpu_reserved), 0.0), 0.0)
+    total_need = xp.sum(need, axis=-1)
+    total_avail = xp.sum(avail, axis=-1)
+    transfer = xp.minimum(total_need, total_avail)
+    # Powercap range exhausted -> DRS migration handles the residue.
+    halt = halt | (transfer <= params.min_transfer)
+
+    grow = recipients & (need > 0.0)
+    new_caps = xp.where(grow, cap_for_managed_capacity(
+        xp, hosts,
+        managed + transfer[..., None] * need
+        / xp.maximum(total_need, 1e-300)[..., None]), caps)
+    shrink = donors & (avail > 0.0)
+    new_caps = xp.where(shrink, cap_for_managed_capacity(
+        xp, hosts,
+        managed - transfer[..., None] * avail
+        / xp.maximum(total_avail, 1e-300)[..., None]), new_caps)
+    # Watts conservation under heterogeneous specs: trim recipients if
+    # the budget would be exceeded (linear maps conserve exactly for
+    # homogeneous specs; this is a safety net).
+    over = xp.sum(new_caps * on, axis=-1) - budget
+    n_rec = xp.sum(recipients, axis=-1)
+    trim = (over > 1e-6)[..., None] & recipients
+    new_caps = xp.where(
+        trim,
+        xp.maximum(new_caps
+                   - (over / xp.maximum(n_rec, 1))[..., None],
+                   hosts.power_idle),
+        new_caps)
+
+    new_managed = managed_capacity(xp, hosts, new_caps)
+    new_ents = ents_at(new_caps)
+    new_ns = xp.where(new_managed > 0.0,
+                      new_ents / xp.maximum(new_managed, 1e-300), 0.0)
+    # Heterogeneous Watts<->capacity maps (plus the trim above) can make
+    # a round non-improving near convergence: skip it and stop rather
+    # than oscillate.
+    worse = _masked_std(xp, new_ns, on, n_on) > imbalance + 1e-12
+    commit = ~done & ~halt & ~worse
+    cm = commit[..., None]
+    return (xp.where(cm, new_caps, caps),
+            xp.where(cm, new_managed, managed),
+            xp.where(cm, new_ents, ents),
+            xp.where(cm, new_ns, ns),
+            done | halt | worse,
+            did | commit)
+
+
 def balance_caps(be, hosts: HostCols, caps, ents_at, cpu_reserved, budget,
-                 enabled, params: BalanceParams = BalanceParams()):
+                 enabled, params: BalanceParams = BalanceParams(),
+                 dense: DenseCols | None = None):
     """Algorithm 2 (BalancePowerCap) as a pure batched loop.
 
     Progressive filling toward max-min fairness on normalized entitlements
@@ -220,19 +321,27 @@ def balance_caps(be, hosts: HostCols, caps, ents_at, cpu_reserved, budget,
     ``be.while_loop`` on concrete booleans; the JAX driver runs the same
     ``while_loop`` under ``jit`` with per-cell ``done`` masking, so
     converged cells freeze while stragglers keep transferring.
+
+    ``dense`` (optional) carries the dense-slot entitlement columns behind
+    ``ents_at``; when the ``jax-pallas`` executor is active and the caller
+    is on the JAX plane, the whole loop is delegated to the fused Pallas
+    driver (one kernel launch per round: the balance math and the waterfill
+    at the candidate caps in a single pass over ``(S, H, J)``).
     """
+    if (dense is not None and getattr(be, "name", "") != "numpy"
+            and backend_mod.pallas_enabled()):
+        from repro.kernels.powercap.ops import pallas_balance_caps
+        return pallas_balance_caps(hosts, caps, dense, cpu_reserved,
+                                   budget, enabled, params)
     xp = be.xp
     on = hosts.on
     n_on = xp.sum(on, axis=-1)
     peak_managed = peak_managed_capacity(xp, hosts)
 
-    def norm(ents, managed):
-        return xp.where(managed > 0.0,
-                        ents / xp.maximum(managed, 1e-300), 0.0)
-
     managed = managed_capacity(xp, hosts, caps)
     ents = ents_at(caps)
-    ns = norm(ents, managed)
+    ns = xp.where(managed > 0.0,
+                  ents / xp.maximum(managed, 1e-300), 0.0)
     done0 = ~enabled | (n_on < 2)
     did0 = xp.zeros_like(done0)
 
@@ -242,71 +351,10 @@ def balance_caps(be, hosts: HostCols, caps, ents_at, cpu_reserved, budget,
 
     def body(state):
         caps, managed, ents, ns, done, did, rounds = state
-        imbalance = _masked_std(xp, ns, on, n_on)
-        total_cap = xp.sum(managed * on, axis=-1)
-        # Cluster-average normalized entitlement: the water level every
-        # host would sit at if capacity were perfectly divisible.
-        n_avg = xp.sum(ents * on, axis=-1) / xp.maximum(total_cap, 1e-300)
-        halt = ((imbalance <= params.imbalance_threshold)
-                | (total_cap <= 0.0) | (n_avg <= 1e-12))
-
-        # Batched progressive filling: every host above the average level
-        # is a recipient (bounded by its physical peak), every host below
-        # is a donor (bounded by the average level and by its reservations).
-        cbar = ents / xp.maximum(n_avg, 1e-300)[..., None]
-        recipients = on & (ns > n_avg[..., None])
-        donors = on & (ns < n_avg[..., None])
-        need = xp.where(
-            recipients,
-            xp.maximum(xp.minimum(peak_managed, cbar) - managed, 0.0), 0.0)
-        avail = xp.where(
-            donors,
-            xp.maximum(managed - xp.maximum(cbar, cpu_reserved), 0.0), 0.0)
-        total_need = xp.sum(need, axis=-1)
-        total_avail = xp.sum(avail, axis=-1)
-        transfer = xp.minimum(total_need, total_avail)
-        # Powercap range exhausted -> DRS migration handles the residue.
-        halt = halt | (transfer <= params.min_transfer)
-
-        grow = recipients & (need > 0.0)
-        new_caps = xp.where(grow, cap_for_managed_capacity(
-            xp, hosts,
-            managed + transfer[..., None] * need
-            / xp.maximum(total_need, 1e-300)[..., None]), caps)
-        shrink = donors & (avail > 0.0)
-        new_caps = xp.where(shrink, cap_for_managed_capacity(
-            xp, hosts,
-            managed - transfer[..., None] * avail
-            / xp.maximum(total_avail, 1e-300)[..., None]), new_caps)
-        # Watts conservation under heterogeneous specs: trim recipients if
-        # the budget would be exceeded (linear maps conserve exactly for
-        # homogeneous specs; this is a safety net).
-        over = xp.sum(new_caps * on, axis=-1) - budget
-        n_rec = xp.sum(recipients, axis=-1)
-        trim = (over > 1e-6)[..., None] & recipients
-        new_caps = xp.where(
-            trim,
-            xp.maximum(new_caps
-                       - (over / xp.maximum(n_rec, 1))[..., None],
-                       hosts.power_idle),
-            new_caps)
-
-        new_managed = managed_capacity(xp, hosts, new_caps)
-        new_ents = ents_at(new_caps)
-        new_ns = norm(new_ents, new_managed)
-        # Heterogeneous Watts<->capacity maps (plus the trim above) can make
-        # a round non-improving near convergence: skip it and stop rather
-        # than oscillate.
-        worse = _masked_std(xp, new_ns, on, n_on) > imbalance + 1e-12
-        commit = ~done & ~halt & ~worse
-        cm = commit[..., None]
-        return (xp.where(cm, new_caps, caps),
-                xp.where(cm, new_managed, managed),
-                xp.where(cm, new_ents, ents),
-                xp.where(cm, new_ns, ns),
-                done | halt | worse,
-                did | commit,
-                rounds + 1)
+        out = balance_round(xp, hosts, caps, managed, ents, ns, done, did,
+                            ents_at, cpu_reserved, budget, n_on,
+                            peak_managed, params)
+        return (*out, rounds + 1)
 
     state = (caps, managed, ents, ns, done0, did0, 0)
     caps, _, _, _, _, did, _ = be.while_loop(cond, body, state)
@@ -941,7 +989,7 @@ def balance_migrations(be, hosts: HostCols, caps, work, host_mem,
         eff = xp.where(act, xp.clip(cpu, res, lim), 0.0)
         floors = xp.where(act, xp.minimum(res, lim), 0.0)
         alloc = waterfill_dense(xp, be.fori, managed_cols, floors, eff,
-                                weights, iters)
+                                weights, iters, active=act)
         alloc = xp.where(act, alloc, 0.0)
         ents = xp.sum(alloc, axis=-1)
         ns = xp.where(managed_cols > 0.0,

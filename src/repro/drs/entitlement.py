@@ -134,12 +134,22 @@ def batched_waterfill(capacity: np.ndarray, floors: np.ndarray,
     seg_ids = np.asarray(seg_ids)
     if floors.shape[0] == 0:
         return np.zeros(0)
+    if backend_mod.pallas_enabled():
+        # Executor lift: the NumPy caller (VectorSimulator delivery, the
+        # object-plane balance adapter) reaches the segmented Pallas kernel
+        # through the ragged CSR layout -- same item order per host, so the
+        # per-host result matches the scalar primitive to the correction
+        # tolerance.
+        from repro.kernels.powercap.ops import pallas_waterfill_segmented
+        return np.asarray(pallas_waterfill_segmented(
+            capacity, floors, ceilings, weights, seg_ids, n_segs,
+            iters=iters))
     return waterfill_core(backend_mod.NUMPY, capacity, floors, ceilings,
                           weights, seg_ids, n_segs, iters)
 
 
 def waterfill_dense(xp, fori, capacity, floors, ceilings, weights,
-                    iters: int = 200):
+                    iters: int = 200, active=None):
     """Dense-slot twin of :func:`waterfill_core`.
 
     Segments are the *leading* axes and items the trailing one: ``capacity``
@@ -150,7 +160,37 @@ def waterfill_dense(xp, fori, capacity, floors, ceilings, weights,
     engine uses for both tick delivery and balance entitlements.  The math
     is identical to the segment form, so results agree to reduction-order
     rounding.
+
+    ``active`` (same shape as ``floors``, optional) masks the live slots
+    explicitly: inactive slots are forced to zero floor/ceiling and a tiny
+    weight *inside* the primitive, so stale demand left in padded slots can
+    never widen the bisection bracket or absorb entitlement -- callers that
+    recycle slot storage (the batched engine's migration remaps) do not
+    have to re-sanitize every column first.
+
+    When the ``jax-pallas`` executor is active and ``xp`` is a JAX
+    namespace, the math runs as the fused Pallas kernel
+    (``repro.kernels.powercap``) instead of inline lax ops -- bit-identical
+    off-TPU by construction (the kernel body calls
+    :func:`waterfill_dense_math`).
     """
+    if xp is not np and backend_mod.pallas_enabled():
+        from repro.kernels.powercap.ops import pallas_waterfill_dense
+        return pallas_waterfill_dense(capacity, floors, ceilings, weights,
+                                      iters=iters, active=active)
+    return waterfill_dense_math(xp, fori, capacity, floors, ceilings,
+                                weights, iters, active)
+
+
+def waterfill_dense_math(xp, fori, capacity, floors, ceilings, weights,
+                         iters: int = 200, active=None):
+    """The pure-array body of :func:`waterfill_dense` (no executor
+    dispatch).  The Pallas kernel calls this exact function on its VMEM
+    blocks, which is what makes the two executors bit-identical."""
+    if active is not None:
+        floors = xp.where(active, floors, 0.0)
+        ceilings = xp.where(active, ceilings, 0.0)
+        weights = xp.where(active, weights, 1e-12)
     ceilings = xp.maximum(ceilings, floors)
     total_floor = xp.sum(floors, axis=-1)
     degenerate = total_floor >= capacity
@@ -196,6 +236,11 @@ def jax_batched_waterfill(capacity, floors, ceilings, weights, seg_ids,
     """
     be = backend_mod.jax_backend()
     weights = be.xp.maximum(weights, 1e-12)
+    if backend_mod.pallas_enabled():
+        from repro.kernels.powercap.ops import pallas_waterfill_segmented
+        return pallas_waterfill_segmented(capacity, floors, ceilings,
+                                          weights, seg_ids, n_segs,
+                                          iters=iters)
     return waterfill_core(be, capacity, floors, ceilings, weights, seg_ids,
                           n_segs, iters)
 

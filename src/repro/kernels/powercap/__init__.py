@@ -1,0 +1,21 @@
+"""Pallas kernels for the CloudPowerCap hot allocation math.
+
+The third executor behind ``repro.backend`` (``REPRO_EXECUTOR=jax-pallas``):
+the dense waterfill, the fused waterfill + BalancePowerCap round, and the
+segmented (ragged CSR) waterfill, each running the *same* pure-math bodies
+as the lax path (``waterfill_dense_math`` / ``balance_round``) inside
+``pl.pallas_call`` blocks -- off-TPU they execute in interpret mode and are
+bit-identical to lax by construction.
+"""
+
+from repro.kernels.powercap.ops import (
+    pallas_balance_caps,
+    pallas_waterfill_dense,
+    pallas_waterfill_segmented,
+)
+
+__all__ = [
+    "pallas_balance_caps",
+    "pallas_waterfill_dense",
+    "pallas_waterfill_segmented",
+]

@@ -1,0 +1,213 @@
+"""Pallas kernel bodies for the powercap allocation math.
+
+Single-source-of-truth design: every kernel body calls the exact pure-math
+functions the lax executor runs -- :func:`repro.drs.entitlement.
+waterfill_dense_math` for the bisection waterfill and :func:`repro.core.
+kernels.balance_round` for the BalancePowerCap progressive-filling round --
+on its VMEM blocks.  In interpret mode (the automatic off-TPU fallback,
+see ``ops.py``) the op sequence is therefore *identical* to the lax path,
+which makes the two executors bit-identical in float64; the differential
+harness ``tests/test_kernel_parity.py`` enforces this.
+
+Grid layout: one grid step per scenario cell ``s`` over the ``(S, H, J)``
+dense slot layout (host columns ``(1, H)`` blocks, slot columns
+``(1, H, J)`` blocks, per-cell scalars ``(1,)`` blocks).  The segmented
+variant instead walks one grid step per *host* over a CSR layout --
+flat item arrays stably sorted by segment plus per-host ``(start, count)``
+-- loading a ``(JB,)`` window with ``pl.ds`` so ragged host/VM counts pay
+for the longest row only, not for ``H * J`` dense padding.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import kernels as core_kernels
+from repro.drs.entitlement import waterfill_dense_math
+
+
+def _fori(n, body, init):
+    """The backend ``fori`` contract on the lax plane (kernel-internal)."""
+    return jax.lax.fori_loop(0, n, body, init)
+
+
+# ------------------------------------------------------- dense waterfill
+def waterfill_kernel(cap_ref, fl_ref, ce_ref, w_ref, act_ref, out_ref, *,
+                     iters: int):
+    """One cell's dense bisection waterfill: ``(1, H)`` capacity against
+    ``(1, H, J)`` slot columns, all segments bisecting in lockstep."""
+    out_ref[0] = waterfill_dense_math(
+        jnp, _fori, cap_ref[0], fl_ref[0], ce_ref[0], w_ref[0],
+        iters=iters, active=act_ref[0])
+
+
+def waterfill_call(capacity, floors, ceilings, weights, active, *,
+                   iters: int, interpret: bool):
+    """``pl.pallas_call`` wrapper: grid over cells, whole-cell blocks."""
+    s, h, j = floors.shape
+    kernel = functools.partial(waterfill_kernel, iters=iters)
+    return pl.pallas_call(
+        kernel,
+        grid=(s,),
+        in_specs=[
+            pl.BlockSpec((1, h), lambda i: (i, 0)),
+            pl.BlockSpec((1, h, j), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, h, j), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, h, j), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, h, j), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, h, j), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((s, h, j), floors.dtype),
+        interpret=interpret,
+    )(capacity, floors, ceilings, weights, active)
+
+
+# --------------------------------------------- fused balance-round kernel
+def balance_round_kernel(on_ref, idle_ref, peak_ref, cpk_ref, hyp_ref,
+                         fl_ref, ce_ref, w_ref, act_ref,
+                         res_ref, bud_ref, non_ref, pm_ref,
+                         caps_ref, man_ref, ent_ref, ns_ref, done_ref,
+                         did_ref,
+                         caps_out, man_out, ent_out, ns_out, done_out,
+                         did_out, *,
+                         iters: int, params: core_kernels.BalanceParams):
+    """One cell's fused BalancePowerCap round.
+
+    A single pass over the ``(1, H, J)`` slot block: the progressive-filling
+    transfer math *and* the candidate-cap entitlement waterfill it needs
+    (``ents_at``) both run here, so the ``(H, J)`` allocation never
+    round-trips through HBM between them.  The body is literally
+    :func:`repro.core.kernels.balance_round` with a block-local ``ents_at``
+    built from :func:`waterfill_dense_math`.
+    """
+    hosts = core_kernels.HostCols(on_ref[0], idle_ref[0], peak_ref[0],
+                                  cpk_ref[0], hyp_ref[0])
+    fl, ce, w, act = fl_ref[0], ce_ref[0], w_ref[0], act_ref[0]
+
+    def ents_at(c):
+        managed = core_kernels.managed_capacity(jnp, hosts, c)
+        alloc = waterfill_dense_math(jnp, _fori, managed, fl, ce, w,
+                                     iters=iters, active=act)
+        return jnp.sum(alloc, axis=-1)
+
+    caps, managed, ents, ns, done, did = core_kernels.balance_round(
+        jnp, hosts, caps_ref[0], man_ref[0], ent_ref[0], ns_ref[0],
+        done_ref[0], did_ref[0], ents_at, res_ref[0], bud_ref[0],
+        non_ref[0], pm_ref[0], params)
+    caps_out[0] = caps
+    man_out[0] = managed
+    ent_out[0] = ents
+    ns_out[0] = ns
+    done_out[0] = done
+    did_out[0] = did
+
+
+def balance_round_call(hosts, dense_cols, cpu_reserved, budget, n_on,
+                       peak_managed, state, *, iters: int, params,
+                       interpret: bool):
+    """``pl.pallas_call`` wrapper for one fused balance round.
+
+    ``state`` is the loop state ``(caps, managed, ents, ns, done, did)``;
+    the loop-invariant columns ride along as extra inputs.  Returns the
+    next state with the same shapes/dtypes.
+    """
+    caps, managed, ents, ns, done, did = state
+    s, h = caps.shape
+    j = dense_cols[0].shape[-1]
+
+    def host_spec(i):
+        return (i, 0)
+
+    def slot_spec(i):
+        return (i, 0, 0)
+
+    def cell_spec(i):
+        return (i,)
+
+    hb = pl.BlockSpec((1, h), host_spec)
+    sb = pl.BlockSpec((1, h, j), slot_spec)
+    cb = pl.BlockSpec((1,), cell_spec)
+    kernel = functools.partial(balance_round_kernel, iters=iters,
+                               params=params)
+    return pl.pallas_call(
+        kernel,
+        grid=(s,),
+        in_specs=[hb, hb, hb, hb, hb,          # host columns
+                  sb, sb, sb, sb,              # dense slot columns
+                  hb, cb, cb, hb,              # cpu_res, budget, n_on, peak
+                  hb, hb, hb, hb, cb, cb],     # loop state
+        out_specs=[hb, hb, hb, hb, cb, cb],
+        out_shape=[
+            jax.ShapeDtypeStruct((s, h), caps.dtype),
+            jax.ShapeDtypeStruct((s, h), managed.dtype),
+            jax.ShapeDtypeStruct((s, h), ents.dtype),
+            jax.ShapeDtypeStruct((s, h), ns.dtype),
+            jax.ShapeDtypeStruct((s,), done.dtype),
+            jax.ShapeDtypeStruct((s,), did.dtype),
+        ],
+        interpret=interpret,
+    )(hosts.on, hosts.power_idle, hosts.power_peak, hosts.capacity_peak,
+      hosts.hyp_overhead, dense_cols[0], dense_cols[1], dense_cols[2],
+      dense_cols[3], cpu_reserved, budget, n_on, peak_managed,
+      caps, managed, ents, ns, done, did)
+
+
+# ---------------------------------------------------- segmented waterfill
+def segmented_kernel(cap_ref, start_ref, count_ref, fl_ref, ce_ref, w_ref,
+                     out_ref, *, iters: int, jb: int):
+    """One host's waterfill over its CSR window of the flat item arrays.
+
+    ``start``/``count`` index the segment-sorted flat columns; the window
+    is loaded with a dynamic slice of static width ``JB`` (the padded
+    longest row) and slots past ``count`` are masked via ``active``, so
+    the math is the dense primitive on a ``(1, JB)`` row.
+    """
+    start = start_ref[0]
+    count = count_ref[0]
+    fl = fl_ref[pl.ds(start, jb)][None]
+    ce = ce_ref[pl.ds(start, jb)][None]
+    w = w_ref[pl.ds(start, jb)][None]
+    active = (jnp.arange(jb) < count)[None]
+    capacity = cap_ref[0][None]
+    out = waterfill_dense_math(jnp, _fori, capacity, fl, ce, w,
+                               iters=iters, active=active)
+    out_ref[0, :] = out[0]
+
+
+def segmented_call(capacity, starts, counts, floors, ceilings, weights, *,
+                   iters: int, jb: int, interpret: bool):
+    """``pl.pallas_call`` wrapper: grid over hosts, flat columns shared.
+
+    Flat item columns must be tail-padded by at least ``JB`` so the
+    ``pl.ds`` window of the last host never reads past the end.  Returns
+    the ``(n_segs, JB)`` per-host allocation rows (masked slots are 0).
+    """
+    n_segs = capacity.shape[0]
+    n_pad = floors.shape[0]
+    kernel = functools.partial(segmented_kernel, iters=iters, jb=jb)
+
+    def one(i):
+        return (i,)
+
+    def whole(i):
+        return (0,)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(n_segs,),
+        in_specs=[
+            pl.BlockSpec((1,), one),
+            pl.BlockSpec((1,), one),
+            pl.BlockSpec((1,), one),
+            pl.BlockSpec((n_pad,), whole),
+            pl.BlockSpec((n_pad,), whole),
+            pl.BlockSpec((n_pad,), whole),
+        ],
+        out_specs=pl.BlockSpec((1, jb), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_segs, jb), floors.dtype),
+        interpret=interpret,
+    )(capacity, starts, counts, floors, ceilings, weights)

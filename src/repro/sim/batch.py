@@ -70,6 +70,7 @@ from typing import NamedTuple, Optional, Sequence
 
 import numpy as np
 
+from repro import backend as backend_mod
 from repro.backend import jax_backend
 from repro.core import kernels
 from repro.drs import rules as rules_mod
@@ -123,6 +124,11 @@ class _StaticSpec(NamedTuple):
     migration: bool = False                  # correction/balancer live
     rules: kernels.RulesMeta = kernels.RulesMeta()
     balancer: kernels.MigrationParams = kernels.MigrationParams(max_moves=0)
+    # Allocation-kernel executor captured at pack time ("jax" or
+    # "jax-pallas"): part of the compile key, and re-pinned around the
+    # program run so trace-time dispatch cannot drift if the process-wide
+    # executor changes between pack() and the first run().
+    executor: str = "jax"
 
 
 @dataclasses.dataclass
@@ -243,7 +249,7 @@ def _compiled_program(static: _StaticSpec):
             dem = jnp.where(active, jnp.minimum(cpu, limit), 0.0)
             floors = jnp.where(active, jnp.minimum(reservation, dem), 0.0)
             alloc = waterfill_dense(jnp, be.fori, managed, floors, dem,
-                                    weights, wf_iters)
+                                    weights, wf_iters, active=active)
             delivered_h = jnp.sum(alloc, axis=-1)
             mem_d = jnp.where(active, mem, 0.0)
             mem_dem_h = jnp.sum(mem_d, axis=-1)
@@ -290,12 +296,15 @@ def _compiled_program(static: _StaticSpec):
             def ents_at(c):
                 managed = kernels.managed_capacity(jnp, hosts, c)
                 alloc = waterfill_dense(jnp, be.fori, managed, vm_floors,
-                                        vm_ceils, weights, wf_iters)
+                                        vm_ceils, weights, wf_iters,
+                                        active=active)
                 return jnp.sum(alloc, axis=-1)
 
             caps2, _ = kernels.balance_caps(
                 be, hosts, caps1, ents_at, a["cpu_res"], a["budget"],
-                a["enabled"], static.balance)
+                a["enabled"], static.balance,
+                dense=kernels.DenseCols(vm_floors, vm_ceils, weights,
+                                        active, wf_iters))
             changes = changes + kernels.count_cap_changes(jnp, on, caps1,
                                                           caps2)
             return caps2, changes.astype(jnp.int32)
@@ -423,12 +432,14 @@ def _compiled_program(static: _StaticSpec):
                 managed = kernels.managed_capacity(jnp, hosts, cc)
                 alloc = waterfill_dense(jnp, be.fori, managed, vm_floors,
                                         vm_ceils, work["weights"],
-                                        wf_iters)
+                                        wf_iters, active=act3)
                 return jnp.sum(alloc, axis=-1)
 
             caps2, _ = kernels.balance_caps(
                 be, hosts, caps1, ents_at, cpu_res, a["budget"], apply_cpc,
-                static.balance)
+                static.balance,
+                dense=kernels.DenseCols(vm_floors, vm_ceils,
+                                        work["weights"], act3, wf_iters))
             changes = changes + jnp.where(
                 can, kernels.count_cap_changes(jnp, on, caps1, caps2), 0)
 
@@ -1018,7 +1029,8 @@ class BatchedSimulator:
             power_off_latency_s=self.config.power_off_latency_s,
             migration=self._migration,
             rules=rmeta if self._migration else kernels.RulesMeta(),
-            balancer=self._balancer)
+            balancer=self._balancer,
+            executor=backend_mod.executor_name())
         self._ticks = T
 
     # ------------------------------------------------------------- running
@@ -1028,7 +1040,7 @@ class BatchedSimulator:
         from jax.experimental import enable_x64
 
         t0 = time.perf_counter()
-        with enable_x64():
+        with enable_x64(), backend_mod.executor_scope(self._static.executor):
             out = _compiled_program(self._static)(self._arrays)
             out = {k: ({kk: np.asarray(vv) for kk, vv in v.items()}
                        if isinstance(v, dict) else np.asarray(v))
