@@ -8,6 +8,11 @@ on the same hardware, so a CI runner's absolute cells/s cancels out, while
 a regression in the compiled program (an accidental host-sync, a carry that
 stopped aliasing, a kernel falling off the fused path) shows up directly.
 
+Also gates the sharded sweep engine (``sweep_scale_sharded``): a tiny grid
+runs on a 1-device and an 8-virtual-device ``("cells",)`` mesh in a
+subprocess; per-cell results must be bit-identical across the two meshes
+(hard gate) and the sharded/single speedup must hold its committed floor.
+
 Also gates the fused Pallas allocation kernel (``kernel_waterfill``): the
 CI runner has no TPU, so interpret-mode wall time is correctness-grade
 noise and is recorded informationally only -- the gate is *parity*, the
@@ -90,6 +95,44 @@ def measure() -> dict:
     return out
 
 
+def measure_sharded() -> dict:
+    """``sweep_scale_sharded`` smoke: the sharded sweep engine on 8 virtual
+    CPU devices, in a subprocess (the cells mesh needs the forced device
+    count set before jax initializes).
+
+    Two gates ride on this entry: per-cell results across the 1-device and
+    8-device meshes must be **bit-identical** (the sharding contract --
+    cells are embarrassingly parallel, so the compiled arithmetic is the
+    same program either way), and the sharded/single **speedup** must stay
+    within tolerance of the committed baseline.  A baseline measured on
+    low-core hardware is a conservative floor: real cores only help the
+    sharded side.
+    """
+    import subprocess
+
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8")
+    env.setdefault("PYTHONPATH", "src")
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.sweep_sharded", "--mode", "grid",
+         "--cells", "16", "--hosts", "6", "--duration", "300",
+         "--tick", "30"],
+        capture_output=True, text=True, env=env,
+        cwd=os.path.normpath(os.path.join(os.path.dirname(__file__), "..")))
+    if proc.returncode != 0:
+        raise RuntimeError(f"sweep_sharded probe failed:\n{proc.stderr}")
+    g = json.loads(proc.stdout)
+    return {
+        "n_cells": g["n_cells"],
+        "n_hosts": g["n_hosts"],
+        "n_devices": g["sharded"]["n_devices"],
+        "cells_per_s_single": g["single"]["cells_per_s"],
+        "cells_per_s_sharded": g["sharded"]["cells_per_s"],
+        "speedup": g["speedup"],
+        "parity_bit_identical": bool(g["parity"]),
+    }
+
+
 def measure_kernel() -> dict:
     """``kernel_waterfill``: parity-gated, timing-informational.
 
@@ -150,6 +193,14 @@ def main() -> int:
               f"batched {m['cells_per_s_batched']:.1f} cells/s, "
               f"sequential {m['cells_per_s_sequential']:.1f} cells/s, "
               f"speedup {m['speedup']:.2f}x", flush=True)
+    measured["sweep_scale_sharded"] = ms = measure_sharded()
+    print(f"sweep_scale_sharded: {ms['n_cells']}cells@{ms['n_hosts']}h "
+          f"on {ms['n_devices']} virtual devices, "
+          f"sharded {ms['cells_per_s_sharded']:.1f} cells/s vs single "
+          f"{ms['cells_per_s_single']:.1f} cells/s "
+          f"({ms['speedup']:.2f}x), parity "
+          f"{'exact' if ms['parity_bit_identical'] else 'BROKEN'}",
+          flush=True)
     measured["kernel_waterfill"] = mk = measure_kernel()
     print(f"kernel_waterfill: max_abs_diff vs lax "
           f"{mk['max_abs_diff_vs_lax']:.1e}, "
@@ -178,6 +229,22 @@ def main() -> int:
             print(f"FAIL {name}: grid missing from this run",
                   file=sys.stderr)
             failed = True
+            continue
+        if "parity_bit_identical" in base:
+            # Sharded engine: parity is the hard gate (bit-identical
+            # per-cell results across mesh sizes); the sharded/single
+            # speedup floor catches collectives or resharding creeping
+            # into the compiled program.
+            floor = base["speedup"] * (1.0 - args.tolerance)
+            ok = (got["parity_bit_identical"]
+                  and got["speedup"] >= floor)
+            status = "ok" if ok else "FAIL"
+            print(f"{status} {name}: parity "
+                  f"{'exact' if got['parity_bit_identical'] else 'BROKEN'}"
+                  f", speedup {got['speedup']:.2f}x vs baseline "
+                  f"{base['speedup']:.2f}x (floor {floor:.2f}x)",
+                  flush=True)
+            failed |= not ok
             continue
         if "bit_identical" in base:
             # Parity gate: the fused kernel must stay bit-identical to the

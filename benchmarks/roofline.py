@@ -11,8 +11,16 @@ machine balance each kernel lands on.  No dryrun results needed -- the
 numbers follow from the BlockSpecs (each grid cell streams its columns
 from HBM once and runs the whole bisection out of VMEM).
 
+``--sweep`` prints the analytic per-device cells/s model for the sharded
+sweep engine: bytes moved and flops per tick per cell from the packed
+(H, J) slot plane, the per-device throughput bound, and the projected
+scaling curve over mesh sizes (linear: the cells axis needs no
+collectives) -- the sanity check for ``sweep_scale_sharded``'s measured
+numbers.
+
 Run: PYTHONPATH=src python -m benchmarks.roofline [--mesh pod16x16]
      PYTHONPATH=src python -m benchmarks.roofline --kernels [--s 64 ...]
+     PYTHONPATH=src python -m benchmarks.roofline --sweep [--hosts 100 ...]
 """
 
 from __future__ import annotations
@@ -106,6 +114,46 @@ def print_kernel_roofline(args):
           "degenerate tiny-J shapes.")
 
 
+def sweep_cell_cost(h, j, ticks, iters=100):
+    """Analytic (flops, bytes) one sweep cell moves over a full run.
+
+    Per tick the batched step streams the cell's float64 slot plane --
+    demand sampling, the waterfill allocation (``iters`` bisection trips
+    over floors/ceils/weights/active resident in cache), cap writes, and
+    the (H,)-shaped power/energy/accumulator updates.  ~7 (H, J) arrays
+    plus the 1-byte active mask and ~6 (H,) columns make the tick's
+    working set; flops are dominated by the bisection at ~6 per slot per
+    trip.  Cells never touch each other, so device cost is
+    cells-per-device * this, and mesh throughput scales linearly.
+    """
+    slots = h * j
+    bytes_tick = 7 * slots * 8 + slots + 6 * h * 8
+    flops_tick = (iters * 6 + 20) * slots + 200 * h
+    return flops_tick * ticks, bytes_tick * ticks
+
+
+def print_sweep_roofline(args):
+    flops, byts = sweep_cell_cost(args.hosts, args.slots, args.ticks)
+    t_c = flops / (args.peak_gflops * 1e9)
+    t_m = byts / (args.hbm_gbs * 1e9)
+    per_dev = 1.0 / max(t_c, t_m)
+    bound = "compute" if t_c >= t_m else "memory"
+    print(f"# Sharded sweep roofline (H={args.hosts} J={args.slots} "
+          f"T={args.ticks}, {args.peak_gflops:.0f} GFLOP/s, "
+          f"{args.hbm_gbs:.0f} GB/s per device)\n")
+    print(f"per cell: {flops:.2e} flops, {byts:.2e} HBM bytes "
+          f"({flops / byts:.0f} flop/B, **{bound}**-bound)\n")
+    print("| devices | cells/s (model) |")
+    print("|---|---|")
+    for n in (1, 2, 4, 8, 16):
+        print(f"| {n} | {per_dev * n:.1f} |")
+    print("\nNo collectives cross the cells axis, so the model is linear "
+          "in mesh size; a measured curve (sweep_scale_sharded) bending "
+          "below it means the devices share memory bandwidth or cores -- "
+          "e.g. virtual CPU devices on one socket -- not that the program "
+          "resharded.")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--mesh", default="pod16x16")
@@ -121,9 +169,17 @@ def main():
                     help="--kernels: peak f64-ish GFLOP/s of the target")
     ap.add_argument("--hbm-gbs", type=float, default=800.0,
                     help="--kernels: HBM GB/s of the target")
+    ap.add_argument("--sweep", action="store_true",
+                    help="analytic per-device cells/s model for the "
+                         "sharded sweep engine")
+    ap.add_argument("--ticks", type=int, default=60,
+                    help="--sweep: scan length (duration_s / tick_s)")
     args = ap.parse_args()
     if args.kernels:
         print_kernel_roofline(args)
+        return
+    if args.sweep:
+        print_sweep_roofline(args)
         return
     cells = load_cells(args.mesh)
     print(f"# Roofline ({args.mesh}, {len(cells)} cells)\n")

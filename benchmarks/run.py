@@ -23,6 +23,11 @@ live in EXPERIMENTS.md.
                           anti-affinity / VM-host violation bursts,
                           Fig.-1a cap-blocked corrections, hill-climb
                           balancing) as ONE program, vs sequential
+  sweep_scale_sharded  -- the sharded sweep engine: a 256-cell grid over a
+                          1-device vs 8-virtual-device ("cells",) mesh
+                          (subprocess with forced host device count), plus
+                          a 10k-host / 100k-VM-slot datacenter cell, via
+                          benchmarks/sweep_sharded.py
   roofline_summary     -- per-(arch x shape) roofline terms from the dry-run
 
 Run: PYTHONPATH=src python -m benchmarks.run [--skip-slow] [--json]
@@ -38,6 +43,8 @@ import argparse
 import glob
 import json
 import os
+import subprocess
+import sys
 import time
 
 #: Structured results populated by the sweep benches, dumped by ``--json``.
@@ -330,6 +337,68 @@ def sweep_grid_rules():
             f";compile:{compile_wall:.1f}s")
 
 
+def _sharded_probe(n_devices: int, *argv: str) -> dict:
+    """Run ``benchmarks.sweep_sharded`` in a subprocess with ``n_devices``
+    forced host devices (the cells mesh needs them to exist before jax
+    initializes) and parse its JSON stdout."""
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count="
+                         f"{n_devices}")
+    env.setdefault("PYTHONPATH", "src")
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.sweep_sharded", *argv],
+        capture_output=True, text=True, env=env,
+        cwd=os.path.normpath(os.path.join(os.path.dirname(__file__), "..")))
+    if proc.returncode != 0:
+        raise RuntimeError(f"sweep_sharded probe failed:\n{proc.stderr}")
+    return json.loads(proc.stdout)
+
+
+def sweep_scale_sharded():
+    """The sharded sweep engine: device scaling + the datacenter cell.
+
+    Grid half: a 256-cell grid (128 specs x {cpc, static} at 10 hosts, one
+    pad bucket) through ``run_sweep(engine="batch")`` on a 1-device mesh
+    and again sharded over 8 virtual CPU devices, in one subprocess --
+    reporting steady-state cells/s both ways, the speedup, per-bucket
+    ``compile_s``, and the bit-identity of per-cell results across meshes
+    (parity is the hard invariant; the speedup is hardware-honest and
+    reflects however many physical cores back the virtual devices).
+    Scale half: one 10,000-host / 100,000-VM-slot cell under cpc+static,
+    completing end-to-end through the same path."""
+    grid = _sharded_probe(8, "--mode", "grid", "--cells", "256",
+                          "--hosts", "10", "--duration", "600",
+                          "--tick", "10")
+    scale = _sharded_probe(8, "--mode", "scale", "--hosts", "10000",
+                           "--duration", "600", "--tick", "30")
+    ARTIFACT["sweep_scale_sharded"] = {
+        "n_cells": grid["n_cells"],
+        "n_hosts": grid["n_hosts"],
+        "n_devices": grid["sharded"]["n_devices"],
+        "cells_per_s_single": grid["single"]["cells_per_s"],
+        "cells_per_s_sharded": grid["sharded"]["cells_per_s"],
+        "speedup_vs_single_device": grid["speedup"],
+        "parity_bit_identical": grid["parity"],
+        "compile_s_single": grid["single"]["compile_s"],
+        "compile_s_sharded": grid["sharded"]["compile_s"],
+        "datacenter_cell": {
+            "n_hosts": scale["n_hosts"],
+            "n_vm_slots": scale["n_vm_slots"],
+            "ticks": scale["ticks"],
+            "steady_s": scale["steady_s"],
+            "compile_s": scale["compile_s"],
+        },
+    }
+    return (f"{grid['n_cells']}cells@{grid['n_hosts']}h:"
+            f"1dev:{grid['single']['cells_per_s']:.1f}cells/s"
+            f";8dev:{grid['sharded']['cells_per_s']:.1f}cells/s"
+            f";speedup:{grid['speedup']:.2f}x"
+            f";parity:{'exact' if grid['parity'] else 'FAIL'}"
+            f";10k-host:{scale['steady_s']:.1f}s"
+            f"/{scale['ticks']}ticks"
+            f";compile:{grid['sharded']['compile_s']:.1f}s")
+
+
 def roofline_summary():
     pats = os.path.join(os.path.dirname(__file__), "..", "results",
                         "dryrun", "*.json")
@@ -367,6 +436,7 @@ BENCHES = [
     ("sweep_grid", sweep_grid, True),
     ("sweep_grid_dpm", sweep_grid_dpm, True),
     ("sweep_grid_rules", sweep_grid_rules, True),
+    ("sweep_scale_sharded", sweep_scale_sharded, True),
     ("kernel_microbenches", kernel_microbenches, False),
     ("roofline_summary", roofline_summary, False),
 ]
@@ -378,6 +448,13 @@ def main() -> None:
     ap.add_argument("--json", action="store_true",
                     help="write sweep throughput to BENCH_sweep.json")
     args, _ = ap.parse_known_args()
+    # Persistent XLA compile cache: re-running the harness on unchanged
+    # grid shapes pays trace + load instead of full recompiles (the rules
+    # grid alone costs ~14 s of XLA time per cold process).
+    from repro.sim.sweep import enable_compilation_cache
+    cache = enable_compilation_cache()
+    if cache:
+        print(f"# jax compilation cache: {cache}", flush=True)
     print("name,us_per_call,derived")
     for name, fn, slow in BENCHES:
         if slow and args.skip_slow:

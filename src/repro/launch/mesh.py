@@ -64,6 +64,25 @@ def make_pod_mesh(n_pods: int):
                             axis_types=(AxisType.Auto,) * 3)
 
 
+def make_cells_mesh(n_devices=None):
+    """1-D ``("cells",)`` mesh for the sharded sweep engine.
+
+    The batched simulator's scenario cells are embarrassingly parallel, so
+    the mesh has a single axis: each device runs its shard of cells through
+    the identical compiled scan, no collectives inside the program.  With
+    ``n_devices=None`` every visible device joins; otherwise the first
+    ``n_devices`` (the sweep layer clamps to the cell count and pads the
+    cells axis to a device multiple).
+    """
+    devs = jax.devices()
+    n = len(devs) if n_devices is None else n_devices
+    if not 1 <= n <= len(devs):
+        raise ValueError(
+            f"n_devices={n} outside [1, {len(devs)}] visible devices")
+    return make_mesh_compat((n,), ("cells",), devices=devs[:n],
+                            axis_types=(AxisType.Auto,))
+
+
 def make_host_mesh(shape=None, axes=("data", "model")):
     """Small mesh over whatever devices exist (tests / examples)."""
     n = len(jax.devices())

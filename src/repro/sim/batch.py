@@ -57,6 +57,19 @@ callables without a declarative spec, migrations under the timed vMotion
 model, mixed time grids) raise :class:`BatchUnsupported` at pack time
 rather than silently freezing the unsupported dimension.
 
+The S-cells axis shards across devices (``n_devices=``): the packed
+arrays split over a 1-D ``("cells",)`` mesh
+(:func:`repro.launch.mesh.make_cells_mesh`) with ``shard_map``, each
+device scanning its slice of cells through the identical compiled step.
+Cells are embarrassingly parallel, so no collective crosses the cells
+axis inside the scan -- sharding is a pure reshape of the work and
+per-cell results stay bit-identical to the single-device run
+(``tests/test_sharded_parity.py``).  When S doesn't divide the mesh the
+cells axis is padded with duplicates of the leading cells and outputs
+sliced back.  ``pad_hosts``/``pad_slots`` let ``run_sweep``'s pad-bucket
+partitioner compile one program per pow2 ``(H, J)`` shape class instead
+of one per unique grid shape.
+
 Everything runs in float64 (``jax.experimental.enable_x64``) so the compiled
 program tracks the NumPy object plane to reduction-order rounding.
 """
@@ -152,8 +165,11 @@ class BatchResult:
     has_window: np.ndarray                   # bool per cell
     final_caps: np.ndarray                   # (S, H)
     final_on: np.ndarray                     # (S, H) power states at the end
+    final_occ: np.ndarray                    # (S, H, J) final slot occupancy
     ticks: int
     wall_s: float = 0.0
+    n_devices: int = 1                       # cells-mesh size the run used
+    compile_s: float = 0.0                   # first-call wall for new shapes
 
     def accumulators(self, i: int) -> Accumulators:
         acc = Accumulators(
@@ -207,9 +223,8 @@ _SLOT_PAD = dict(kernels.SLOT_PAD, period=np.inf, cpu_vals=0.0,
                  mem_vals=0.0, tag_masks=False)
 
 
-@functools.lru_cache(maxsize=None)
-def _compiled_program(static: _StaticSpec):
-    """Build (and cache) the jitted whole-grid program for one shape."""
+def _build_program(static: _StaticSpec):
+    """Build the (untraced) whole-grid program for one per-device shape."""
     import jax
     import jax.numpy as jnp
 
@@ -343,6 +358,7 @@ def _compiled_program(static: _StaticSpec):
                 "vmotions": zi, "power_ons": zi, "power_offs": zi,
                 "max_total_cap": max_total, "over_budget": max_total * 0.0,
                 "final_caps": caps, "final_on": a["on"],
+                "final_occ": a["occ"],
                 "slot_pressure": jnp.zeros(S, dtype=bool)}
 
     # ------------------------------------------------------------------
@@ -716,10 +732,62 @@ def _compiled_program(static: _StaticSpec):
                 "max_total_cap": c["over_budget"],
                 "over_budget": c["over_budget"],
                 "final_caps": c["caps"], "final_on": c["on"],
+                "final_occ": c["slots"]["occ"],
                 "slot_pressure": c["slot_pressure"]}
 
     program = build_churn if static.churn else build_static
-    return jax.jit(program)
+    return program
+
+
+def _cells_specs(a, P):
+    """shard_map partition specs for the packed array dict: every per-cell
+    array splits on its leading S axis; the shared time axis replicates."""
+    return {k: (P() if k in ("ts", "drs_mask")
+                else P(None, "cells") if k == "win_mask"
+                else P("cells")) for k in a}
+
+
+@functools.lru_cache(maxsize=None)
+def _compiled_program(static: _StaticSpec, n_devices: int = 1):
+    """Jit (and cache) the whole-grid program.
+
+    With ``n_devices > 1`` the program is wrapped in ``shard_map`` over the
+    1-D ``cells`` mesh (``repro.launch.mesh.make_cells_mesh``): ``static``
+    describes the *global* grid and each device traces the identical
+    per-shard program over ``n_cells / n_devices`` cells.  Cells never
+    interact -- every reduction in the scan body runs over the trailing
+    host/slot axes -- so the mapped body contains no collectives; the only
+    cross-device traffic is the final gather of the per-cell accumulators
+    when results leave the mesh.
+    """
+    import jax
+
+    if n_devices <= 1:
+        return jax.jit(_build_program(static))
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.launch.mesh import make_cells_mesh
+
+    if static.n_cells % n_devices:
+        raise ValueError(  # BatchedSimulator.run pads the cells axis first
+            f"{static.n_cells} cells not divisible by {n_devices} devices")
+    local = static._replace(n_cells=static.n_cells // n_devices)
+    program = _build_program(local)
+    mesh = make_cells_mesh(n_devices)
+
+    def sharded(a):
+        return shard_map(program, mesh=mesh,
+                         in_specs=(_cells_specs(a, P),),
+                         out_specs=P("cells"), check_rep=False)(a)
+
+    return jax.jit(sharded)
+
+
+#: Program shapes that have already compiled in this process: (static,
+#: n_devices, input-shape signature).  ``BatchedSimulator.run`` uses it to
+#: attribute first-call wall time to compilation (``compile_s``).
+_COMPILED_SIGS: set = set()
 
 
 class BatchedSimulator:
@@ -743,6 +811,19 @@ class BatchedSimulator:
     migration balancer for cells with ``balancer_enabled`` -- the batched
     twin of the manager's ``BalancerConfig``; the default (``max_moves=0``)
     matches the sweep regime with migration search disabled.
+
+    ``n_devices`` shards the S-cells axis over a 1-D ``cells`` mesh
+    (``shard_map``): ``None`` uses every visible jax device, ``1`` pins the
+    single-device program.  Cells are embarrassingly parallel, so each
+    device runs its shard through the identical compiled scan and per-cell
+    results are bit-identical to the single-device run; when the cell count
+    is not a device multiple the cells axis is padded with duplicates of the
+    leading cells (dropped from the results).
+
+    ``pad_hosts`` / ``pad_slots`` force the packed host axis (and the
+    pre-slack slot axis) up to at least the given sizes -- the sweep
+    layer's pad-bucketing uses them to pin every grid in a pow2 shape
+    class to the same compiled program.
     """
 
     def __init__(self, cells: Sequence[BatchCell],
@@ -750,11 +831,17 @@ class BatchedSimulator:
                  dpm: Optional[kernels.DPMParams] = None,
                  waterfill_iters: int = 100,
                  slot_slack: float = 2.0,
-                 balancer: Optional[kernels.MigrationParams] = None):
+                 balancer: Optional[kernels.MigrationParams] = None,
+                 n_devices: Optional[int] = None,
+                 pad_hosts: int = 0,
+                 pad_slots: int = 0):
         if not cells:
             raise ValueError("no cells")
         self.cells = list(cells)
         self.config = cells[0].config
+        self._n_devices = n_devices
+        self._pad_hosts = int(pad_hosts)
+        self._pad_slots = int(pad_slots)
         self._balancer = balancer or kernels.MigrationParams(max_moves=0)
         self._churn = any(c.dpm_enabled or c.config.power_events
                           for c in cells)
@@ -854,7 +941,7 @@ class BatchedSimulator:
               slot_slack: float) -> None:
         cells = self.cells
         S = len(cells)
-        H = max(len(c.snapshot.hosts) for c in cells)
+        H = max(max(len(c.snapshot.hosts) for c in cells), self._pad_hosts)
         ts, drs_mask = _drs_schedule(self.config)
         T = ts.shape[0]
 
@@ -892,7 +979,7 @@ class BatchedSimulator:
                     *(max(a, b) for a, b in zip(rmeta, pack.meta())))
             prepped.append((vms, bank, order, hj, slot, counts, pack))
         J = max(max((int(p[5].max()) for p in prepped if p[5].size),
-                    default=1), 1)
+                    default=1), 1, self._pad_slots)
         if (self._churn and any(c.dpm_enabled for c in cells)) \
                 or self._migration:
             # Headroom for consolidation and balancer moves: migrating VMs
@@ -1037,15 +1124,41 @@ class BatchedSimulator:
     def run(self) -> BatchResult:
         import time
 
+        import jax
         from jax.experimental import enable_x64
+
+        S = self._static.n_cells
+        n_dev = (len(jax.devices()) if self._n_devices is None
+                 else int(self._n_devices))
+        n_dev = max(1, min(n_dev, S))
+        pad = (-S) % n_dev
+        static = (self._static._replace(n_cells=S + pad) if pad
+                  else self._static)
+        a = self._arrays
+        if pad:
+            # Cells are independent, so padding the axis with duplicates of
+            # the leading cells (and dropping their results) is exact.
+            a = {k: (v if k in ("ts", "drs_mask")
+                     else np.concatenate([v, v[:, :pad]], axis=1)
+                     if k == "win_mask"
+                     else np.concatenate([v, v[:pad]], axis=0))
+                 for k, v in a.items()}
+        sig = (static, n_dev,
+               tuple(sorted((k, v.shape) for k, v in a.items())))
+        first = sig not in _COMPILED_SIGS
 
         t0 = time.perf_counter()
         with enable_x64(), backend_mod.executor_scope(self._static.executor):
-            out = _compiled_program(self._static)(self._arrays)
-            out = {k: ({kk: np.asarray(vv) for kk, vv in v.items()}
-                       if isinstance(v, dict) else np.asarray(v))
+            out = _compiled_program(static, n_dev)(a)
+            out = {k: ({kk: np.asarray(vv)[:S] for kk, vv in v.items()}
+                       if isinstance(v, dict) else np.asarray(v)[:S])
                    for k, v in out.items()}
         wall = time.perf_counter() - t0
+        _COMPILED_SIGS.add(sig)
+        # First-call wall for a never-before-seen program shape is dominated
+        # by compilation (trace + XLA); with the persistent compilation
+        # cache warm it collapses to trace + executable load.
+        compile_s = wall if first else 0.0
 
         # Post-hoc invariants, checked in one shot for the whole grid.
         if bool(out["slot_pressure"].any()):
@@ -1082,5 +1195,8 @@ class BatchedSimulator:
             has_window=np.array([c.window is not None for c in self.cells]),
             final_caps=out["final_caps"],
             final_on=out["final_on"],
+            final_occ=out["final_occ"],
             ticks=self._ticks,
-            wall_s=wall)
+            wall_s=wall,
+            n_devices=n_dev,
+            compile_s=compile_s)

@@ -6,7 +6,8 @@ spike pattern x host-spec mix x capacity churn x placement rules -- and
 runs each policy on the vectorized engine, reporting throughput
 (ticks/sec) alongside the paper's payload / power metrics.  It feeds the
 ``sweep_scale`` / ``sweep_grid`` / ``sweep_grid_dpm`` /
-``sweep_grid_rules`` benchmark entries (``python -m benchmarks.run``).
+``sweep_grid_rules`` / ``sweep_scale_sharded`` benchmark entries
+(``python -m benchmarks.run``).
 
 Design notes:
   * Migration *search* stays disabled in the cap-only/churn families
@@ -30,6 +31,8 @@ Design notes:
 from __future__ import annotations
 
 import dataclasses
+import os
+import tempfile
 import time
 import warnings
 from typing import Optional, Sequence
@@ -308,6 +311,126 @@ def _grid_balancer(specs: Sequence[SweepSpec]):
     return None
 
 
+_CACHE_STATE: dict = {"enabled": False, "path": None}
+
+
+def enable_compilation_cache(path: Optional[str] = None) -> Optional[str]:
+    """Best-effort enable of jax's persistent compilation cache.
+
+    Re-invoking the same grid shapes previously paid the full XLA compile
+    every process (the rules grid alone costs ~14 s); with the cache on,
+    a warm re-invocation only pays trace + executable load.  The directory
+    is ``REPRO_JAX_CACHE_DIR`` when set (set it to the empty string to
+    disable), else a per-user directory under the system temp dir.
+    Returns the cache path, or ``None`` when disabled/unsupported.
+    """
+    if _CACHE_STATE["enabled"]:
+        return _CACHE_STATE["path"]
+    env = os.environ.get("REPRO_JAX_CACHE_DIR")
+    if env == "":
+        return None
+    import jax
+    path = path or env or os.path.join(
+        tempfile.gettempdir(), f"repro-jax-cache-{os.getuid()}")
+    try:
+        jax.config.update("jax_compilation_cache_dir", path)
+        # Sweep programs are small but slow to build: cache everything.
+        jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.0)
+        jax.config.update("jax_persistent_cache_min_entry_size_bytes", -1)
+    except Exception:                        # older jax without the knobs
+        return None
+    _CACHE_STATE.update(enabled=True, path=path)
+    return path
+
+
+#: Per-bucket records from the most recent batched ``run_sweep`` /
+#: ``run_sweep_batched`` call: shape class, cell count, mesh size,
+#: ``compile_s`` (first-call wall for never-seen program shapes, ~0 on a
+#: warm in-process or persistent cache), and run wall.  Benchmarks read it
+#: to report compile cost per bucket.
+LAST_BATCH_INFO: list = []
+
+
+def _pow2(n: int) -> int:
+    """Smallest power of two >= n (n >= 1)."""
+    return 1 << max(int(n) - 1, 0).bit_length()
+
+
+def _bucket_key(cell) -> tuple[int, int]:
+    """Pow2-padded shape class of one cell: (hosts, max VMs on one host).
+
+    Mirrors the CSR/pow2-pad approach of the segmented Pallas kernel: cells
+    pack to their class bounds instead of the global grid max, so a mixed
+    10/100/1000-host grid compiles a few small programs rather than padding
+    every cell to 1000 hosts, and recompiles only happen on doublings.
+    """
+    counts: dict[str, int] = {}
+    for v in cell.snapshot.vms.values():
+        counts[v.host_id] = counts.get(v.host_id, 0) + 1
+    return (_pow2(len(cell.snapshot.hosts)),
+            _pow2(max(counts.values(), default=1)))
+
+
+def _run_cells_batched(cells, keys, balancer=None, slot_slack: float = 3.0,
+                       n_devices: Optional[int] = None, pad_hosts: int = 0,
+                       pad_slots: int = 0) -> dict:
+    """Run prepared cells as one program; returns {(spec.name, policy): r}.
+
+    Wall time is measured for the batch and attributed evenly: per-cell
+    ``wall_s`` is ``batch_wall / n_cells``, so ``ticks_per_s`` reads as
+    aggregate throughput.  Appends one record to :data:`LAST_BATCH_INFO`.
+    """
+    from repro.sim.batch import BatchedSimulator
+
+    enable_compilation_cache()
+    sim = BatchedSimulator(cells, slot_slack=slot_slack, balancer=balancer,
+                           n_devices=n_devices, pad_hosts=pad_hosts,
+                           pad_slots=pad_slots)
+    t0 = time.perf_counter()
+    res = sim.run()
+    wall = time.perf_counter() - t0
+    LAST_BATCH_INFO.append({
+        "bucket": (pad_hosts or None, pad_slots or None),
+        "n_cells": len(cells),
+        "n_devices": res.n_devices,
+        "compile_s": res.compile_s,
+        "wall_s": wall,
+    })
+    out = {}
+    per_cell_wall = wall / len(cells)
+    for i, (spec, p) in enumerate(keys):
+        acc = res.accumulators(i)
+        out[(spec.name, p)] = SweepCellResult(
+            spec=spec, policy=p, wall_s=per_cell_wall, ticks=res.ticks,
+            ticks_per_s=res.ticks / max(per_cell_wall, 1e-9),
+            cpu_satisfaction=acc.cpu_satisfaction(),
+            cpu_payload_mhz_s=acc.cpu_payload_mhz_s,
+            energy_j=acc.energy_j,
+            cap_changes=acc.cap_changes,
+            vmotions=acc.vmotions,
+            power_ons=acc.power_ons,
+            power_offs=acc.power_offs)
+    return out
+
+
+def _run_buckets(cells, keys, n_devices: Optional[int] = None,
+                 slot_slack: float = 3.0) -> dict:
+    """Pad-bucket partitioner: group cells into pow2 (H, J) shape classes,
+    compile one program per bucket, shard each bucket's cells axis over the
+    device mesh.  Returns the flat {(spec.name, policy): result} map."""
+    by_bucket: dict[tuple[int, int], list] = {}
+    for c, k in zip(cells, keys):
+        by_bucket.setdefault(_bucket_key(c), []).append((c, k))
+    flat: dict = {}
+    for (hp, jp), pairs in sorted(by_bucket.items()):
+        bspecs = list(dict.fromkeys(k[0] for _, k in pairs))
+        flat.update(_run_cells_batched(
+            [c for c, _ in pairs], [k for _, k in pairs],
+            balancer=_grid_balancer(bspecs), slot_slack=slot_slack,
+            n_devices=n_devices, pad_hosts=hp, pad_slots=jp))
+    return flat
+
+
 def _build_batch_cells(specs: Sequence[SweepSpec],
                        policies: Sequence[str]):
     from repro.sim.batch import BatchCell
@@ -327,62 +450,59 @@ def _build_batch_cells(specs: Sequence[SweepSpec],
 def run_sweep(specs: Sequence[SweepSpec],
               policies: Sequence[str] = POLICIES,
               engine: str = "vector",
-              on_unsupported: str = "raise"
+              on_unsupported: str = "raise",
+              n_devices: Optional[int] = None
               ) -> dict[str, dict[str, SweepCellResult]]:
     """Run the grid; returns results[spec.name][policy].
 
-    ``engine="batch"`` routes the whole grid through the jit-compiled
-    :class:`repro.sim.batch.BatchedSimulator` -- one program for every
-    (spec, policy) cell -- instead of cell-at-a-time Python execution.
+    ``engine="batch"`` routes the grid through the jit-compiled
+    :class:`repro.sim.batch.BatchedSimulator` instead of cell-at-a-time
+    Python execution.  Cells are first grouped into pow2-padded ``(hosts,
+    VMs/host)`` shape classes (*pad buckets*): one compiled program per
+    bucket, each sharded over the ``("cells",)`` device mesh, so a mixed
+    10/100/1000-host grid neither pads every cell to the global max nor
+    recompiles per unique size.  ``n_devices=None`` shards over every
+    visible device; pass 1 to force single-device execution.
+
     A grid with cells requesting a regime the batched engine cannot replay
     exactly raises :class:`repro.sim.batch.BatchUnsupported` (the
     default); with ``on_unsupported="fallback"`` the grid is
-    *partitioned* instead -- the supported cells run as one batched
-    program, only the offending cells (named in the warning) run on the
-    sequential ``VectorSimulator``, and the results are merged -- never
-    silently freezing the unsupported dimension.
+    *partitioned* instead -- the supported cells run batched, only the
+    offending cells (named in the warning) run on the sequential
+    ``VectorSimulator``, and the results are merged -- never silently
+    freezing the unsupported dimension.  Merged results always follow the
+    input ``specs`` x ``policies`` order, whatever the partitioning.
     """
     if engine == "batch":
-        from repro.sim.batch import BatchedSimulator
-        if on_unsupported != "fallback":
-            return run_sweep_batched(specs, policies)
+        from repro.sim.batch import BatchedSimulator, BatchUnsupported
+        LAST_BATCH_INFO.clear()
         cells, keys = _build_batch_cells(specs, policies)
         reasons = BatchedSimulator.unsupported_cells(
             cells, _grid_balancer(specs))
-        if not reasons:
-            return run_sweep_batched(specs, policies,
-                                     _prebuilt=(cells, keys))
-        warnings.warn(
-            "batched engine cannot run cells "
-            f"{sorted(reasons)[:5]}{'...' if len(reasons) > 5 else ''} "
-            f"({next(iter(reasons.values()))}); running those on the "
-            "sequential vector engine and batching the rest",
-            RuntimeWarning, stacklevel=2)
-        good = [(s, p) for s, p in keys
-                if f"{s.name}/{p}" not in reasons]
+        if reasons and on_unsupported != "fallback":
+            # Probe the whole grid up front: bucketing could otherwise
+            # mask e.g. a time-grid mismatch by splitting the disagreeing
+            # cells into different buckets.
+            name, why = min(reasons.items())
+            raise BatchUnsupported(f"cell {name!r}: {why}")
+        if reasons:
+            warnings.warn(
+                "batched engine cannot run cells "
+                f"{sorted(reasons)[:5]}{'...' if len(reasons) > 5 else ''} "
+                f"({next(iter(reasons.values()))}); running those on the "
+                "sequential vector engine and batching the rest",
+                RuntimeWarning, stacklevel=2)
+        good = [(c, k) for c, k in zip(cells, keys)
+                if f"{k[0].name}/{k[1]}" not in reasons]
+        flat = (_run_buckets([c for c, _ in good], [k for _, k in good],
+                             n_devices=n_devices)
+                if good else {})
         out: dict[str, dict[str, SweepCellResult]] = {}
-        if good:
-            good_specs = list(dict.fromkeys(s for s, _ in good))
-            by_spec: dict[str, list[str]] = {}
-            for s, p in good:
-                by_spec.setdefault(s.name, []).append(p)
-            # scenario_families grids are rectangular per spec; batch the
-            # supported sub-grid in one program, reusing the cells already
-            # built for the probe.
-            good_policies = [p for p in policies
-                             if all(p in by_spec[s.name]
-                                    for s in good_specs)]
-            sub = [(c, k) for c, k in zip(cells, keys)
-                   if k[0] in good_specs and k[1] in good_policies]
-            batched = run_sweep_batched(
-                good_specs, policies=good_policies,
-                _prebuilt=([c for c, _ in sub], [k for _, k in sub]))
-            for name, by_p in batched.items():
-                out.setdefault(name, {}).update(by_p)
-        for s, p in keys:
-            if p not in out.get(s.name, {}):
-                out.setdefault(s.name, {})[p] = run_cell(s, p,
-                                                         engine="vector")
+        for spec in specs:
+            out[spec.name] = {
+                p: flat.get((spec.name, p))
+                or run_cell(spec, p, engine="vector")
+                for p in policies}
         return out
     out = {}
     for spec in specs:
@@ -394,42 +514,28 @@ def run_sweep(specs: Sequence[SweepSpec],
 def run_sweep_batched(specs: Sequence[SweepSpec],
                       policies: Sequence[str] = POLICIES,
                       slot_slack: float = 3.0,
-                      _prebuilt=None
+                      _prebuilt=None,
+                      n_devices: Optional[int] = None
                       ) -> dict[str, dict[str, SweepCellResult]]:
     """One jitted program over the whole (spec x policy) grid.
 
     All specs must share ``duration_s``/``tick_s``/``drs_period_s`` (true
     for :func:`scenario_families` grids); cluster size, budget, spike
     family, host mix, churn family, rule family, and policy vary per cell.
-    Wall time is measured for the batch and attributed evenly: per-cell
-    ``wall_s`` is ``batch_wall / n_cells``, so ``ticks_per_s`` reads as
-    aggregate throughput.
+    Unlike :func:`run_sweep`'s bucketed batch path, cells pack exactly to
+    the grid max ``(H, J)`` (no pow2 padding) -- the predictable shape the
+    committed benchmark baselines were measured against.  The cells axis is
+    still sharded over ``n_devices`` (default: all visible devices).
     """
-    from repro.sim.batch import BatchedSimulator
-
-    # ``_prebuilt`` lets run_sweep's fallback probe hand over the grid it
-    # already constructed instead of rebuilding every cell.
+    # ``_prebuilt`` lets callers hand over a grid they already constructed
+    # instead of rebuilding every cell.
     cells, keys = _prebuilt or _build_batch_cells(specs, policies)
-    sim = BatchedSimulator(cells, slot_slack=slot_slack,
-                           balancer=_grid_balancer(specs))
-    t0 = time.perf_counter()
-    res = sim.run()
-    wall = time.perf_counter() - t0
-
+    LAST_BATCH_INFO.clear()
+    flat = _run_cells_batched(cells, keys, balancer=_grid_balancer(specs),
+                              slot_slack=slot_slack, n_devices=n_devices)
     out: dict[str, dict[str, SweepCellResult]] = {}
-    per_cell_wall = wall / len(cells)
-    for i, (spec, p) in enumerate(keys):
-        acc = res.accumulators(i)
-        out.setdefault(spec.name, {})[p] = SweepCellResult(
-            spec=spec, policy=p, wall_s=per_cell_wall, ticks=res.ticks,
-            ticks_per_s=res.ticks / max(per_cell_wall, 1e-9),
-            cpu_satisfaction=acc.cpu_satisfaction(),
-            cpu_payload_mhz_s=acc.cpu_payload_mhz_s,
-            energy_j=acc.energy_j,
-            cap_changes=acc.cap_changes,
-            vmotions=acc.vmotions,
-            power_ons=acc.power_ons,
-            power_offs=acc.power_offs)
+    for spec, p in keys:
+        out.setdefault(spec.name, {})[p] = flat[(spec.name, p)]
     return out
 
 
