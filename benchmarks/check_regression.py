@@ -11,7 +11,10 @@ stopped aliasing, a kernel falling off the fused path) shows up directly.
 Also gates the sharded sweep engine (``sweep_scale_sharded``): a tiny grid
 runs on a 1-device and an 8-virtual-device ``("cells",)`` mesh in a
 subprocess; per-cell results must be bit-identical across the two meshes
-(hard gate) and the sharded/single speedup must hold its committed floor.
+(hard gate), and the sharded/single speedup must hold its committed floor
+whenever the runner has at least as many cores as forced virtual devices
+(oversubscribed runners skip the floor -- their throughput is scheduler
+noise, not a property of the compiled program).
 
 Also gates the fused Pallas allocation kernel (``kernel_waterfill``): the
 CI runner has no TPU, so interpret-mode wall time is correctness-grade
@@ -67,6 +70,16 @@ def _grids():
             spikes=("burst",), heterogeneous=(False, True),
             rules=("violation_burst", "cap_blocked"),
             duration_s=600.0, tick_s=10.0),
+        # Timed-migration execution model: multi-tick copy windows in the
+        # scan-state in-flight table, slot/bandwidth-gated launches, both
+        # endpoints charged -- cells that used to fall off the batched
+        # engine (see sweep_grid_timed).  10 s ticks keep transfers
+        # multi-tick; 900 s spans three DRS invocations.
+        "sweep_grid_timed": scenario_families(
+            sizes=(20,), budgets_per_host_w=(250.0,),
+            spikes=("burst",), heterogeneous=(False, True),
+            churns=("timed_churn", "failure_cascade"),
+            duration_s=900.0, tick_s=10.0),
     }
 
 
@@ -232,17 +245,25 @@ def main() -> int:
             continue
         if "parity_bit_identical" in base:
             # Sharded engine: parity is the hard gate (bit-identical
-            # per-cell results across mesh sizes); the sharded/single
+            # per-cell results across mesh sizes).  The sharded/single
             # speedup floor catches collectives or resharding creeping
-            # into the compiled program.
+            # into the compiled program -- but it is only meaningful when
+            # the virtual devices map onto real cores: on a runner with
+            # fewer cores than forced devices the "sharded" side is pure
+            # oversubscription and its throughput is scheduler noise, so
+            # the floor is skipped (parity still gates).
             floor = base["speedup"] * (1.0 - args.tolerance)
+            gate_speedup = got["n_devices"] <= (os.cpu_count() or 1)
             ok = (got["parity_bit_identical"]
-                  and got["speedup"] >= floor)
+                  and (got["speedup"] >= floor or not gate_speedup))
             status = "ok" if ok else "FAIL"
+            note = ("" if gate_speedup else
+                    f" [floor skipped: {got['n_devices']} virtual devices"
+                    f" > {os.cpu_count() or 1} cores]")
             print(f"{status} {name}: parity "
                   f"{'exact' if got['parity_bit_identical'] else 'BROKEN'}"
                   f", speedup {got['speedup']:.2f}x vs baseline "
-                  f"{base['speedup']:.2f}x (floor {floor:.2f}x)",
+                  f"{base['speedup']:.2f}x (floor {floor:.2f}x){note}",
                   flush=True)
             failed |= not ok
             continue

@@ -337,6 +337,70 @@ def sweep_grid_rules():
             f";compile:{compile_wall:.1f}s")
 
 
+def sweep_grid_timed():
+    """Production-realistic churn at grid scale: timed migrations batched.
+
+    Grid: 100 hosts x {timed_churn, failure_cascade} x {no rules,
+    violation burst} x 2 spike families x {homogeneous, mixed} x {cpc,
+    static} = 32 cells (32,000 VMs).  Every cell runs the gated vMotion
+    execution model -- multi-tick copy windows carried in the scan-state
+    in-flight table, both endpoints charged transfer overhead, per-host
+    migration slots plus the cluster bandwidth budget gating launches,
+    deferred moves re-scored next invocation -- inside ONE jitted
+    program; before this model these cells fell off the batched engine
+    onto the per-cell vector path.  The sequential baseline runs a
+    4-cell subset through that vector path.  Cells/s semantics match
+    ``sweep_grid`` (engine wall time on prepared clusters)."""
+    from repro.sim.sweep import run_cell, run_sweep_batched, \
+        scenario_families
+    specs = scenario_families(
+        sizes=(100,), budgets_per_host_w=(250.0,),
+        spikes=("burst", "prime"), heterogeneous=(False, True),
+        churns=("timed_churn", "failure_cascade"),
+        rules=("none", "violation_burst"),
+        duration_s=600.0, tick_s=10.0)
+    policies = ("cpc", "static")
+    n_cells = len(specs) * len(policies)
+
+    t0 = time.perf_counter()
+    res = run_sweep_batched(specs, policies=policies, slot_slack=1.5)
+    first_wall = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    res = run_sweep_batched(specs, policies=policies, slot_slack=1.5)
+    batch_wall = time.perf_counter() - t0
+    batch_cps = n_cells / sum(r.wall_s for by_p in res.values()
+                              for r in by_p.values())
+    compile_wall = max(first_wall - batch_wall, 0.0)
+
+    seq_wall, seq_cells = 0.0, 0
+    for spec in specs[:2]:
+        for p in policies:
+            seq_wall += run_cell(spec, p, engine="vector").wall_s
+            seq_cells += 1
+    seq_cps = seq_cells / seq_wall
+
+    vmo = sum(r.vmotions for by_p in res.values() for r in by_p.values())
+    pons = sum(r.power_ons for by_p in res.values() for r in by_p.values())
+    poffs = sum(r.power_offs for by_p in res.values()
+                for r in by_p.values())
+    ARTIFACT["sweep_grid_timed"] = {
+        "n_cells": n_cells,
+        "n_hosts": 100,
+        "cells_per_s_batched": batch_cps,
+        "cells_per_s_sequential": seq_cps,
+        "speedup": batch_cps / seq_cps,
+        "compile_s": compile_wall,
+        "migrations": int(vmo),
+        "power_ons": int(pons),
+        "power_offs": int(poffs),
+    }
+    return (f"{n_cells}cells@100h:{batch_cps:.1f}cells/s"
+            f";seq:{seq_cps:.1f}cells/s"
+            f";speedup:{batch_cps / seq_cps:.1f}x"
+            f";migr:{vmo};pons:{pons};poffs:{poffs}"
+            f";compile:{compile_wall:.1f}s")
+
+
 def _sharded_probe(n_devices: int, *argv: str) -> dict:
     """Run ``benchmarks.sweep_sharded`` in a subprocess with ``n_devices``
     forced host devices (the cells mesh needs them to exist before jax
@@ -436,6 +500,7 @@ BENCHES = [
     ("sweep_grid", sweep_grid, True),
     ("sweep_grid_dpm", sweep_grid_dpm, True),
     ("sweep_grid_rules", sweep_grid_rules, True),
+    ("sweep_grid_timed", sweep_grid_timed, True),
     ("sweep_scale_sharded", sweep_scale_sharded, True),
     ("kernel_microbenches", kernel_microbenches, False),
     ("roofline_summary", roofline_summary, False),
@@ -447,7 +512,13 @@ def main() -> None:
     ap.add_argument("--skip-slow", action="store_true")
     ap.add_argument("--json", action="store_true",
                     help="write sweep throughput to BENCH_sweep.json")
+    ap.add_argument("--only", action="append", default=None, metavar="NAME",
+                    help="run only the named bench (repeatable)")
     args, _ = ap.parse_known_args()
+    if args.only:
+        unknown = set(args.only) - {name for name, _, _ in BENCHES}
+        if unknown:
+            ap.error(f"unknown bench(es): {sorted(unknown)}")
     # Persistent XLA compile cache: re-running the harness on unchanged
     # grid shapes pays trace + load instead of full recompiles (the rules
     # grid alone costs ~14 s of XLA time per cold process).
@@ -457,6 +528,8 @@ def main() -> None:
         print(f"# jax compilation cache: {cache}", flush=True)
     print("name,us_per_call,derived")
     for name, fn, slow in BENCHES:
+        if args.only is not None and name not in args.only:
+            continue
         if slow and args.skip_slow:
             print(f"{name},skipped,--skip-slow")
             continue
@@ -470,11 +543,19 @@ def main() -> None:
             print("BENCH_sweep.json not written: sweep benches were skipped",
                   flush=True)
             return
-        path = os.path.join(os.path.dirname(__file__), "..",
-                            "BENCH_sweep.json")
-        with open(os.path.normpath(path), "w") as f:
-            json.dump(ARTIFACT, f, indent=2, sort_keys=True)
-        print(f"wrote {os.path.normpath(path)}", flush=True)
+        path = os.path.normpath(os.path.join(os.path.dirname(__file__),
+                                             "..", "BENCH_sweep.json"))
+        # Merge over the committed file: the smoke baselines (and any
+        # full-size entry a --skip-slow run didn't re-measure) survive, so
+        # a nightly `git diff` shows real drift, not dropped sections.
+        data = {}
+        if os.path.exists(path):
+            with open(path) as f:
+                data = json.load(f)
+        data.update(ARTIFACT)
+        with open(path, "w") as f:
+            json.dump(data, f, indent=2, sort_keys=True)
+        print(f"wrote {path}", flush=True)
 
 
 if __name__ == "__main__":

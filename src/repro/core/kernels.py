@@ -69,6 +69,28 @@ class MigrationParams(NamedTuple):
     contention_threshold: float = 0.9
 
 
+class MigrationLimits(NamedTuple):
+    """Per-invocation launch gates on manager migrations.
+
+    ``slots_per_host``: a host may be an *endpoint* (source or destination)
+    of at most this many migration launches per manager invocation;
+    ``bandwidth``: cluster-wide cap on total launches per invocation.
+    ``None`` means ungated, ``0`` means no launches at all.  Gated moves
+    are simply not emitted -- the manager re-scores them at its next
+    invocation, so corrections cascade across rounds instead of bursting.
+    Evacuations (DPM consolidation) are exempt: power-off is all-or-nothing
+    and already waits for its migrations to drain, so in-flight counts MAY
+    exceed ``slots_per_host`` while a host evacuates.
+    """
+
+    slots_per_host: int | None = None
+    bandwidth: int | None = None
+
+    @property
+    def gated(self) -> bool:
+        return self.slots_per_host is not None or self.bandwidth is not None
+
+
 class DenseCols(NamedTuple):
     """Dense-slot VM entitlement columns, ``(S, H, J)`` each.
 
@@ -702,7 +724,8 @@ def _affinity_keep_slots(xp, work, act, n_groups: int, srcs, js):
     return (g_v[..., None] < 0) | (tot_v[..., None] <= 1) | (dest_cnt > 0)
 
 
-def _admission_slots(xp, on, work, capacity, host_mem, srcs, js):
+def _admission_slots(xp, on, work, capacity, host_mem, srcs, js,
+                     limits: MigrationLimits | None = None, launch=None):
     """Reservation + memory + rules + free-slot admission for K gathered
     candidate slots against every destination: ``(S, K, H)``.
 
@@ -714,6 +737,14 @@ def _admission_slots(xp, on, work, capacity, host_mem, srcs, js):
     hosts.  Gathering the candidates first keeps every admission pass
     O(K * H) instead of O(V * H) with K = the few slots a phase can
     actually move.
+
+    ``limits``/``launch`` apply the per-invocation launch gates: with
+    ``launch = (launch_h, launch_n)`` -- per-host endpoint counts (S, H)
+    and the per-cell total (S,) of moves already launched this invocation
+    -- a candidate fits only if both its endpoints and the cluster budget
+    still have headroom.  The gate lands on the *shared* fit (before the
+    free-slot split), so a launch-gated deferral is deliberate policy, not
+    slot pressure.
     """
     occ = work["occ"]
     act = occ & on[..., None]
@@ -737,13 +768,23 @@ def _admission_slots(xp, on, work, capacity, host_mem, srcs, js):
             a_v.astype(xp.float64),
             xp.swapaxes((anti_cnt > 0).astype(xp.float64), 1, 2)) > 0.5
         fit = fit & ~conflict
+    if limits is not None and limits.gated:
+        launch_h, launch_n = launch
+        if limits.slots_per_host is not None:
+            src_launch = xp.take_along_axis(launch_h, srcs, axis=-1)
+            fit = fit & (src_launch < limits.slots_per_host)[..., None]
+            fit = fit & (launch_h < limits.slots_per_host)[:, None, :]
+        if limits.bandwidth is not None:
+            fit = fit & (launch_n < limits.bandwidth)[:, None, None]
     free_slot = xp.any(~occ, axis=-1)                 # (S, H)
     return fit & free_slot[:, None, :], fit, res_h, mem_h
 
 
 def correct_constraints_slots(be, hosts: HostCols, capacity, work, host_mem,
                               rmeta: RulesMeta, enabled, moves, n_moves,
-                              pads=SLOT_PAD):
+                              pads=SLOT_PAD,
+                              limits: MigrationLimits = MigrationLimits(),
+                              launch=None):
     """Constraint correction on the dense slot layout (paper Fig. 1a/3).
 
     Replays the object plane's correction protocol as bounded array loops:
@@ -762,19 +803,29 @@ def correct_constraints_slots(be, hosts: HostCols, capacity, work, host_mem,
     ``capacity`` is the injected admission view (current-cap managed
     capacity for static policies, fundable capacity during Powercap
     Allocation).  Moves mutate ``work`` in slot space and are appended to
-    ``moves``/``n_moves``; returns ``(work, moves, n_moves, pressure)``
-    where ``pressure`` flags cells whose J slot bound blocked an
-    otherwise-feasible correction.
+    ``moves``/``n_moves``; returns ``(work, moves, n_moves, pressure,
+    launch)`` where ``pressure`` flags cells whose J slot bound blocked an
+    otherwise-feasible correction and ``launch = (launch_h, launch_n)``
+    carries the per-invocation launch counts (shared with the balancer
+    phase) updated for every committed move.  ``limits`` gates launches
+    per :class:`MigrationLimits`; affinity gathers stay all-or-nothing --
+    a group whose remaining launch headroom cannot cover the whole gather
+    is deferred intact to the next invocation.
     """
     xp = be.xp
     on = hosts.on
     s_ax, h_ax, j_ax = work["occ"].shape
     h_idx = xp.arange(h_ax)
     pressure = xp.zeros(s_ax, dtype=bool)
+    gated = limits.gated
+    if launch is None:
+        launch = (xp.zeros((s_ax, h_ax), dtype=n_moves.dtype),
+                  xp.zeros(s_ax, dtype=n_moves.dtype))
+    launch_h, launch_n = launch
 
     # ---------------------------------------------------- 1. affinity
     def aff_body(g, state):
-        work, moves, n_moves, pressure = state
+        work, moves, n_moves, pressure, launch_h, launch_n = state
         occ = work["occ"]
         act = occ & on[..., None]
         res = work["reservation"]
@@ -813,6 +864,21 @@ def correct_constraints_slots(be, hosts: HostCols, capacity, work, host_mem,
         ok = ok & (res_h + moving_res <= capacity + 1e-9)
         ok = ok & (mem_h + moving_mem <= host_mem + 1e-9)
         ok = ok & (cnt_h > 0)
+        if gated:
+            # All-or-nothing under the launch gates too: every member
+            # host must have endpoint headroom for its departures, the
+            # home for all arrivals, and the cluster budget for the whole
+            # gather -- otherwise the group defers intact.
+            if limits.slots_per_host is not None:
+                sl = limits.slots_per_host
+                dep_bad = ((cnt_h > 0) & (launch_h + cnt_h > sl)).astype(
+                    launch_h.dtype)
+                ok = ok & ((xp.sum(dep_bad, axis=-1)[:, None]
+                            - dep_bad) == 0)
+                ok = ok & (launch_h + n_movers <= sl)
+            if limits.bandwidth is not None:
+                ok = ok & (launch_n[:, None] + n_movers
+                           <= limits.bandwidth)
         free_h = j_ax - xp.sum(occ, axis=-1)
         ok_full = ok & (free_h >= n_movers)
         feasible = xp.any(ok_full, axis=-1)
@@ -833,7 +899,7 @@ def correct_constraints_slots(be, hosts: HostCols, capacity, work, host_mem,
         do_g = enabled & violated & feasible
 
         def mover_body(_, st):
-            work, moves, n_moves = st
+            work, moves, n_moves, launch_h, launch_n = st
             movers_now = ((work["occ"] & on[..., None])
                           & (work["aff_group"] == g) & ~on_home)
             any_m = xp.any(movers_now, axis=(-1, -2))
@@ -844,18 +910,27 @@ def correct_constraints_slots(be, hosts: HostCols, capacity, work, host_mem,
             work, moved = move_slot(xp, work, do, src, jj, home, pads)
             moves, n_moves = record_move(xp, moves, n_moves, moved, src,
                                          jj, home)
-            return work, moves, n_moves
+            if gated:
+                is_ep = ((h_idx[None, :] == src[:, None])
+                         | (h_idx[None, :] == home[:, None]))
+                launch_h = launch_h + (moved[:, None] & is_ep).astype(
+                    launch_h.dtype)
+                launch_n = launch_n + moved.astype(launch_n.dtype)
+            return work, moves, n_moves, launch_h, launch_n
 
-        work, moves, n_moves = be.fori(
-            rmeta.max_group_members, mover_body, (work, moves, n_moves))
-        return work, moves, n_moves, pressure
+        work, moves, n_moves, launch_h, launch_n = be.fori(
+            rmeta.max_group_members, mover_body,
+            (work, moves, n_moves, launch_h, launch_n))
+        return work, moves, n_moves, pressure, launch_h, launch_n
 
     if rmeta.n_groups:
-        work, moves, n_moves, pressure = be.fori(
-            rmeta.n_groups, aff_body, (work, moves, n_moves, pressure))
+        work, moves, n_moves, pressure, launch_h, launch_n = be.fori(
+            rmeta.n_groups, aff_body,
+            (work, moves, n_moves, pressure, launch_h, launch_n))
 
     # ----------------------------------- shared mover for phases 2 and 3
-    def greedy_move(work, moves, n_moves, pressure, viol, k_bound):
+    def greedy_move(work, moves, n_moves, pressure, launch_h, launch_n,
+                    viol, k_bound):
         """Move the first slot in ``viol`` that has a feasible destination
         to the admissible host with the most free capacity.
 
@@ -871,7 +946,8 @@ def correct_constraints_slots(be, hosts: HostCols, capacity, work, host_mem,
         srcs = order // j_ax
         js = order % j_ax
         fit, fit_unb, res_h, _ = _admission_slots(
-            xp, on, work, capacity, host_mem, srcs, js)
+            xp, on, work, capacity, host_mem, srcs, js,
+            limits, (launch_h, launch_n))
         mig_v = _gather_slots(xp, work["migratable"], srcs, js)
         ok_v = (kvalid & mig_v)[..., None]
         fit = fit & ok_v
@@ -891,7 +967,13 @@ def correct_constraints_slots(be, hosts: HostCols, capacity, work, host_mem,
         work, moved = move_slot(xp, work, found, src, jj, dest, pads)
         moves, n_moves = record_move(xp, moves, n_moves, moved, src, jj,
                                      dest)
-        return work, moves, n_moves, pressure, found
+        if gated:
+            is_ep = ((h_idx[None, :] == src[:, None])
+                     | (h_idx[None, :] == dest[:, None]))
+            launch_h = launch_h + (moved[:, None] & is_ep).astype(
+                launch_h.dtype)
+            launch_n = launch_n + moved.astype(launch_n.dtype)
+        return work, moves, n_moves, pressure, launch_h, launch_n, found
 
     # ---------------------------------------------------- 2. VM-host
     if rmeta.n_vmhost:
@@ -902,19 +984,21 @@ def correct_constraints_slots(be, hosts: HostCols, capacity, work, host_mem,
             return act & ~allowed_self
 
         def vh_cond(state):
-            work, moves, n_moves, pressure, go, k = state
+            work, moves, n_moves, pressure, lh, ln, go, k = state
             return (k < rmeta.n_vmhost) & xp.any(go)
 
         def vh_body(state):
-            work, moves, n_moves, pressure, go, k = state
-            work, moves, n_moves, pressure, found = greedy_move(
-                work, moves, n_moves, pressure, vh_viol(work),
+            work, moves, n_moves, pressure, lh, ln, go, k = state
+            work, moves, n_moves, pressure, lh, ln, found = greedy_move(
+                work, moves, n_moves, pressure, lh, ln, vh_viol(work),
                 rmeta.n_vmhost)
-            return work, moves, n_moves, pressure, go & found, k + 1
+            return work, moves, n_moves, pressure, lh, ln, go & found, k + 1
 
         go0 = enabled & xp.any(vh_viol(work), axis=(-1, -2))
-        work, moves, n_moves, pressure, _, _ = be.while_loop(
-            vh_cond, vh_body, (work, moves, n_moves, pressure, go0, 0))
+        work, moves, n_moves, pressure, launch_h, launch_n, _, _ = \
+            be.while_loop(vh_cond, vh_body,
+                          (work, moves, n_moves, pressure, launch_h,
+                           launch_n, go0, 0))
 
     # ------------------------------------------------ 3. anti-affinity
     if rmeta.n_anti:
@@ -929,27 +1013,31 @@ def correct_constraints_slots(be, hosts: HostCols, capacity, work, host_mem,
             return xp.any(extra, axis=-1)                   # (S, H, J)
 
         def anti_cond(state):
-            work, moves, n_moves, pressure, go, k = state
+            work, moves, n_moves, pressure, lh, ln, go, k = state
             return (k < rmeta.max_anti_members) & xp.any(go)
 
         def anti_body(state):
-            work, moves, n_moves, pressure, go, k = state
-            work, moves, n_moves, pressure, found = greedy_move(
-                work, moves, n_moves, pressure, anti_extra(work),
+            work, moves, n_moves, pressure, lh, ln, go, k = state
+            work, moves, n_moves, pressure, lh, ln, found = greedy_move(
+                work, moves, n_moves, pressure, lh, ln, anti_extra(work),
                 rmeta.max_anti_members)
-            return work, moves, n_moves, pressure, go & found, k + 1
+            return work, moves, n_moves, pressure, lh, ln, go & found, k + 1
 
         go0 = enabled & xp.any(anti_extra(work), axis=(-1, -2))
-        work, moves, n_moves, pressure, _, _ = be.while_loop(
-            anti_cond, anti_body, (work, moves, n_moves, pressure, go0, 0))
+        work, moves, n_moves, pressure, launch_h, launch_n, _, _ = \
+            be.while_loop(anti_cond, anti_body,
+                          (work, moves, n_moves, pressure, launch_h,
+                           launch_n, go0, 0))
 
-    return work, moves, n_moves, pressure
+    return work, moves, n_moves, pressure, (launch_h, launch_n)
 
 
 def balance_migrations(be, hosts: HostCols, caps, work, host_mem,
                        params: MigrationParams, rmeta: RulesMeta, enabled,
                        moves, n_moves, pads=SLOT_PAD,
-                       iters: int = MIGRATION_WATERFILL_ITERS):
+                       iters: int = MIGRATION_WATERFILL_ITERS,
+                       limits: MigrationLimits = MigrationLimits(),
+                       launch=None):
     """DRS's greedy hill-climb balancer (paper Sec. IV-A), batched.
 
     One move per round: every (migratable slot on the *most-strained*
@@ -963,6 +1051,10 @@ def balance_migrations(be, hosts: HostCols, caps, work, host_mem,
     passes, the true imbalance stops improving, or ``max_moves`` is
     reached.  The contention gate (no strained host => migration cost
     outweighs benefit) is evaluated once on entry, as in the object plane.
+    ``limits``/``launch`` apply the per-invocation launch gates shared
+    with constraint correction (:class:`MigrationLimits`; a hot host with
+    no endpoint headroom simply yields no admissible candidate); returns
+    ``(work, moves, n_moves, pressure, launch)``.
 
     Two deliberate departures from the historical object-plane loop, shared
     by every engine so parity is exact by construction:
@@ -979,8 +1071,12 @@ def balance_migrations(be, hosts: HostCols, caps, work, host_mem,
     xp = be.xp
     on = hosts.on
     s_ax, h_ax, j_ax = work["occ"].shape
+    if launch is None:
+        launch = (xp.zeros((s_ax, h_ax), dtype=n_moves.dtype),
+                  xp.zeros(s_ax, dtype=n_moves.dtype))
     if params.max_moves <= 0:
-        return (work, moves, n_moves, xp.zeros(s_ax, dtype=bool))
+        return (work, moves, n_moves, xp.zeros(s_ax, dtype=bool), launch)
+    launch_h0, launch_n0 = launch
     n_on = xp.sum(on, axis=-1)
     managed = managed_capacity(xp, hosts, caps)
 
@@ -1040,14 +1136,14 @@ def balance_migrations(be, hosts: HostCols, caps, work, host_mem,
 
     def cond(state):
         (work, moves, n_moves, done, prev_imb, pressure, alloc, ents, ns,
-         k) = state
+         launch_h, launch_n, k) = state
         return (k < params.max_moves) & ~xp.all(done)
 
     j_arange = xp.arange(j_ax)
 
     def body(state):
         (work, moves, n_moves, done, prev_imb, pressure, alloc, ents, ns,
-         k) = state
+         launch_h, launch_n, k) = state
         act = work["occ"] & on[..., None]
         imb = _masked_std(xp, ns, on, n_on)
         halt = (imb <= params.imbalance_threshold) | (imb >= prev_imb)
@@ -1071,7 +1167,8 @@ def balance_migrations(be, hosts: HostCols, caps, work, host_mem,
         # (its normalized entitlement is pinned at 0): never a receiver.
         recv = (on & (ns <= mean_n[..., None]) & (managed > 0.0))
         fit, fit_unb, _, _ = _admission_slots(
-            xp, on, work, managed, host_mem, srcs, js)
+            xp, on, work, managed, host_mem, srcs, js,
+            limits, (launch_h, launch_n))
         aff_ok = _affinity_keep_slots(xp, work, act, rmeta.n_groups, srcs,
                                       js)
         fit = fit & aff_ok & cand[..., None] & recv[:, None, :]
@@ -1117,11 +1214,17 @@ def balance_migrations(be, hosts: HostCols, caps, work, host_mem,
                                      dest)
         alloc, ents, ns = _refill_pair(work, alloc, ents, ns, moved, hot,
                                        dest)
+        if limits.gated:
+            is_ep = ((h_idx[None, :] == hot[:, None])
+                     | (h_idx[None, :] == dest[:, None]))
+            launch_h = launch_h + (moved[:, None] & is_ep).astype(
+                launch_h.dtype)
+            launch_n = launch_n + moved.astype(launch_n.dtype)
         return (work, moves, n_moves, done | halt | ~found, imb, pressure,
-                alloc, ents, ns, k + 1)
+                alloc, ents, ns, launch_h, launch_n, k + 1)
 
     state = (work, moves, n_moves, done0, xp.full(s_ax, xp.inf), pressure0,
-             alloc0, ents0, ns0, 0)
-    (work, moves, n_moves, _, _, pressure, _, _, _, _) = be.while_loop(
-        cond, body, state)
-    return work, moves, n_moves, pressure
+             alloc0, ents0, ns0, launch_h0, launch_n0, 0)
+    (work, moves, n_moves, _, _, pressure, _, _, _, launch_h, launch_n,
+     _) = be.while_loop(cond, body, state)
+    return work, moves, n_moves, pressure, (launch_h, launch_n)

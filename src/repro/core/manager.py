@@ -39,10 +39,11 @@ class CloudPowerCapManager:
     # ------------------------------------------------------------------
     def run_invocation(self, snapshot: ClusterSnapshot, now: float = 0.0,
                        low_since: Optional[dict] = None,
-                       last_config_change: float = -1e18
-                       ) -> InvocationResult:
+                       last_config_change: float = -1e18,
+                       limits=None) -> InvocationResult:
         return self.core.invoke(snapshot, now=now, low_since=low_since,
-                                last_config_change=last_config_change)
+                                last_config_change=last_config_change,
+                                limits=limits)
 
 
 def static_manager(dpm_enabled: bool = True) -> CloudPowerCapManager:

@@ -81,11 +81,21 @@ class ManagerCore:
     # ------------------------------------------------------------------
     def invoke(self, snapshot: ClusterSnapshot, now: float = 0.0,
                low_since: Optional[dict] = None,
-               last_config_change: float = -1e18) -> InvocationResult:
+               last_config_change: float = -1e18,
+               limits=None) -> InvocationResult:
+        """``limits`` (a :class:`repro.core.kernels.MigrationLimits`) gates
+        how many migrations correction + balancing may launch this
+        invocation; both phases share one :class:`LaunchBudget` ledger, so
+        a host saturated by corrections receives no balancer moves either.
+        Evacuations (phase 3) are exempt -- power-off is all-or-nothing."""
         actions: list[act.Action] = []
         notes: list[str] = []
-        working = self._phase_allocation(snapshot, actions, notes)
-        working = self._phase_balancing(working, actions, notes)
+        budget = None
+        if limits is not None and limits.gated:
+            from repro.core.migration_core import LaunchBudget
+            budget = LaunchBudget(limits, len(snapshot.hosts))
+        working = self._phase_allocation(snapshot, actions, notes, budget)
+        working = self._phase_balancing(working, actions, notes, budget)
         working = self._phase_redistribution(working, actions, notes, now,
                                              low_since, last_config_change)
         migrations = sum(1 for a in actions if a.kind == "migrate")
@@ -96,11 +106,11 @@ class ManagerCore:
 
     # ---------------- Phase 1: constraint correction ------------------
     def _phase_allocation(self, snapshot: ClusterSnapshot, actions: list,
-                          notes: list) -> ClusterSnapshot:
+                          notes: list, budget=None) -> ClusterSnapshot:
         if self.config.powercap_enabled:
             flex = redivvy.get_flexible_power(snapshot)
             moves = placement.correct_constraints(
-                flex, capacity_fn=redivvy.fundable_capacity)
+                flex, capacity_fn=redivvy.fundable_capacity, budget=budget)
             # Post-correction reserved floors (reservations moved with VMs).
             redivvy.set_reserved_floor_caps(flex)
             new_caps = redivvy.redivvy_power_cap(snapshot, flex)
@@ -114,7 +124,7 @@ class ManagerCore:
             working = flex
         else:
             working = snapshot.clone()
-            moves = placement.correct_constraints(working)
+            moves = placement.correct_constraints(working, budget=budget)
             actions += [act.migrate(vm, dest, reason="constraint-correction")
                         for vm, dest in moves]
         if moves:
@@ -123,7 +133,7 @@ class ManagerCore:
 
     # ---------------- Phase 2: entitlement balancing ------------------
     def _phase_balancing(self, working: ClusterSnapshot, actions: list,
-                         notes: list) -> ClusterSnapshot:
+                         notes: list, budget=None) -> ClusterSnapshot:
         cfg = self.config
         if cfg.powercap_enabled:
             balanced, did = bal.balance_power_cap(working, cfg.balance)
@@ -135,7 +145,7 @@ class ManagerCore:
                     f"imbalance {working.imbalance():.3f}->"
                     f"{balanced.imbalance():.3f}")
                 working = balanced
-        residual_moves = balancer.balance(working, cfg.balancer)
+        residual_moves = balancer.balance(working, cfg.balancer, budget)
         if residual_moves:
             actions += [act.migrate(vm, dest, reason="entitlement-balance")
                         for vm, dest in residual_moves]

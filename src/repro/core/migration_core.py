@@ -115,6 +115,33 @@ class _DenseCell:
         return out
 
 
+class LaunchBudget:
+    """Per-invocation migration-launch ledger shared across phases.
+
+    One instance is created per manager invocation (when the cluster is
+    gated, :class:`repro.core.kernels.MigrationLimits`) and threaded
+    through constraint correction *then* balancing, so the phases share
+    one set of per-host endpoint counts and one cluster total -- exactly
+    the launch state the batched engine carries between the two kernel
+    calls inside its jitted invocation.  Host order is the snapshot's
+    inventory order (``_DenseCell`` packs every phase identically).
+    Evacuations are exempt (see ``MigrationLimits``) and never consult
+    the ledger.
+    """
+
+    def __init__(self, limits: kernels.MigrationLimits, n_hosts: int):
+        self.limits = limits
+        self.launch_h = np.zeros((1, n_hosts), dtype=np.int64)
+        self.launch_n = np.zeros(1, dtype=np.int64)
+
+    @property
+    def launch(self):
+        return self.launch_h, self.launch_n
+
+    def update(self, launch) -> None:
+        self.launch_h, self.launch_n = launch
+
+
 class MigrationCore:
     """Drives the migration protocol for one snapshot (object plane)."""
 
@@ -129,10 +156,13 @@ class MigrationCore:
                 np.zeros(1, dtype=np.int64))
 
     def correct(self, snapshot: ClusterSnapshot,
-                capacity_fn: Callable[[ClusterSnapshot, str], float]
+                capacity_fn: Callable[[ClusterSnapshot, str], float],
+                budget: Optional[LaunchBudget] = None
                 ) -> list[tuple[str, str]]:
         """Constraint correction: fix rule violations, mutating
-        ``snapshot`` in place; returns the (vm_id, dest_host) moves."""
+        ``snapshot`` in place; returns the (vm_id, dest_host) moves.
+        ``budget`` (when the cluster gates migration launches) contributes
+        the shared launch counts to admission and absorbs the updates."""
         pack = _rules_pack(snapshot)
         meta = pack.meta()
         if not meta.any:
@@ -147,13 +177,21 @@ class MigrationCore:
               else 0.0 for hid in cell.host_ids]], dtype=np.float64)
         moves, n_moves = self._moves_buffer(cell.rmeta.move_bound)
         enabled = np.ones(1, dtype=bool)
-        _, moves, n_moves, pressure = kernels.correct_constraints_slots(
-            backend_mod.NUMPY, cell.hosts, capacity, cell.work,
-            cell.host_mem, cell.rmeta, enabled, moves, n_moves)
+        limits = budget.limits if budget else kernels.MigrationLimits()
+        launch = budget.launch if budget else None
+        _, moves, n_moves, pressure, launch = \
+            kernels.correct_constraints_slots(
+                backend_mod.NUMPY, cell.hosts, capacity, cell.work,
+                cell.host_mem, cell.rmeta, enabled, moves, n_moves,
+                limits=limits, launch=launch)
         _check_pressure(pressure)
+        if budget:
+            budget.update(launch)
         return cell.replay(snapshot, moves, int(n_moves[0]))
 
-    def balance(self, snapshot: ClusterSnapshot) -> list[tuple[str, str]]:
+    def balance(self, snapshot: ClusterSnapshot,
+                budget: Optional[LaunchBudget] = None
+                ) -> list[tuple[str, str]]:
         """Greedy hill-climb balancing; mutates ``snapshot`` (what-if) and
         returns the chosen moves."""
         if self.params.max_moves <= 0:
@@ -162,10 +200,15 @@ class MigrationCore:
                           extra_slots=max(self.params.max_moves, 1))
         moves, n_moves = self._moves_buffer(self.params.max_moves)
         enabled = np.ones(1, dtype=bool)
-        _, moves, n_moves, pressure = kernels.balance_migrations(
+        limits = budget.limits if budget else kernels.MigrationLimits()
+        launch = budget.launch if budget else None
+        _, moves, n_moves, pressure, launch = kernels.balance_migrations(
             backend_mod.NUMPY, cell.hosts, cell.caps, cell.work,
-            cell.host_mem, self.params, cell.rmeta, enabled, moves, n_moves)
+            cell.host_mem, self.params, cell.rmeta, enabled, moves, n_moves,
+            limits=limits, launch=launch)
         _check_pressure(pressure)
+        if budget:
+            budget.update(launch)
         return cell.replay(snapshot, moves, int(n_moves[0]))
 
 

@@ -48,11 +48,15 @@ class BalancerConfig:
 
 
 def balance(snapshot: ClusterSnapshot,
-            config: Optional[BalancerConfig] = None
-            ) -> list[tuple[str, str]]:
-    """Mutates ``snapshot`` (what-if) and returns the chosen moves."""
+            config: Optional[BalancerConfig] = None,
+            budget=None) -> list[tuple[str, str]]:
+    """Mutates ``snapshot`` (what-if) and returns the chosen moves.
+
+    ``budget`` is the invocation's shared ``LaunchBudget`` when migration
+    launches are gated (``None`` = ungated); correction launches earlier
+    in the invocation count against the same ledger."""
     config = config or BalancerConfig()
     if config.max_moves <= 0:
         return []
     from repro.core.migration_core import MigrationCore  # local: no cycle
-    return MigrationCore(config.params()).balance(snapshot)
+    return MigrationCore(config.params()).balance(snapshot, budget)

@@ -68,16 +68,18 @@ def place(snapshot: ClusterSnapshot, vm_id: str,
 
 
 def correct_constraints(snapshot: ClusterSnapshot,
-                        capacity_fn: CapacityFn = current_capacity
-                        ) -> list[tuple[str, str]]:
+                        capacity_fn: CapacityFn = current_capacity,
+                        budget=None) -> list[tuple[str, str]]:
     """Return (vm_id, dest_host) moves fixing rule violations, applied to
     ``snapshot`` in place (what-if semantics: callers pass a clone).
 
     Thin adapter over the shared correction kernel; the batched sweep engine
     runs the identical kernel inside its jitted program, so all three
-    engines produce the same moves for the same snapshot.
+    engines produce the same moves for the same snapshot.  ``budget`` is
+    the invocation's shared ``LaunchBudget`` when migration launches are
+    gated (``None`` = ungated).
     """
     if not snapshot.rules:
         return []
     from repro.core.migration_core import MigrationCore  # local: no cycle
-    return MigrationCore().correct(snapshot, capacity_fn)
+    return MigrationCore().correct(snapshot, capacity_fn, budget)

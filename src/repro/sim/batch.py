@@ -33,13 +33,20 @@ Two regimes, chosen at pack time:
     CloudPowerCap, paper Fig. 3), RedivvyPowerCap, BalancePowerCap, the
     greedy migration balancer (``kernels.balance_migrations``), then the
     DPM triggers and Powercap Redistribution with rule-aware evacuation
-    planning.  Migrations are atomic dense-slot remaps (the object plane's
-    ``instant_migrations`` regime); a power-off's deferred cap changes
-    apply when its timer fires, exactly as the action schema's
-    prerequisite edges order them.  Scripted events (host failure,
-    maintenance windows) flip the mask on schedule.  DRS invocations
-    defer while power actions are in flight, so the schedule itself is
-    carried per cell.
+    planning.  Migrations execute as atomic dense-slot remaps when the
+    cells run the object plane's ``instant_migrations`` regime, or -- for
+    gated timed cells (``SimConfig.migration_gated``) -- through a
+    per-cell in-flight table carried as scan state: launches are bounded
+    by per-host migration slots and a cluster bandwidth budget (deferred
+    moves are simply re-scored next invocation), both endpoints burn
+    vMotion overhead during the copy, and entries commit FIFO via the
+    same ``move_slot`` scatter the what-if used, so the planes stay
+    bit-identical (Sec. V's migration cost model).  A power-off's
+    deferred cap changes apply when its timer fires, exactly as the
+    action schema's prerequisite edges order them.  Scripted events (host
+    failure, maintenance windows) flip the mask on schedule.  DRS
+    invocations defer while power actions or migrations are in flight, so
+    the schedule itself is carried per cell.
 
 Placement rules ride along as dense slot columns (built from
 ``repro.drs.arrays.RulesPack``): per-VM affinity-group ids, per-rule
@@ -53,9 +60,11 @@ Within its regime the engine replays the exact protocol of
 float-tolerance payload/energy).
 
 Cells requesting anything the engine cannot replay exactly (per-VM trace
-callables without a declarative spec, migrations under the timed vMotion
-model, mixed time grids) raise :class:`BatchUnsupported` at pack time
-rather than silently freezing the unsupported dimension.
+callables without a declarative spec, *ungated* timed migrations -- whose
+runtime concurrency gate is data-dependent scheduling the scan cannot
+precompute -- or mixed time grids / migration models) raise
+:class:`BatchUnsupported` at pack time rather than silently freezing the
+unsupported dimension.
 
 The S-cells axis shards across devices (``n_devices=``): the packed
 arrays split over a 1-D ``("cells",)`` mesh
@@ -115,6 +124,12 @@ class BatchCell:
     # being nonzero); only meaningful when the batch is built with a
     # ``balancer`` whose ``max_moves > 0``.
     balancer_enabled: bool = True
+    # Optional pre-packed ``TraceBank`` over ``list(snapshot.vms)`` (the
+    # order ``dense_slot_assignment`` enumerates).  The sweep layer packs
+    # each spec's traces once and shares the bank across the policies and
+    # pad buckets that reuse them -- host-side packing dominated the
+    # end-to-end sweep wall before this.  ``None`` packs from ``traces``.
+    trace_bank: Optional[TraceBank] = None
 
 
 class _StaticSpec(NamedTuple):
@@ -137,6 +152,17 @@ class _StaticSpec(NamedTuple):
     migration: bool = False                  # correction/balancer live
     rules: kernels.RulesMeta = kernels.RulesMeta()
     balancer: kernels.MigrationParams = kernels.MigrationParams(max_moves=0)
+    # Timed-vMotion regime: migrations live in a per-cell in-flight table
+    # carried as scan state (``mig_table`` rows), launches are gated by
+    # ``limits`` (the batch twin of ``SimConfig.migration_gated``), and
+    # both endpoints burn ``vmotion_overhead_mhz`` until the copy at
+    # ``vmotion_rate_mb_s`` commits.  ``limits`` also applies to gated
+    # *instant* grids (launch bounding without the copy window).
+    timed: bool = False
+    mig_table: int = 1
+    limits: kernels.MigrationLimits = kernels.MigrationLimits()
+    vmotion_rate_mb_s: float = 128.0
+    vmotion_overhead_mhz: float = 1500.0
     # Allocation-kernel executor captured at pack time ("jax" or
     # "jax-pallas"): part of the compile key, and re-pinned around the
     # program run so trace-time dispatch cannot drift if the process-wide
@@ -220,7 +246,7 @@ def _drs_schedule(cfg: SimConfig) -> tuple[np.ndarray, np.ndarray]:
 # (extends the kernel layer's pads with the trace/tag columns; "bps" needs
 # an array pattern and is added per-program).
 _SLOT_PAD = dict(kernels.SLOT_PAD, period=np.inf, cpu_vals=0.0,
-                 mem_vals=0.0, tag_masks=False)
+                 mem_vals=0.0, tag_masks=False, vm=-1)
 
 
 def _build_program(static: _StaticSpec):
@@ -258,9 +284,15 @@ def _build_program(static: _StaticSpec):
 
     def make_deliver(a):
         def deliver(hosts, caps, on, active, weights, reservation, limit,
-                    tag_masks, cpu, mem):
+                    tag_masks, cpu, mem, overhead=None):
             host_mem = jnp.where(on, a["host_mem"], 0.0)
             managed = kernels.managed_capacity(jnp, hosts, caps)
+            if overhead is not None:
+                # In-flight vMotions burn endpoint CPU: delivery capacity
+                # shrinks, and the burned cycles still count toward Eq. 1
+                # utilization below (they never exceed managed capacity,
+                # so the object plane's clip at 1.0 stays a no-op).
+                managed = jnp.maximum(managed - overhead, 0.0)
             dem = jnp.where(active, jnp.minimum(cpu, limit), 0.0)
             floors = jnp.where(active, jnp.minimum(reservation, dem), 0.0)
             alloc = waterfill_dense(jnp, be.fori, managed, floors, dem,
@@ -271,6 +303,8 @@ def _build_program(static: _StaticSpec):
             mem_deliv = jnp.minimum(mem_dem_h, host_mem)
             # Eq. 1 power, utilization measured against peak capacity.
             util = delivered_h / a["cap_peak"]
+            if overhead is not None:
+                util = (delivered_h + overhead) / a["cap_peak"]
             power = kernels.power_consumed(jnp, hosts, util)
             tick = {
                 "cpu_payload_mhz_s": jnp.sum(alloc, axis=(-1, -2)),
@@ -373,9 +407,10 @@ def _build_program(static: _StaticSpec):
                           if k in a)
         slot_keys = ("occ", "reservation", "limit", "weights",
                      "migratable", "period", "bps", "cpu_vals", "mem_vals",
-                     "tag_masks") + rule_keys
+                     "tag_masks", "vm") + rule_keys
         pads = dict(_SLOT_PAD, bps=jnp.where(
             jnp.arange(a["bps"].shape[-1]) == 0, 0.0, jnp.inf))
+        M = static.mig_table                 # in-flight table rows (timed)
 
         def hosts_of(on):
             return kernels.HostCols(on, a["idle"], a["peak"], a["cap_peak"],
@@ -384,18 +419,43 @@ def _build_program(static: _StaticSpec):
         def gather_host(col, idx):
             return jnp.take_along_axis(col, idx[..., None], axis=-1)[..., 0]
 
+        def host_sum_vm_order(vals, act, vm):
+            # Per-host sum with addends in ascending global-VM-index order,
+            # matching the object plane's ``np.bincount`` reduction bit for
+            # bit.  A plain slot-axis ``sum`` adds in slot order, which
+            # stops agreeing once a migration lands in a first-free slot;
+            # on near-ties (BalancePowerCap equalizes utilizations by
+            # construction) the one-ULP difference flips argmin-style
+            # decisions like the DPM evacuation victim.  Sorting each host
+            # row by VM index (empty slots last) and accumulating
+            # left-to-right restores the exact add order; the trailing
+            # +0.0 terms cannot perturb a non-negative partial sum.
+            key = jnp.where(act, vm, jnp.iinfo(jnp.int64).max)
+            ordr = jnp.argsort(key, axis=-1)
+            sv = jnp.take_along_axis(jnp.where(act, vals, 0.0), ordr,
+                                     axis=-1)
+            return be.fori(sv.shape[-1], lambda j, acc: acc + sv[..., j],
+                           jnp.zeros(sv.shape[:-1]))
+
         # ---------------------------------------------------- invocation
         def invocation(c, can, t):
             # Demands at t in the pre-invocation slot layout; they ride in
             # the working bundle so migrations move them with their VM
             # (delivery re-evaluates from the post-move slots).
             cpu, mem = demands(t, trace=c["slots"])
-            on = c["on"]
+            mem_pre = mem                  # pre-invocation layout, for the
+            on = c["on"]                   # timed duration replay below
             hosts = hosts_of(on)
             caps = c["caps"]
             work = dict(c["slots"], cpu=cpu, mem=mem)
             vmot = jnp.zeros(S, dtype=jnp.int32)
             mig_pressure = jnp.zeros(S, dtype=bool)
+            # Per-invocation launch ledger, shared by correction and the
+            # balancer (the batch twin of ``LaunchBudget``); the kernels
+            # seed it with zeros on first use when gating is live.
+            launch = None
+            corr_moves = bal_moves = None
+            n_corr = n_bal = None
 
             # Phase 1a: constraint correction under the injected capacity
             # view -- fundable capacity (reserved-floor caps plus the whole
@@ -417,12 +477,14 @@ def _build_program(static: _StaticSpec):
                     a["enabled"][:, None], fundable,
                     kernels.managed_capacity(jnp, hosts, caps))
                 cap_view = jnp.where(on, cap_view, 0.0)
-                work, _, n_corr, prs = kernels.correct_constraints_slots(
-                    be, hosts, cap_view, work, host_mem_spec, static.rules,
-                    can,
-                    jnp.full((S, max(static.rules.move_bound, 1), 3), -1,
-                             dtype=jnp.int64),
-                    jnp.zeros(S, dtype=jnp.int64), pads=pads)
+                work, corr_moves, n_corr, prs, launch = \
+                    kernels.correct_constraints_slots(
+                        be, hosts, cap_view, work, host_mem_spec,
+                        static.rules, can,
+                        jnp.full((S, max(static.rules.move_bound, 1), 3),
+                                 -1, dtype=jnp.int64),
+                        jnp.zeros(S, dtype=jnp.int64), pads=pads,
+                        limits=static.limits, launch=launch)
                 vmot = vmot + n_corr.astype(jnp.int32)
                 mig_pressure = mig_pressure | prs
 
@@ -463,13 +525,15 @@ def _build_program(static: _StaticSpec):
             # (DRS's hill-climb; runs for every policy, like the object
             # plane's ManagerCore).
             if static.migration and static.balancer.max_moves > 0:
-                work, _, n_bal, prs = kernels.balance_migrations(
-                    be, hosts, caps2, work, host_mem_spec, static.balancer,
-                    static.rules, can & a["bal_on"],
-                    jnp.full((S, static.balancer.max_moves, 3), -1,
-                             dtype=jnp.int64),
-                    jnp.zeros(S, dtype=jnp.int64), pads=pads,
-                    iters=kernels.MIGRATION_WATERFILL_ITERS)
+                work, bal_moves, n_bal, prs, launch = \
+                    kernels.balance_migrations(
+                        be, hosts, caps2, work, host_mem_spec,
+                        static.balancer, static.rules, can & a["bal_on"],
+                        jnp.full((S, static.balancer.max_moves, 3), -1,
+                                 dtype=jnp.int64),
+                        jnp.zeros(S, dtype=jnp.int64), pads=pads,
+                        iters=kernels.MIGRATION_WATERFILL_ITERS,
+                        limits=static.limits, launch=launch)
                 vmot = vmot + n_bal.astype(jnp.int32)
                 mig_pressure = mig_pressure | prs
                 act3 = work["occ"] & on[..., None]
@@ -483,8 +547,8 @@ def _build_program(static: _StaticSpec):
             cpu = work["cpu"]
             mem = work["mem"]
             eff_slot = jnp.where(act3, jnp.clip(cpu, res, lim), 0.0)
-            eff_h = jnp.sum(eff_slot, axis=-1)
-            mem_h = jnp.sum(jnp.where(act3, mem, 0.0), axis=-1)
+            eff_h = host_sum_vm_order(eff_slot, act3, work["vm"])
+            mem_h = host_sum_vm_order(mem, act3, work["vm"])
             cpu_util, mem_util = kernels.host_utilizations(
                 jnp, hosts, caps2, eff_h, mem_h, host_mem_spec)
             hot_any = jnp.any(kernels.dpm_hot_mask(
@@ -559,19 +623,108 @@ def _build_program(static: _StaticSpec):
                                  0).astype(jnp.int32)
             pend_cnt = jnp.where(do_off, pend_cnt, c["pend_cnt"])
             poff_idx = jnp.where(do_off, victim, c["poff_idx"])
-            poff_end = jnp.where(do_off, t + static.power_off_latency_s,
-                                 c["poff_end"])
+            if static.timed:
+                # ---- Timed regime: the what-if layout above only shaped
+                # *decisions*.  The carry keeps the pre-invocation slots;
+                # every emitted move is appended to the in-flight table and
+                # commits against the live layout on its vMotion schedule
+                # (step phase 2b), replaying the identical ``move_slot``
+                # sequence -- first-free placement makes the trajectories
+                # coincide, so the planes stay bit-identical.
+                #
+                # Durations replay the move sequence on a scratch
+                # ``(occ, mem)`` copy so chained moves read the memory
+                # footprint that travelled with their VM; each entry's
+                # stored end is the running max so far (FIFO: a migration
+                # cannot complete before those emitted ahead of it, the
+                # object plane's ``_complete_actions`` drain).  ``idx``
+                # tracks which entry last touched a slot so chained
+                # launches record their predecessor: the endpoint-overhead
+                # charge follows the VM's *current* host while earlier
+                # chain legs are still in flight (``vm.host_id`` in the
+                # object plane).
+                k_idx = jnp.arange(M)
+                scratch = {"occ": c["slots"]["occ"], "mem": mem_pre,
+                           "idx": jnp.full((S, H, J), -1, dtype=jnp.int64)}
+                spads = {"occ": False, "mem": 0.0, "idx": -1}
+                tb = (scratch, c["mig_src"], c["mig_j"], c["mig_dst"],
+                      c["mig_end"], c["mig_prev"],
+                      jnp.zeros(S, dtype=jnp.int64),     # append cursor
+                      jnp.full(S, -jnp.inf))             # FIFO running max
+
+                def replay(n_k, take, tb):
+                    def body(k, tb):
+                        (sc, msrc, mj, mdst, mend, mprev, cur, eff) = tb
+                        do, src, j, dst = take(k)
+                        si = jnp.clip(src, 0, H - 1)
+                        ji = jnp.clip(j, 0, J - 1)
+                        mem_v = sc["mem"][s_idx, si, ji]
+                        prev_v = sc["idx"][s_idx, si, ji]
+                        dur = jnp.maximum(
+                            jnp.maximum(mem_v, 64.0)
+                            / static.vmotion_rate_mb_s, dt)
+                        eff = jnp.where(do, jnp.maximum(eff, t + dur), eff)
+                        at = do[:, None] & (k_idx[None, :] == cur[:, None])
+                        msrc = jnp.where(at, src[:, None], msrc)
+                        mj = jnp.where(at, j[:, None], mj)
+                        mdst = jnp.where(at, dst[:, None], mdst)
+                        mend = jnp.where(at, eff[:, None], mend)
+                        mprev = jnp.where(at, prev_v[:, None], mprev)
+                        sc = dict(sc, idx=sc["idx"].at[s_idx, si, ji].set(
+                            jnp.where(do, cur, prev_v)))
+                        sc, _ = kernels.move_slot(jnp, sc, do, src, j, dst,
+                                                  spads)
+                        cur = cur + do.astype(cur.dtype)
+                        return (sc, msrc, mj, mdst, mend, mprev, cur, eff)
+                    return be.fori(n_k, body, tb)
+
+                if corr_moves is not None:
+                    tb = replay(corr_moves.shape[1], lambda k: (
+                        k < n_corr, corr_moves[:, k, 0],
+                        corr_moves[:, k, 1], corr_moves[:, k, 2]), tb)
+                if bal_moves is not None:
+                    tb = replay(bal_moves.shape[1], lambda k: (
+                        k < n_bal, bal_moves[:, k, 0],
+                        bal_moves[:, k, 1], bal_moves[:, k, 2]), tb)
+                tb = replay(J, lambda k: (
+                    do_off & (dests[:, k] >= 0), victim, order[:, k],
+                    dests[:, k]), tb)
+                _, mig_src, mig_j, mig_dst, mig_end, mig_prev, _, _ = tb
+
+                # A power-off waits for its evacuation entries to commit
+                # (its prerequisite edges); evacuations are appended last
+                # and ends are FIFO-monotone, so "last evacuation done"
+                # is exactly "table drained".  No evacuees => the timer
+                # starts now, even with manager moves still in flight.
+                wait = do_off & (n_evac > 0)
+                poff_end = jnp.where(do_off & ~wait,
+                                     t + static.power_off_latency_s,
+                                     c["poff_end"])
+                poff_wait = jnp.where(do_off, wait, c["poff_wait"])
+            else:
+                poff_end = jnp.where(do_off, t + static.power_off_latency_s,
+                                     c["poff_end"])
 
             c = dict(c, caps=caps3,
-                     slots={k: work[k] for k in slot_keys},
+                     slots=(c["slots"] if static.timed
+                            else {k: work[k] for k in slot_keys}),
                      pon_idx=pon_idx,
                      pon_end=pon_end, poff_idx=poff_idx, poff_end=poff_end,
                      pend_caps=pend_caps, pend_mask=pend_mask,
                      pend_cnt=pend_cnt,
                      n_changes=c["n_changes"] + changes.astype(jnp.int32),
-                     vmotions=c["vmotions"] + vmot,
+                     # Timed cells count vMotions at commit time (the
+                     # object plane counts at completion); all launches
+                     # eventually commit -- transfers are oblivious to
+                     # endpoint power flips -- so totals agree.
+                     vmotions=(c["vmotions"] if static.timed
+                               else c["vmotions"] + vmot),
                      slot_pressure=c["slot_pressure"] | mig_pressure
                      | (maybe_off & pressure))
+            if static.timed:
+                c = dict(c, mig_src=mig_src, mig_j=mig_j, mig_dst=mig_dst,
+                         mig_end=mig_end, mig_prev=mig_prev,
+                         poff_wait=poff_wait)
             return c
 
         def _apply_remap(work, move, victim, order, dests):
@@ -627,6 +780,10 @@ def _build_program(static: _StaticSpec):
             on = on | (pon_fire[:, None]
                        & (h_idx[None, :] == c["pon_idx"][..., None]))
             poff_fire = (c["poff_idx"] >= 0) & (t >= c["poff_end"])
+            if static.timed:
+                # A power-off waiting on its evacuation holds a stale
+                # ``poff_end``; its timer starts when the table drains.
+                poff_fire = poff_fire & ~c["poff_wait"]
             on = on & ~(poff_fire[:, None]
                         & (h_idx[None, :] == c["poff_idx"][..., None]))
             # Apply only the hosts the deferred cap *actions* set (the
@@ -645,9 +802,49 @@ def _build_program(static: _StaticSpec):
                 pon_idx=jnp.where(pon_fire, -1, c["pon_idx"]),
                 poff_idx=jnp.where(poff_fire, -1, c["poff_idx"]))
 
+            # 2b. In-flight migrations commit FIFO (timed regime): each
+            # due table entry replays its recorded ``move_slot`` against
+            # the live layout -- in table order from the same base layout
+            # as the invocation's what-if, so landing slots coincide.
+            # Commits are oblivious to endpoint power state (a VM can
+            # land on a host that failed or powered off mid-copy, exactly
+            # like the object plane's ``move_vm``).
+            if static.timed:
+                def commit(cc):
+                    def body(k, st):
+                        slots, msrc, nmig = st
+                        src = cc["mig_src"][:, k]
+                        due = (src >= 0) & (cc["mig_end"][:, k] <= t)
+                        slots, _ = kernels.move_slot(
+                            jnp, slots, due, src, cc["mig_j"][:, k],
+                            cc["mig_dst"][:, k], pads)
+                        msrc = msrc.at[:, k].set(jnp.where(due, -1, src))
+                        return slots, msrc, nmig + due.astype(jnp.int32)
+                    slots, msrc, nmig = be.fori(
+                        M, body, (cc["slots"], cc["mig_src"],
+                                  jnp.zeros(S, dtype=jnp.int32)))
+                    return dict(cc, slots=slots, mig_src=msrc,
+                                vmotions=cc["vmotions"] + nmig)
+
+                c = jax.lax.cond(
+                    jnp.any((c["mig_src"] >= 0) & (c["mig_end"] <= t)),
+                    commit, lambda cc: cc, c)
+                # Evacuation entries committed => the deferred power-off's
+                # prerequisites are met: start its latency timer now
+                # (object plane: ``_complete_actions`` then
+                # ``_start_actions`` in the same tick).
+                drained = ~jnp.any(c["mig_src"] >= 0, axis=-1)
+                start_off = c["poff_wait"] & drained
+                c = dict(c, poff_wait=c["poff_wait"] & ~start_off,
+                         poff_end=jnp.where(
+                             start_off, t + static.power_off_latency_s,
+                             c["poff_end"]))
+
             # 3. Manager invocation on the carried DRS schedule; deferred
             # per cell while its power actions are in flight.
             outstanding = (c["pon_idx"] >= 0) | (c["poff_idx"] >= 0)
+            if static.timed:
+                outstanding = outstanding | ~drained
             can = (t >= c["next_drs"]) & ~outstanding
             c = dict(c, next_drs=jnp.where(
                 can, t + static.drs_period_s,
@@ -664,10 +861,41 @@ def _build_program(static: _StaticSpec):
             on, caps = c["on"], c["caps"]
             hosts = hosts_of(on)
             active = c["slots"]["occ"] & on[..., None]
+            overhead = None
+            if static.timed:
+                # Endpoint vMotion overhead from the (post-invocation)
+                # in-flight table: each entry charges its destination and
+                # its VM's *current* host.  For chained launches that is
+                # the earliest uncommitted leg's source -- commits drain
+                # FIFO, so the committed prefix never interleaves and a
+                # bounded predecessor walk finds it.
+                act_m = c["mig_src"] >= 0
+                eff_src, prev = c["mig_src"], c["mig_prev"]
+
+                def hop(_, st):
+                    eff_src, prev = st
+                    pc = jnp.clip(prev, 0, M - 1)
+                    live = (prev >= 0) & jnp.take_along_axis(act_m, pc,
+                                                             axis=-1)
+                    eff_src = jnp.where(
+                        live,
+                        jnp.take_along_axis(c["mig_src"], pc, axis=-1),
+                        eff_src)
+                    prev = jnp.where(
+                        live,
+                        jnp.take_along_axis(c["mig_prev"], pc, axis=-1),
+                        jnp.full_like(prev, -1))
+                    return eff_src, prev
+
+                eff_src, _ = be.fori(M, hop, (eff_src, prev))
+                ep = ((eff_src[..., None] == h_idx[None, None, :])
+                      | (c["mig_dst"][..., None] == h_idx[None, None, :]))
+                overhead = static.vmotion_overhead_mhz * jnp.sum(
+                    act_m[..., None] & ep, axis=1)
             tick, tp, td, mem_dem_h = deliver(
                 hosts, caps, on, active, c["slots"]["weights"],
                 c["slots"]["reservation"], c["slots"]["limit"],
-                c["slots"]["tag_masks"], cpu, mem)
+                c["slots"]["tag_masks"], cpu, mem, overhead=overhead)
 
             # Budget invariant: powered-on caps plus the cap of a host whose
             # power-on is pending (it holds its grant while joining).
@@ -723,6 +951,14 @@ def _build_program(static: _StaticSpec):
             "over_budget": jnp.full(S, -jnp.inf),
             "slot_pressure": jnp.zeros(S, dtype=bool),
         }
+        if static.timed:
+            init.update({
+                "mig_src": jnp.full((S, M), -1, dtype=jnp.int64),
+                "mig_j": jnp.full((S, M), -1, dtype=jnp.int64),
+                "mig_dst": jnp.full((S, M), -1, dtype=jnp.int64),
+                "mig_prev": jnp.full((S, M), -1, dtype=jnp.int64),
+                "mig_end": jnp.zeros((S, M)),
+                "poff_wait": jnp.zeros(S, dtype=bool)})
         xs = (a["ts"], a["win_mask"])
         c, _ = jax.lax.scan(step, init, xs)
         return {"acc": c["acc"], "win": c["win"],
@@ -859,35 +1095,63 @@ class BatchedSimulator:
                                and any(c.dpm_enabled for c in cells)))
         self._dynamic = self._churn or self._migration
         self._validate()
+        # Timed-vMotion regime: the migration-capable cells run the copy
+        # window + FIFO-commit model (gated launches, endpoint overhead)
+        # instead of atomic remaps.
+        self._timed = (self._mig_ref is not None
+                       and not self._mig_ref.instant_migrations)
         self._pack(balance or kernels.BalanceParams(),
                    dpm or kernels.DPMParams(), waterfill_iters, slot_slack)
 
     # ---------------------------------------------------------- validation
     @staticmethod
-    def _cell_reason(c: BatchCell, ref: SimConfig, churn: bool,
+    def _mig_capable(c: BatchCell,
+                     balancer: kernels.MigrationParams) -> bool:
+        """Whether this cell can actually move a VM -- and therefore cares
+        about the migration execution model (instant vs timed vMotion)."""
+        return bool(c.dpm_enabled
+                    or (balancer.max_moves > 0 and c.balancer_enabled)
+                    or (c.snapshot.rules
+                        and rules_mod.all_violations(c.snapshot)))
+
+    @classmethod
+    def _cell_reason(cls, c: BatchCell, ref: SimConfig, churn: bool,
                      balancer: kernels.MigrationParams,
-                     check_traces: bool = False) -> Optional[str]:
+                     check_traces: bool = False,
+                     ref_mig: Optional[SimConfig] = None) -> Optional[str]:
         """Why this cell cannot join a batch anchored on ``ref`` (None if
-        it can)."""
+        it can).  ``ref_mig`` is the migration-model anchor: the config of
+        the first migration-capable cell already admitted (the model is
+        compiled into the program, so all such cells must agree on it)."""
         same = (c.config.duration_s == ref.duration_s
                 and c.config.tick_s == ref.tick_s
                 and c.config.drs_period_s == ref.drs_period_s
                 and c.config.drs_first_at_s == ref.drs_first_at_s)
         if not same:
             return "disagrees on the shared time grid"
-        if c.dpm_enabled and not c.config.instant_migrations:
-            return ("DPM in the batched engine models evacuation as an "
-                    "atomic slot remap; set config.instant_migrations=True "
-                    "(and use the same on the reference engine) or run it "
-                    "on the vector engine")
-        can_move = ((balancer.max_moves > 0 and c.balancer_enabled)
-                    or (c.snapshot.rules
-                        and rules_mod.all_violations(c.snapshot)))
-        if can_move and not c.config.instant_migrations:
-            return ("migrations in the batched engine are atomic slot "
-                    "remaps; set config.instant_migrations=True (and use "
-                    "the same on the reference engine) or run it on the "
-                    "vector engine")
+        if cls._mig_capable(c, balancer):
+            if (not c.config.instant_migrations
+                    and not c.config.migration_gated):
+                return ("timed migrations in the batched engine need "
+                        "launch gating (set migration_slots_per_host "
+                        "and/or migration_bandwidth, and use the same on "
+                        "the reference engine); ungated timed cells run "
+                        "on the vector engine")
+            if ref_mig is not None:
+                mine = (c.config.instant_migrations,
+                        c.config.vmotion_rate_mb_s,
+                        c.config.vmotion_overhead_mhz,
+                        c.config.migration_slots_per_host,
+                        c.config.migration_bandwidth)
+                want = (ref_mig.instant_migrations,
+                        ref_mig.vmotion_rate_mb_s,
+                        ref_mig.vmotion_overhead_mhz,
+                        ref_mig.migration_slots_per_host,
+                        ref_mig.migration_bandwidth)
+                if mine != want:
+                    return ("disagrees on the migration execution model "
+                            "(instant/timed, vMotion rate/overhead, and "
+                            "launch gates are shared across a batch)")
         if churn:
             same = (c.config.power_on_latency_s == ref.power_on_latency_s
                     and c.config.power_off_latency_s
@@ -899,8 +1163,10 @@ class BatchedSimulator:
             if host_id not in c.snapshot.hosts:
                 return f"power event at t={t} targets unknown host {host_id!r}"
         if check_traces:
-            bank = TraceBank.from_traces(c.traces,
-                                         list(c.snapshot.vms))
+            bank = c.trace_bank
+            if bank is None:
+                bank = TraceBank.from_traces(c.traces,
+                                             list(c.snapshot.vms))
             if bank.fallback:
                 return "traces without a declarative spec cannot be batched"
         return None
@@ -916,12 +1182,18 @@ class BatchedSimulator:
         churn = any(c.dpm_enabled or c.config.power_events for c in cells)
         out: dict[str, str] = {}
         ref: Optional[SimConfig] = None
+        ref_mig: Optional[SimConfig] = None
         for c in cells:
+            capable = cls._mig_capable(c, balancer)
             reason = cls._cell_reason(c, ref or c.config, churn, balancer,
-                                      check_traces=True)
-            if reason is None and ref is None:
-                ref = c.config
-            if reason is not None:
+                                      check_traces=True,
+                                      ref_mig=ref_mig if capable else None)
+            if reason is None:
+                if ref is None:
+                    ref = c.config
+                if capable and ref_mig is None:
+                    ref_mig = c.config
+            else:
                 out[c.name] = reason
         return out
 
@@ -929,11 +1201,19 @@ class BatchedSimulator:
         """Reject regimes the jitted program cannot replay exactly, loudly
         (the alternative -- freezing the unsupported dimension -- produces
         plausible-looking wrong results)."""
+        ref_mig: Optional[SimConfig] = None
         for c in self.cells:
+            capable = self._mig_capable(c, self._balancer)
             reason = self._cell_reason(c, self.config, self._churn,
-                                       self._balancer)
+                                       self._balancer,
+                                       ref_mig=ref_mig if capable else None)
             if reason is not None:
                 raise BatchUnsupported(f"cell {c.name!r}: {reason}")
+            if capable and ref_mig is None:
+                ref_mig = c.config
+        # Migration-model anchor: the config every migration-capable cell
+        # agreed with (None when nothing in the grid can move a VM).
+        self._mig_ref = ref_mig
 
     # ------------------------------------------------------------- packing
     def _pack(self, balance: kernels.BalanceParams,
@@ -961,7 +1241,11 @@ class BatchedSimulator:
             vms, order, hj, slot, counts = dense_slot_assignment(snap, H)
             vm_ids = [v.vm_id for v in vms]
 
-            bank = TraceBank.from_traces(c.traces, vm_ids)
+            # ``trace_bank`` rows index ``list(snap.vms)`` -- the same
+            # order ``dense_slot_assignment`` returned in ``vms``.
+            bank = c.trace_bank
+            if bank is None:
+                bank = TraceBank.from_traces(c.traces, vm_ids)
             if bank.fallback:
                 bad = [vm_ids[r] for r, _ in bank.fallback]
                 raise BatchUnsupported(
@@ -1007,6 +1291,10 @@ class BatchedSimulator:
             "dpm": np.zeros(S, dtype=bool),
             "bal_on": np.zeros(S, dtype=bool),
             "occ": np.zeros((S, H, J), dtype=bool),
+            # Global VM index (the cell's ArrayView order) of each slot's
+            # resident, -1 when empty: host reductions that must match the
+            # object plane's bincount add in this order, not slot order.
+            "vm": np.full((S, H, J), -1, dtype=np.int64),
             "reservation": np.zeros((S, H, J)),
             "limit": np.full((S, H, J), np.inf),
             "weights": np.full((S, H, J), 1e-12),
@@ -1048,6 +1336,7 @@ class BatchedSimulator:
             n = len(vms)
             res = np.array([v.reservation for v in vms])
             a["occ"][i, hj, slot] = True
+            a["vm"][i, hj, slot] = order
             a["reservation"][i, hj, slot] = res[order]
             a["limit"][i, hj, slot] = np.array([v.limit for v in vms])[order]
             a["weights"][i, hj, slot] = np.maximum(
@@ -1106,6 +1395,29 @@ class BatchedSimulator:
                 a["win_mask"][:, i] = (w0 <= ts) & (ts < w1)
         self._arrays = a
         self._tag_names = tag_names
+        # Migration execution model (shared by every migration-capable
+        # cell, enforced by _validate): launch gates apply to gated
+        # instant grids too; the in-flight table sizes to the worst-case
+        # launches of one invocation (correction + balancer, capped by
+        # the cluster bandwidth gate, plus a full evacuation).
+        limits = kernels.MigrationLimits()
+        rate, ovh, mig_table = 128.0, 1500.0, 1
+        if self._mig_ref is not None:
+            limits = kernels.MigrationLimits(
+                slots_per_host=self._mig_ref.migration_slots_per_host,
+                bandwidth=self._mig_ref.migration_bandwidth)
+            rate = self._mig_ref.vmotion_rate_mb_s
+            ovh = self._mig_ref.vmotion_overhead_mhz
+        if self._timed:
+            corr_b = (rmeta.move_bound
+                      if self._migration and rmeta.any else 0)
+            bal_b = (self._balancer.max_moves
+                     if self._migration and self._balancer.max_moves > 0
+                     else 0)
+            mgr_b = corr_b + bal_b
+            if limits.bandwidth is not None:
+                mgr_b = min(mgr_b, limits.bandwidth)
+            mig_table = max(mgr_b + J, 1)
         self._static = _StaticSpec(
             n_cells=S, n_hosts=H, n_slots=J, n_tags=G, n_events=E,
             tick_s=self.config.tick_s, waterfill_iters=waterfill_iters,
@@ -1117,6 +1429,8 @@ class BatchedSimulator:
             migration=self._migration,
             rules=rmeta if self._migration else kernels.RulesMeta(),
             balancer=self._balancer,
+            timed=self._timed, mig_table=mig_table, limits=limits,
+            vmotion_rate_mb_s=rate, vmotion_overhead_mhz=ovh,
             executor=backend_mod.executor_name())
         self._ticks = T
 

@@ -46,6 +46,32 @@ class SimConfig:
     # emitted and no budget is redistributed until the next DRS invocation
     # reacts to the new powered-on capacity.
     power_events: tuple = ()
+    # Per-invocation migration-launch gates (None = ungated, 0 = none):
+    # a host may be an endpoint of at most migration_slots_per_host
+    # correction/balancer launches per manager invocation, and the cluster
+    # at most migration_bandwidth in total.  Gated moves are simply not
+    # emitted -- the manager re-scores them next invocation (cascading
+    # churn).  Evacuations are exempt (power-off is all-or-nothing).  In
+    # the gated regime every emitted migration starts at its invocation
+    # tick (the launch gate replaces the runtime concurrency gate) and
+    # migrations complete in emission order (FIFO), which is what lets the
+    # batched engine replay the protocol as scan state bit-identically.
+    migration_slots_per_host: Optional[int] = None
+    migration_bandwidth: Optional[int] = None
+
+    @property
+    def migration_gated(self) -> bool:
+        return (self.migration_slots_per_host is not None
+                or self.migration_bandwidth is not None)
+
+    @property
+    def migration_limits(self):
+        """The kernel layer's static twin of the launch gates (or None)."""
+        if not self.migration_gated:
+            return None
+        from repro.core.kernels import MigrationLimits
+        return MigrationLimits(slots_per_host=self.migration_slots_per_host,
+                               bandwidth=self.migration_bandwidth)
 
 
 @dataclasses.dataclass
@@ -153,8 +179,21 @@ class Simulator:
 
     # ------------------------------------------------------------------
     def _complete_actions(self, t: float) -> None:
+        # Gated regime: migrations drain FIFO in emission order -- a
+        # migration may not complete before every migration emitted ahead
+        # of it has, so its effective end is the running max of end times.
+        # This is the discipline the batched engine replays as scan state
+        # (commits in table order), keeping the planes bit-identical.
+        fifo = self.config.migration_gated
+        mig_block = False
         for p in self.pending:
-            if p.state != "running" or p.end_time > t:
+            if p.state != "running":
+                continue
+            if p.action.kind == "migrate" and fifo:
+                if mig_block or p.end_time > t:
+                    mig_block = True
+                    continue
+            elif p.end_time > t:
                 continue
             a = p.action
             if a.kind == "migrate":
@@ -208,7 +247,15 @@ class Simulator:
                     p.state = "done"
                     self.done_ids.add(a.action_id)
                     continue
-                if running_migrations >= self.config.max_concurrent_migrations:
+                if (not self.config.migration_gated
+                        and running_migrations
+                        >= self.config.max_concurrent_migrations):
+                    # Ungated regime: runtime concurrency gate.  Gated
+                    # clusters bound concurrency at launch time instead
+                    # (the manager's per-invocation LaunchBudget), so
+                    # every emitted migration starts at its invocation
+                    # tick and completes FIFO -- the deterministic
+                    # schedule the batched engine precomputes.
                     continue
                 p.state = "running"
                 p.end_time = t + self._migration_duration(vm)
@@ -302,7 +349,8 @@ class Simulator:
         """
         result = self.manager.run_invocation(
             self.live.clone(), now=t, low_since=self.low_since,
-            last_config_change=self.last_config_change)
+            last_config_change=self.last_config_change,
+            limits=self.config.migration_limits)
         for a in result.actions:
             self.pending.append(_Pending(a))
         if result.actions:

@@ -6,8 +6,8 @@ spike pattern x host-spec mix x capacity churn x placement rules -- and
 runs each policy on the vectorized engine, reporting throughput
 (ticks/sec) alongside the paper's payload / power metrics.  It feeds the
 ``sweep_scale`` / ``sweep_grid`` / ``sweep_grid_dpm`` /
-``sweep_grid_rules`` / ``sweep_scale_sharded`` benchmark entries
-(``python -m benchmarks.run``).
+``sweep_grid_rules`` / ``sweep_grid_timed`` / ``sweep_scale_sharded``
+benchmark entries (``python -m benchmarks.run``).
 
 Design notes:
   * Migration *search* stays disabled in the cap-only/churn families
@@ -22,8 +22,14 @@ Design notes:
     off, a later burst powers it back on with Powercap Redistribution
     funding the cap), ``maintenance`` (a scripted power-off/power-on
     window), and ``failure`` (a scripted power-off that stays down, with
-    DPM free to bring capacity back).  Churn cells run with instantaneous
-    migrations so all three engines replay the identical protocol.
+    DPM free to bring capacity back).  Those three run with instantaneous
+    migrations; ``timed_churn`` / ``failure_cascade`` rerun the dpm /
+    failure scenarios under the *timed* gated vMotion model (copy windows
+    of at least one tick, both endpoints charged overhead, per-host slot
+    and cluster bandwidth launch limits) with the full migration layer
+    on, so deferred moves cascade across invocations -- the
+    production-realistic churn regime.  All families replay identically
+    on every engine.
   * Scenarios use zero reservations and default shares so admission
     control stays trivial and the sweep isolates powercap behavior.
 """
@@ -59,8 +65,15 @@ SMALL_HOST = HostPowerSpec(
 )
 
 SPIKES = ("flat", "burst", "step", "prime")
-CHURNS = ("none", "dpm", "maintenance", "failure")
+CHURNS = ("none", "dpm", "maintenance", "failure", "timed_churn",
+          "failure_cascade")
 RULESETS = ("none", "violation_burst", "cap_blocked")
+
+#: Launch gating for the timed-vMotion churn families: per-host concurrent
+#: migration slots and a cluster-wide launches-per-invocation budget.
+#: Deferred moves are re-scored at the next invocation (cascading churn).
+TIMED_SLOTS_PER_HOST = 2
+TIMED_BANDWIDTH = 8
 
 #: The migration balancer used by rule-scenario cells, on every engine (the
 #: object manager for vector cells, ``kernels.MigrationParams`` for the
@@ -97,12 +110,22 @@ class SweepSpec:
     @property
     def dpm_enabled(self) -> bool:
         """Churn families where the manager itself drives the lifecycle."""
-        return self.churn in ("dpm", "failure")
+        return self.churn in ("dpm", "failure", "timed_churn",
+                              "failure_cascade")
+
+    @property
+    def timed(self) -> bool:
+        """Families running the timed (gated) vMotion execution model:
+        migrations occupy a copy window, both endpoints burn overhead, and
+        per-host slot / cluster bandwidth limits gate launches."""
+        return self.churn in ("timed_churn", "failure_cascade")
 
     @property
     def migration_enabled(self) -> bool:
-        """Rule families run the migration layer (correction + balancer)."""
-        return self.rules != "none"
+        """Rule families run the migration layer (correction + balancer);
+        the timed churn families always do -- deferred moves re-scored
+        across invocations are the point."""
+        return self.rules != "none" or self.timed
 
 
 def _specs_for(spec: SweepSpec) -> list[HostPowerSpec]:
@@ -166,7 +189,7 @@ def build_sweep(spec: SweepSpec, policy: str
                             host_id=host_id)
         vms.append(vm)
         mem = 2 * 1024.0
-        if spec.churn == "dpm":
+        if spec.churn in ("dpm", "timed_churn"):
             # Valley-then-burst: the middle third idles the cluster into
             # DPM's power-off band; the final third runs hot enough to trip
             # the power-on trigger, so Powercap Redistribution must free a
@@ -238,15 +261,22 @@ def build_sweep(spec: SweepSpec, policy: str
         # One powered-on host leaves for the middle third and returns.
         power_events = ((spec.duration_s / 3.0, on_hosts[0], False),
                         (2.0 * spec.duration_s / 3.0, on_hosts[0], True))
-    elif spec.churn == "failure":
-        # Abrupt capacity loss at mid-run; DPM may repair it.
+    elif spec.churn in ("failure", "failure_cascade"):
+        # Abrupt capacity loss at mid-run; DPM may repair it.  In the
+        # cascade family the repair happens under timed gated migrations,
+        # so the rebalancing churn spreads across invocations.
         power_events = ((spec.duration_s / 2.0, on_hosts[0], False),)
     cfg = SimConfig(duration_s=spec.duration_s, tick_s=spec.tick_s,
                     drs_period_s=spec.drs_period_s,
                     drs_first_at_s=spec.drs_period_s,
                     record_timeline=False,
-                    instant_migrations=(spec.dpm_enabled
-                                        or spec.migration_enabled),
+                    instant_migrations=((spec.dpm_enabled
+                                         or spec.migration_enabled)
+                                        and not spec.timed),
+                    migration_slots_per_host=(TIMED_SLOTS_PER_HOST
+                                              if spec.timed else None),
+                    migration_bandwidth=(TIMED_BANDWIDTH
+                                         if spec.timed else None),
                     power_events=power_events)
     return snap, traces, cfg
 
@@ -431,18 +461,48 @@ def _run_buckets(cells, keys, n_devices: Optional[int] = None,
     return flat
 
 
+def _same_trace_specs(a: dict, b: dict, vm_ids: Sequence[str]) -> bool:
+    """True when two trace dicts compile to the identical ``TraceBank``:
+    every VM traced in both with structurally equal declarative specs
+    (``TraceSpec`` is a frozen dataclass).  Hand-written callables have no
+    spec and are never considered shareable."""
+    for vid in vm_ids:
+        sa = getattr(a.get(vid), "spec", None)
+        sb = getattr(b.get(vid), "spec", None)
+        if sa is None or sa != sb:
+            return False
+    return True
+
+
 def _build_batch_cells(specs: Sequence[SweepSpec],
                        policies: Sequence[str]):
+    """Materialize the grid's cells, packing each spec's ``TraceBank`` once.
+
+    Policies of one spec usually share identical traces (`cpc`/`static`
+    always do; `statichigh` differs only when the trace draw depends on the
+    powered-on host count), so the bank -- the per-VM step-function
+    compilation that dominated per-cell host-side packing -- is built for
+    the first policy and reused wherever the specs compare equal, across
+    policies and whatever pad bucket the cell later lands in.
+    """
     from repro.sim.batch import BatchCell
+    from repro.sim.workloads import TraceBank
     cells, keys = [], []
     for spec in specs:
+        bank, bank_traces = None, None
         for p in policies:
             snap, traces, cfg = build_sweep(spec, p)
+            vm_ids = list(snap.vms)
+            if (bank is None or bank.vm_order != vm_ids
+                    or not _same_trace_specs(bank_traces, traces, vm_ids)):
+                bank = TraceBank.from_traces(traces, vm_ids)
+                bank_traces = traces
             cells.append(BatchCell(
                 name=f"{spec.name}/{p}", snapshot=snap, traces=traces,
                 config=cfg, powercap_enabled=(p == "cpc"),
                 dpm_enabled=spec.dpm_enabled,
-                balancer_enabled=spec.migration_enabled))
+                balancer_enabled=spec.migration_enabled,
+                trace_bank=bank))
             keys.append((spec, p))
     return cells, keys
 

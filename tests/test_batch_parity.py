@@ -236,10 +236,13 @@ def test_churn_event_boot_during_pending_power_off_parity():
             refs[policy].final.hosts["spare"].power_cap, rtol=1e-9)
 
 
-def test_dpm_cell_requires_instant_migrations():
+def test_dpm_cell_timed_requires_launch_gating():
+    """Timed migrations batch fine, but only under the gated launch
+    protocol -- an ungated timed cell (no slot or bandwidth limits) is
+    rejected loudly so it falls back to the vector engine."""
     snap, traces, cfg = _churn_build()
     cfg.instant_migrations = False
-    with pytest.raises(BatchUnsupported, match="instant_migrations"):
+    with pytest.raises(BatchUnsupported, match="launch gating"):
         BatchedSimulator([BatchCell("a", snap, traces, cfg,
                                     dpm_enabled=True)])
 

@@ -13,6 +13,8 @@ budget).  Also covers the dense rule encoding (``RulesPack``) and the
 per-host-sum cache behind the O(1) fit check.
 """
 
+import dataclasses
+
 import numpy as np
 import pytest
 
@@ -220,18 +222,140 @@ def test_final_placement_parity_via_object_adapter():
     assert not rules_mod.all_violations(work)
 
 
-def test_migration_requires_instant_migrations():
-    """A cell that can migrate under the timed vMotion model is rejected
-    loudly rather than silently diverging."""
+def _timed(build, slots=2, bw=None):
+    """Wrap a scenario builder in the gated timed-vMotion regime."""
+    def b():
+        snap, traces, cfg = build()
+        cfg = dataclasses.replace(cfg, instant_migrations=False,
+                                  migration_slots_per_host=slots,
+                                  migration_bandwidth=bw)
+        return snap, traces, cfg
+    return b
+
+
+def test_timed_rule_correction_parity():
+    """Gated timed vMotion (copy window >= 2 ticks, per-host launch
+    slots): corrections launch at the invocation, burn endpoint overhead,
+    and commit FIFO -- bit-identical counts and float-tight energy across
+    the vector and batched planes."""
+    refs, res = _pair(_timed(_rules_build, slots=2))
+    _assert_parity(refs, res)
+    for policy in POLICIES:
+        assert refs[policy].acc.vmotions >= 3
+        assert not rules_mod.all_violations(refs[policy].final)
+
+
+def test_timed_balancer_parity_under_bandwidth_gate():
+    """A cluster bandwidth budget of 2 launches per invocation: deferred
+    balancer moves are re-scored next round (cascading churn), identically
+    in both planes."""
+    refs, res = _pair(_timed(_contended_build, slots=None, bw=2))
+    _assert_parity(refs, res)
+    assert refs["static"].acc.vmotions > 0
+
+
+def test_timed_churn_rules_parity():
+    """The acceptance grid: DPM churn + placement rules + timed gated
+    migrations (duration 16 s = 2 ticks, 2 launch slots per host) runs on
+    the compiled path with zero fallback cells and exact lifecycle
+    parity."""
+    build = _timed(_churn_rules_build, slots=2)
+    snap, traces, cfg = build()
+    assert BatchedSimulator.unsupported_cells(
+        [BatchCell("probe", snap, traces, cfg, dpm_enabled=True)]) == {}
+    refs, res = _pair(build, max_moves=0, dpm_enabled=True)
+    _assert_parity(refs, res)
+    assert refs["cpc"].acc.power_offs == 1
+    assert refs["cpc"].acc.vmotions == 10
+
+
+def test_timed_zero_slots_blocks_all_launches():
+    """migration_slots_per_host=0 means the manager may launch nothing:
+    violations persist, zero vMotions, and both planes agree (None would
+    mean *ungated*, so the zero edge must stay expressible)."""
+    refs, res = _pair(_timed(_rules_build, slots=0))
+    _assert_parity(refs, res)
+    for policy in POLICIES:
+        assert refs[policy].acc.vmotions == 0
+        assert rules_mod.all_violations(refs[policy].final)
+
+
+def test_timed_evacuation_exempt_from_slot_limits():
+    """Power-off is all-or-nothing: a DPM evacuation launches every
+    evacuee at once even under a 1-slot-per-host gate, so the in-flight
+    count legitimately exceeds the per-host limit while the table
+    drains."""
+    refs, res = _pair(_timed(_churn_rules_build, slots=1), max_moves=0,
+                      dpm_enabled=True)
+    _assert_parity(refs, res)
+    assert refs["cpc"].acc.power_offs == 1
+    assert refs["cpc"].acc.vmotions == 10    # all 10 evacuees moved
+
+
+def _endpoint_failure_build():
+    """Affinity correction whose only admissible move is big -> h1, with
+    h1 scripted to fail at t=310 -- mid-copy for a 16 s vMotion launched
+    at the t=300 invocation."""
+    hosts = [Host("h0", PAPER_HOST, power_cap=320.0),
+             Host("h1", PAPER_HOST, power_cap=320.0)]
+    vms = [
+        VirtualMachine(vm_id="big", reservation=10_000.0, demand=10_000.0,
+                       host_id="h0", mem_demand=2048.0),
+        VirtualMachine(vm_id="filler", reservation=23_000.0,
+                       demand=23_000.0, host_id="h0", mem_demand=512.0),
+        VirtualMachine(vm_id="small", reservation=2_000.0, demand=2_000.0,
+                       host_id="h1", mem_demand=512.0),
+    ]
+    traces = {v.vm_id: workloads.constant(v.demand, v.mem_demand)
+              for v in vms}
+    snap = ClusterSnapshot(hosts, vms, power_budget=640.0,
+                           rules=[AffinityRule(("big", "small"))])
+    cfg = SimConfig(duration_s=600.0, drs_first_at_s=300.0,
+                    record_timeline=False, instant_migrations=False,
+                    migration_slots_per_host=2,
+                    power_events=((310.0, "h1", False),))
+    return snap, traces, cfg
+
+
+def test_timed_destination_powers_off_mid_flight():
+    """Transfers are oblivious to endpoint power flips: the destination
+    fails mid-copy, the migration still commits on schedule, and the VM
+    lands on the powered-off host -- identically in both planes."""
+    snap, traces, cfg = _endpoint_failure_build()
+    mgr = _manager("static", max_moves=0)
+    ref = VectorSimulator(snap, mgr, traces, cfg).run()
+    assert ref.acc.vmotions == 1
+    assert ref.final.vms["big"].host_id == "h1"
+    assert not ref.final.hosts["h1"].powered_on
+
+    snap2, traces2, cfg2 = _endpoint_failure_build()
+    cell = BatchCell("fail", snap2, traces2, cfg2,
+                     powercap_enabled=False, balancer_enabled=False)
+    res = BatchedSimulator([cell], slot_slack=3.0).run()
+    acc = res.accumulators(0)
+    for f in INT_FIELDS:
+        assert getattr(acc, f) == getattr(ref.acc, f), f
+    for f in FLOAT_FIELDS:
+        np.testing.assert_allclose(getattr(acc, f), getattr(ref.acc, f),
+                                   rtol=1e-9, err_msg=f)
+    h1 = list(snap2.hosts).index("h1")
+    assert not res.final_on[0, h1]
+    assert res.final_occ[0, h1].sum() == 2   # small + the landed big
+
+
+def test_ungated_timed_migration_rejected():
+    """Timed migrations without launch gating (the data-dependent runtime
+    concurrency gate) stay on the vector engine, loudly."""
     snap, traces, cfg = _rules_build()
     cfg.instant_migrations = False
-    with pytest.raises(BatchUnsupported, match="instant_migrations"):
+    with pytest.raises(BatchUnsupported, match="launch gating"):
         BatchedSimulator([BatchCell("a", snap, traces, cfg)])
 
 
 def test_unsupported_cells_partition():
-    """The per-cell reason map names exactly the offending cells."""
-    import dataclasses
+    """The per-cell reason map names exactly the offending cells: ungated
+    timed cells, and cells disagreeing with the batch's migration-model
+    anchor."""
     snap1, traces1, cfg1 = _rules_build()
     snap2, traces2, cfg2 = _rules_build()
     cfg2 = dataclasses.replace(cfg2, instant_migrations=False)
@@ -239,7 +363,19 @@ def test_unsupported_cells_partition():
              BatchCell("bad", snap2, traces2, cfg2)]
     reasons = BatchedSimulator.unsupported_cells(cells)
     assert set(reasons) == {"bad"}
-    assert "instant_migrations" in reasons["bad"]
+    assert "launch gating" in reasons["bad"]
+    # A gated timed cell is fine alone but cannot share a program with an
+    # instant-model cell: the execution model is compiled in.
+    snap3, traces3, cfg3 = _rules_build()
+    cfg3 = dataclasses.replace(cfg3, instant_migrations=False,
+                               migration_slots_per_host=2)
+    assert BatchedSimulator.unsupported_cells(
+        [BatchCell("timed", snap3, traces3, cfg3)]) == {}
+    mixed = BatchedSimulator.unsupported_cells(
+        [BatchCell("good", snap1, traces1, cfg1),
+         BatchCell("timed", snap3, traces3, cfg3)])
+    assert set(mixed) == {"timed"}
+    assert "migration execution model" in mixed["timed"]
 
 
 # ------------------------------------------------------- rule encoding

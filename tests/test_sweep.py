@@ -171,6 +171,43 @@ def test_run_sweep_batched_matches_sequential_rules():
     assert migrated                 # the grid exercised the migration layer
 
 
+def test_run_sweep_batched_matches_sequential_timed():
+    """Timed-migration families (gated vMotions with copy windows, slot
+    limits, and a cluster bandwidth budget) run batched with zero fallback
+    cells and reproduce the sequential sweep's action counts and energy
+    bit for bit.  Payload accumulates per-VM delivery in a different
+    reduction order than the object plane's bincount, so it is compared
+    at tight tolerance rather than exactly."""
+    from repro.sim.batch import BatchedSimulator
+    from repro.sim.sweep import _build_batch_cells, _grid_balancer
+
+    specs = scenario_families(sizes=(6,), budgets_per_host_w=(250.0,),
+                              spikes=("burst",), heterogeneous=(False,),
+                              churns=("timed_churn", "failure_cascade"),
+                              rules=("none", "violation_burst"),
+                              duration_s=1200.0, tick_s=10.0)
+    policies = ("cpc", "static")
+    cells, _ = _build_batch_cells(specs, policies)
+    assert BatchedSimulator.unsupported_cells(
+        cells, _grid_balancer(specs)) == {}     # no vector-fallback cliff
+    seq = run_sweep(specs, policies=policies, engine="vector")
+    bat = run_sweep(specs, policies=policies, engine="batch")
+    migrated = churned = False
+    for name in seq:
+        for p in policies:
+            a, b = seq[name][p], bat[name][p]
+            assert (b.cap_changes, b.vmotions, b.power_ons, b.power_offs) \
+                == (a.cap_changes, a.vmotions, a.power_ons,
+                    a.power_offs), (name, p)
+            assert b.energy_j == a.energy_j, (name, p)
+            np.testing.assert_allclose(b.cpu_payload_mhz_s,
+                                       a.cpu_payload_mhz_s, rtol=1e-9)
+            migrated |= a.vmotions > 0
+            churned |= a.power_ons + a.power_offs > 0
+    assert migrated                # timed launches committed via the table
+    assert churned                 # and the DPM lifecycle fired around them
+
+
 def test_run_sweep_batch_fallback_partitions_grid():
     """A grid with cells the batched engine cannot replay exactly raises by
     default; with on_unsupported="fallback" it is *partitioned* -- only the
