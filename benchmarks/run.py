@@ -23,6 +23,13 @@ live in EXPERIMENTS.md.
                           anti-affinity / VM-host violation bursts,
                           Fig.-1a cap-blocked corrections, hill-climb
                           balancing) as ONE program, vs sequential
+  sweep_e2e            -- end-to-end sweep throughput through the
+                          overlapped pipeline: the sweep_grid 32-cell
+                          grid measured from SweepSpec list to merged
+                          results (scenario construction + vectorized
+                          TraceBank packing + AOT dispatch + harvest),
+                          with the compile/pack/run cost split and the
+                          e2e-vs-steady ratio the smoke gate tracks
   sweep_scale_sharded  -- the sharded sweep engine: a 256-cell grid over a
                           1-device vs 8-virtual-device ("cells",) mesh
                           (subprocess with forced host device count), plus
@@ -212,6 +219,61 @@ def sweep_grid():
             f";compile:{compile_wall:.1f}s")
 
 
+def _pipeline_timing():
+    """Summed per-bucket cost split of the most recent batched sweep call
+    (see ``repro.sim.sweep.LAST_BATCH_INFO``)."""
+    from repro.sim.sweep import LAST_BATCH_INFO
+    return {
+        "n_buckets": len(LAST_BATCH_INFO),
+        "compile_s": sum(b["compile_s"] for b in LAST_BATCH_INFO),
+        "pack_s": sum(b["pack_s"] for b in LAST_BATCH_INFO),
+        "run_s": sum(b["run_s"] for b in LAST_BATCH_INFO),
+    }
+
+
+def sweep_e2e():
+    """End-to-end sweep throughput: the overlapped pipeline, whole path.
+
+    Same 32-cell grid as ``sweep_grid``, but the measured wall starts from
+    the ``SweepSpec`` list: scenario construction (table-vectorized trace
+    factories), ``TraceBank`` packing, AOT dispatch, and harvest all
+    inside the clock -- the number a sweep user actually experiences.  A
+    first call warms the AOT executables so the measured pass isolates the
+    pipeline (compile cost is reported separately by ``sweep_grid``).
+    Reports e2e cells/s, steady-state cells/s (device wall only), their
+    ratio -- the machine-portable pipeline-efficiency metric the smoke
+    gate tracks -- and the compile/pack/run split."""
+    from repro.sim.sweep import run_sweep_batched, scenario_families
+    specs = scenario_families(sizes=(100,), budgets_per_host_w=(230.0, 250.0),
+                              spikes=("flat", "burst", "step", "prime"),
+                              heterogeneous=(False, True), duration_s=600.0)
+    policies = ("cpc", "static")
+    n_cells = len(specs) * len(policies)
+
+    run_sweep_batched(specs, policies=policies)     # warm AOT executables
+    t0 = time.perf_counter()
+    run_sweep_batched(specs, policies=policies)
+    e2e_wall = time.perf_counter() - t0
+    timing = _pipeline_timing()
+    e2e_cps = n_cells / e2e_wall
+    steady_cps = n_cells / timing["run_s"]
+    ratio = e2e_cps / steady_cps
+    ARTIFACT["sweep_e2e"] = {
+        "n_cells": n_cells,
+        "n_hosts": 100,
+        "cells_per_s_e2e": e2e_cps,
+        "cells_per_s_steady": steady_cps,
+        "e2e_ratio": ratio,
+        "e2e_wall_s": e2e_wall,
+        "timing": timing,
+    }
+    return (f"{n_cells}cells@100h:e2e:{e2e_cps:.1f}cells/s"
+            f";steady:{steady_cps:.1f}cells/s"
+            f";ratio:{ratio:.2f}"
+            f";pack:{timing['pack_s']:.2f}s"
+            f";run:{timing['run_s']:.2f}s")
+
+
 def sweep_grid_dpm():
     """Capacity churn at grid scale: the host-lifecycle dimension batched.
 
@@ -259,6 +321,7 @@ def sweep_grid_dpm():
                 for r in by_p.values())
     vmo = sum(r.vmotions for by_p in res.values() for r in by_p.values())
     ARTIFACT["sweep_grid_dpm"] = {
+        "timing": _pipeline_timing(),
         "n_cells": n_cells,
         "n_hosts": 100,
         "cells_per_s_batched": batch_cps,
@@ -321,6 +384,7 @@ def sweep_grid_rules():
     caps = sum(r.cap_changes for by_p in res.values()
                for r in by_p.values())
     ARTIFACT["sweep_grid_rules"] = {
+        "timing": _pipeline_timing(),
         "n_cells": n_cells,
         "n_hosts": 100,
         "cells_per_s_batched": batch_cps,
@@ -384,6 +448,7 @@ def sweep_grid_timed():
     poffs = sum(r.power_offs for by_p in res.values()
                 for r in by_p.values())
     ARTIFACT["sweep_grid_timed"] = {
+        "timing": _pipeline_timing(),
         "n_cells": n_cells,
         "n_hosts": 100,
         "cells_per_s_batched": batch_cps,
@@ -501,6 +566,7 @@ BENCHES = [
     ("sweep_grid_dpm", sweep_grid_dpm, True),
     ("sweep_grid_rules", sweep_grid_rules, True),
     ("sweep_grid_timed", sweep_grid_timed, True),
+    ("sweep_e2e", sweep_e2e, True),
     ("sweep_scale_sharded", sweep_scale_sharded, True),
     ("kernel_microbenches", kernel_microbenches, False),
     ("roofline_summary", roofline_summary, False),

@@ -85,9 +85,13 @@ program tracks the NumPy object plane to reduction-order rounding.
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
 import math
+import threading
+import time
+import warnings
 from typing import NamedTuple, Optional, Sequence
 
 import numpy as np
@@ -100,7 +104,7 @@ from repro.drs.arrays import RulesPack, dense_slot_assignment
 from repro.drs.entitlement import waterfill_dense
 from repro.drs.snapshot import ClusterSnapshot
 from repro.sim.cluster import SimConfig
-from repro.sim.metrics import Accumulators
+from repro.sim.metrics import Accumulators, fold_timeseries
 from repro.sim.workloads import DemandTrace, TraceBank
 
 
@@ -168,6 +172,11 @@ class _StaticSpec(NamedTuple):
     # program run so trace-time dispatch cannot drift if the process-wide
     # executor changes between pack() and the first run().
     executor: str = "jax"
+    # Emit the full per-tick metric series as scan outputs instead of only
+    # the reduced in-carry summaries.  The default (False) transfers just
+    # the ``(S,)`` reductions off device; parity tests flip this on and
+    # check the carry fold against ``fold_timeseries`` bit for bit.
+    keep_timeseries: bool = False
 
 
 @dataclasses.dataclass
@@ -193,9 +202,27 @@ class BatchResult:
     final_on: np.ndarray                     # (S, H) power states at the end
     final_occ: np.ndarray                    # (S, H, J) final slot occupancy
     ticks: int
-    wall_s: float = 0.0
+    wall_s: float = 0.0                      # compile_s + run_s of this call
     n_devices: int = 1                       # cells-mesh size the run used
-    compile_s: float = 0.0                   # first-call wall for new shapes
+    # Timing split (PR 9): AOT compile wall for this batch's program shape
+    # (0.0 on a warm in-process cache), host-side packing wall from
+    # ``_pack``, and dispatch-to-harvest device wall.  ``wall_s`` keeps the
+    # old meaning -- the whole ``run()`` call -- so speedup arithmetic in
+    # the benchmarks is unchanged.
+    compile_s: float = 0.0
+    pack_s: float = 0.0
+    run_s: float = 0.0
+    # ``keep_timeseries=True`` only: field -> (T, S) per-tick rates (floats)
+    # and per-tick action counts (ints); ``None`` on the reduced path.
+    timeseries: Optional[dict] = None
+    tick_s: float = 0.0                      # dt the timeseries folds with
+
+    def reduced_timeseries(self) -> dict:
+        """Fold :attr:`timeseries` into run summaries via the carry's exact
+        arithmetic (see :func:`repro.sim.metrics.fold_timeseries`)."""
+        if self.timeseries is None:
+            raise ValueError("run with keep_timeseries=True first")
+        return fold_timeseries(self.timeseries, self.tick_s)
 
     def accumulators(self, i: int) -> Accumulators:
         acc = Accumulators(
@@ -376,7 +403,11 @@ def _build_program(static: _StaticSpec):
             carry = (caps, acc, win, tag_pay + tp * dt, tag_dem + td * dt,
                      n_changes + changes,
                      jnp.maximum(max_total, jnp.sum(caps * on, axis=-1)))
-            return carry, None
+            if not static.keep_timeseries:
+                return carry, None
+            zc = jnp.zeros(S, dtype=jnp.int32)
+            return carry, dict(tick, cap_changes=changes, vmotions=zc,
+                               power_ons=zc, power_offs=zc)
 
         zeros = {k: jnp.zeros(S) for k in FIELDS}
         init = (a["caps0"], dict(zeros), dict(zeros),
@@ -384,16 +415,19 @@ def _build_program(static: _StaticSpec):
                 jnp.zeros(S, dtype=jnp.int32),
                 jnp.sum(a["caps0"] * a["on"], axis=-1))
         xs = (a["ts"], a["drs_mask"], a["win_mask"])
-        (caps, acc, win, tag_pay, tag_dem, n_changes, max_total), _ = (
+        (caps, acc, win, tag_pay, tag_dem, n_changes, max_total), ys = (
             jax.lax.scan(step, init, xs))
         zi = jnp.zeros(S, dtype=jnp.int32)
-        return {"acc": acc, "win": win, "tag_payload": tag_pay,
-                "tag_demand": tag_dem, "cap_changes": n_changes,
-                "vmotions": zi, "power_ons": zi, "power_offs": zi,
-                "max_total_cap": max_total, "over_budget": max_total * 0.0,
-                "final_caps": caps, "final_on": a["on"],
-                "final_occ": a["occ"],
-                "slot_pressure": jnp.zeros(S, dtype=bool)}
+        out = {"acc": acc, "win": win, "tag_payload": tag_pay,
+               "tag_demand": tag_dem, "cap_changes": n_changes,
+               "vmotions": zi, "power_ons": zi, "power_offs": zi,
+               "max_total_cap": max_total, "over_budget": max_total * 0.0,
+               "final_caps": caps, "final_on": a["on"],
+               "final_occ": a["occ"],
+               "slot_pressure": jnp.zeros(S, dtype=bool)}
+        if static.keep_timeseries:
+            out["timeseries"] = ys
+        return out
 
     # ------------------------------------------------------------------
     def build_churn(a):
@@ -746,6 +780,11 @@ def _build_program(static: _StaticSpec):
         # ----------------------------------------------------------- step
         def step(c, x):
             t, in_win = x
+            # Counter values at step entry: the per-tick action counts the
+            # timeseries path emits are end-minus-start deltas, so they sum
+            # (exactly, as ints) back to the carried totals.
+            prev_counts = {k: c[k] for k in ("n_changes", "vmotions",
+                                             "power_ons", "power_offs")}
 
             # 1. Scripted host lifecycle events.  A returning host boots
             # with at most the unallocated budget as its cap (the manager
@@ -926,7 +965,14 @@ def _build_program(static: _StaticSpec):
                 tag_dem=c["tag_dem"] + td * dt,
                 over_budget=jnp.maximum(c["over_budget"],
                                         total - a["budget"]))
-            return c, None
+            if not static.keep_timeseries:
+                return c, None
+            return c, dict(
+                tick,
+                cap_changes=c["n_changes"] - prev_counts["n_changes"],
+                vmotions=c["vmotions"] - prev_counts["vmotions"],
+                power_ons=c["power_ons"] - prev_counts["power_ons"],
+                power_offs=c["power_offs"] - prev_counts["power_offs"])
 
         zeros = {k: jnp.zeros(S) for k in FIELDS}
         zi = jnp.zeros(S, dtype=jnp.int32)
@@ -960,16 +1006,19 @@ def _build_program(static: _StaticSpec):
                 "mig_end": jnp.zeros((S, M)),
                 "poff_wait": jnp.zeros(S, dtype=bool)})
         xs = (a["ts"], a["win_mask"])
-        c, _ = jax.lax.scan(step, init, xs)
-        return {"acc": c["acc"], "win": c["win"],
-                "tag_payload": c["tag_pay"], "tag_demand": c["tag_dem"],
-                "cap_changes": c["n_changes"], "vmotions": c["vmotions"],
-                "power_ons": c["power_ons"], "power_offs": c["power_offs"],
-                "max_total_cap": c["over_budget"],
-                "over_budget": c["over_budget"],
-                "final_caps": c["caps"], "final_on": c["on"],
-                "final_occ": c["slots"]["occ"],
-                "slot_pressure": c["slot_pressure"]}
+        c, ys = jax.lax.scan(step, init, xs)
+        out = {"acc": c["acc"], "win": c["win"],
+               "tag_payload": c["tag_pay"], "tag_demand": c["tag_dem"],
+               "cap_changes": c["n_changes"], "vmotions": c["vmotions"],
+               "power_ons": c["power_ons"], "power_offs": c["power_offs"],
+               "max_total_cap": c["over_budget"],
+               "over_budget": c["over_budget"],
+               "final_caps": c["caps"], "final_on": c["on"],
+               "final_occ": c["slots"]["occ"],
+               "slot_pressure": c["slot_pressure"]}
+        if static.keep_timeseries:
+            out["timeseries"] = ys
+        return out
 
     program = build_churn if static.churn else build_static
     return program
@@ -983,9 +1032,27 @@ def _cells_specs(a, P):
                 else P("cells")) for k in a}
 
 
+def _out_specs(static: _StaticSpec, P):
+    """shard_map output specs: per-cell results split on their leading S
+    axis; the per-tick timeseries (``(T, S)``) splits on axis 1."""
+    specs = {k: P("cells") for k in (
+        "acc", "win", "tag_payload", "tag_demand", "cap_changes",
+        "vmotions", "power_ons", "power_offs", "max_total_cap",
+        "over_budget", "final_caps", "final_on", "final_occ",
+        "slot_pressure")}
+    if static.keep_timeseries:
+        specs["timeseries"] = P(None, "cells")
+    return specs
+
+
 @functools.lru_cache(maxsize=None)
 def _compiled_program(static: _StaticSpec, n_devices: int = 1):
     """Jit (and cache) the whole-grid program.
+
+    The packed input dict is marked for donation: the scan carry aliases
+    the transferred buffers instead of holding both live, cutting peak
+    device memory on the largest cells (inputs re-transfer from the host
+    copy on every call, so repeated ``run()`` stays valid).
 
     With ``n_devices > 1`` the program is wrapped in ``shard_map`` over the
     1-D ``cells`` mesh (``repro.launch.mesh.make_cells_mesh``): ``static``
@@ -999,7 +1066,7 @@ def _compiled_program(static: _StaticSpec, n_devices: int = 1):
     import jax
 
     if n_devices <= 1:
-        return jax.jit(_build_program(static))
+        return jax.jit(_build_program(static), donate_argnums=0)
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
 
@@ -1015,15 +1082,29 @@ def _compiled_program(static: _StaticSpec, n_devices: int = 1):
     def sharded(a):
         return shard_map(program, mesh=mesh,
                          in_specs=(_cells_specs(a, P),),
-                         out_specs=P("cells"), check_rep=False)(a)
+                         out_specs=_out_specs(static, P),
+                         check_rep=False)(a)
 
-    return jax.jit(sharded)
+    return jax.jit(sharded, donate_argnums=0)
 
 
-#: Program shapes that have already compiled in this process: (static,
-#: n_devices, input-shape signature).  ``BatchedSimulator.run`` uses it to
-#: attribute first-call wall time to compilation (``compile_s``).
-_COMPILED_SIGS: set = set()
+#: AOT-compiled executables keyed by (static, n_devices, input-shape
+#: signature): ``BatchedSimulator.compile`` populates it -- concurrently
+#: from the sweep pipeline's worker threads -- and ``run_async`` dispatches
+#: against it without re-tracing.
+_AOT_EXECUTABLES: dict = {}
+_AOT_LOCK = threading.Lock()
+
+
+@contextlib.contextmanager
+def _quiet_donation():
+    """Suppress XLA's "donated buffers were not usable" advisory: shared
+    time-axis inputs (``ts``/``drs_mask``) and sub-word masks have no
+    aliasable output, which is expected, not actionable."""
+    with warnings.catch_warnings():
+        warnings.filterwarnings(
+            "ignore", message="Some donated buffers were not usable")
+        yield
 
 
 class BatchedSimulator:
@@ -1070,12 +1151,14 @@ class BatchedSimulator:
                  balancer: Optional[kernels.MigrationParams] = None,
                  n_devices: Optional[int] = None,
                  pad_hosts: int = 0,
-                 pad_slots: int = 0):
+                 pad_slots: int = 0,
+                 keep_timeseries: bool = False):
         if not cells:
             raise ValueError("no cells")
         self.cells = list(cells)
         self.config = cells[0].config
         self._n_devices = n_devices
+        self._keep_timeseries = bool(keep_timeseries)
         self._pad_hosts = int(pad_hosts)
         self._pad_slots = int(pad_slots)
         self._balancer = balancer or kernels.MigrationParams(max_moves=0)
@@ -1219,6 +1302,7 @@ class BatchedSimulator:
     def _pack(self, balance: kernels.BalanceParams,
               dpm: kernels.DPMParams, waterfill_iters: int,
               slot_slack: float) -> None:
+        t_pack0 = time.perf_counter()
         cells = self.cells
         S = len(cells)
         H = max(max(len(c.snapshot.hosts) for c in cells), self._pad_hosts)
@@ -1431,15 +1515,20 @@ class BatchedSimulator:
             balancer=self._balancer,
             timed=self._timed, mig_table=mig_table, limits=limits,
             vmotion_rate_mb_s=rate, vmotion_overhead_mhz=ovh,
-            executor=backend_mod.executor_name())
+            executor=backend_mod.executor_name(),
+            keep_timeseries=self._keep_timeseries)
         self._ticks = T
+        self._prepared = None
+        self.pack_s = time.perf_counter() - t_pack0
 
     # ------------------------------------------------------------- running
-    def run(self) -> BatchResult:
-        import time
-
+    def _prepare(self):
+        """Resolve the mesh size, pad the cells axis, and compute the AOT
+        cache signature.  Cached after the first call: padding a large grid
+        is not free and ``compile``/``run_async`` both need it."""
+        if self._prepared is not None:
+            return self._prepared
         import jax
-        from jax.experimental import enable_x64
 
         S = self._static.n_cells
         n_dev = (len(jax.devices()) if self._n_devices is None
@@ -1459,20 +1548,70 @@ class BatchedSimulator:
                  for k, v in a.items()}
         sig = (static, n_dev,
                tuple(sorted((k, v.shape) for k, v in a.items())))
-        first = sig not in _COMPILED_SIGS
+        self._prepared = (static, n_dev, a, sig)
+        return self._prepared
 
+    def compile(self) -> float:
+        """Ensure this batch's program shape is AOT-compiled.
+
+        ``jit(...).lower(a).compile()`` lands the executable in
+        :data:`_AOT_EXECUTABLES` keyed by the shape signature (the XLA
+        persistent compile cache still backs the expensive part across
+        processes).  Returns the wall seconds this call spent compiling,
+        0.0 on a warm cache.  Thread-safe: the sweep pipeline fires one
+        ``compile`` per shape class concurrently from its worker pool
+        (``enable_x64`` is thread-local; the executor pin is re-read from
+        the static spec)."""
+        static, n_dev, a, sig = self._prepare()
+        with _AOT_LOCK:
+            if sig in _AOT_EXECUTABLES:
+                return 0.0
+        from jax.experimental import enable_x64
         t0 = time.perf_counter()
-        with enable_x64(), backend_mod.executor_scope(self._static.executor):
-            out = _compiled_program(static, n_dev)(a)
-            out = {k: ({kk: np.asarray(vv)[:S] for kk, vv in v.items()}
-                       if isinstance(v, dict) else np.asarray(v)[:S])
-                   for k, v in out.items()}
-        wall = time.perf_counter() - t0
-        _COMPILED_SIGS.add(sig)
-        # First-call wall for a never-before-seen program shape is dominated
-        # by compilation (trace + XLA); with the persistent compilation
-        # cache warm it collapses to trace + executable load.
-        compile_s = wall if first else 0.0
+        with enable_x64(), \
+                backend_mod.executor_scope(self._static.executor), \
+                _quiet_donation():
+            exe = _compiled_program(static, n_dev).lower(a).compile()
+        with _AOT_LOCK:
+            _AOT_EXECUTABLES[sig] = exe
+        return time.perf_counter() - t0
+
+    def run_async(self) -> "PendingBatch":
+        """Compile (if not already) and dispatch without blocking: jax
+        execution is asynchronous, so this returns once the program is
+        enqueued, letting the caller dispatch further batches (or keep
+        packing) while the device works.  Harvest with
+        :meth:`PendingBatch.result`."""
+        compile_s = self.compile()
+        static, n_dev, a, sig = self._prepare()
+        from jax.experimental import enable_x64
+        t0 = time.perf_counter()
+        with enable_x64(), \
+                backend_mod.executor_scope(self._static.executor), \
+                _quiet_donation():
+            raw = _AOT_EXECUTABLES[sig](a)
+        return PendingBatch(sim=self, raw=raw, dispatch_t0=t0,
+                            compile_s=compile_s, n_devices=n_dev)
+
+    def run(self) -> BatchResult:
+        return self.run_async().result()
+
+    def _harvest(self, raw, dispatch_t0: float, compile_s: float,
+                 n_dev: int) -> BatchResult:
+        """Block on the dispatched outputs, check invariants, and assemble
+        the :class:`BatchResult` (the ``np.asarray`` conversions are the
+        synchronization point)."""
+        S = self._static.n_cells
+        out = {}
+        for k, v in raw.items():
+            if k == "timeseries":
+                # Per-tick series are (T, S): the cells axis is axis 1.
+                out[k] = {kk: np.asarray(vv)[:, :S] for kk, vv in v.items()}
+            elif isinstance(v, dict):
+                out[k] = {kk: np.asarray(vv)[:S] for kk, vv in v.items()}
+            else:
+                out[k] = np.asarray(v)[:S]
+        run_s = time.perf_counter() - dispatch_t0
 
         # Post-hoc invariants, checked in one shot for the whole grid.
         if bool(out["slot_pressure"].any()):
@@ -1511,6 +1650,31 @@ class BatchedSimulator:
             final_on=out["final_on"],
             final_occ=out["final_occ"],
             ticks=self._ticks,
-            wall_s=wall,
+            wall_s=compile_s + run_s,
             n_devices=n_dev,
-            compile_s=compile_s)
+            compile_s=compile_s,
+            pack_s=self.pack_s,
+            run_s=run_s,
+            timeseries=out.get("timeseries"),
+            tick_s=self._static.tick_s)
+
+
+@dataclasses.dataclass
+class PendingBatch:
+    """A dispatched-but-unharvested batch: ``run_async``'s handle.
+
+    ``raw`` holds the program's on-device output tree; ``result()`` blocks
+    until execution finishes and builds the :class:`BatchResult`.  The
+    sweep pipeline holds one of these per bucket so every bucket is in
+    flight before any is harvested.
+    """
+
+    sim: BatchedSimulator
+    raw: dict
+    dispatch_t0: float
+    compile_s: float
+    n_devices: int
+
+    def result(self) -> BatchResult:
+        return self.sim._harvest(self.raw, self.dispatch_t0,
+                                 self.compile_s, self.n_devices)

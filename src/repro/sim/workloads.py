@@ -37,6 +37,62 @@ def _with_spec(fn: DemandTrace, spec: TraceSpec) -> DemandTrace:
     return fn
 
 
+def spec_trace(spec: TraceSpec) -> DemandTrace:
+    """The canonical callable for a declarative spec: the value of the last
+    segment with ``t0 <= t`` (on ``t mod period`` when periodic) -- exactly
+    the semantics :class:`TraceBank` compiles, so the callable and array
+    forms agree at every evaluation point."""
+    segments, period = spec.segments, spec.period
+
+    def trace(t: float) -> tuple[float, float]:
+        if period is not None:
+            t = t % period
+        cpu, mem = segments[0][1], segments[0][2]
+        for t0, c, m in segments:
+            if t >= t0:
+                cpu, mem = c, m
+            else:
+                break
+        return cpu, mem
+    return _with_spec(trace, spec)
+
+
+def traces_from_table(names: Sequence[str], segs: np.ndarray,
+                      counts: Optional[np.ndarray] = None,
+                      periods: Optional[np.ndarray] = None
+                      ) -> dict[str, DemandTrace]:
+    """Bulk trace factory: one array pass instead of n factory calls.
+
+    ``segs`` is ``(n, k, 3)`` float rows of ``(t0, cpu_mhz, mem_mb)``
+    segments, ``counts`` the per-row number of valid segments (default
+    ``k``), ``periods`` the per-row period with non-finite meaning
+    aperiodic.  Returns ``{name: trace}`` where each trace carries the same
+    :class:`TraceSpec` the scalar factories would have attached -- the sweep
+    layer builds tens of thousands of VM traces per grid, and the per-call
+    normalization in :func:`step_trace` dominated cell construction.
+    """
+    segs = np.asarray(segs, dtype=np.float64)
+    n, k = segs.shape[0], segs.shape[1]
+    seg_rows = segs.tolist()
+    # Convert everything to plain Python up front: per-element ndarray
+    # indexing and np scalar ops in the loop cost more than the loop body.
+    cnt = ([k] * n if counts is None
+           else np.asarray(counts, dtype=np.int64).tolist())
+    if periods is None:
+        per = [None] * n
+    else:
+        pa = np.asarray(periods, dtype=np.float64)
+        per = [p if f else None
+               for p, f in zip(pa.tolist(), np.isfinite(pa).tolist())]
+    out: dict[str, DemandTrace] = {}
+    for name, row, c, p in zip(names, seg_rows, cnt, per):
+        if c != k:
+            row = row[:c]
+        out[name] = spec_trace(TraceSpec(
+            segments=tuple(tuple(s) for s in row), period=p))
+    return out
+
+
 def constant(cpu_mhz: float, mem_mb: float) -> DemandTrace:
     return _with_spec(lambda t: (cpu_mhz, mem_mb),
                       TraceSpec(segments=((0.0, cpu_mhz, mem_mb),)))
@@ -127,23 +183,33 @@ class TraceBank:
                 rows.append(row_of[vm_id])
                 specs.append(spec)
         if rows:
-            max_segs = max(len(s.segments) for s in specs)
+            # One flattened scatter over every (vm, segment) pair instead of
+            # a per-spec Python loop: the bank packs whole sweep grids, and
+            # host-side packing sat on the end-to-end critical path.
             n = len(rows)
+            counts = np.fromiter((len(s.segments) for s in specs),
+                                 dtype=np.int64, count=n)
+            max_segs = int(counts.max())
+            flat = np.asarray([seg for s in specs for seg in s.segments],
+                              dtype=np.float64)         # (sum(counts), 3)
+            r_idx = np.repeat(np.arange(n), counts)
+            c_idx = (np.arange(flat.shape[0])
+                     - np.repeat(np.cumsum(counts) - counts, counts))
             bps = np.full((n, max_segs), np.inf)
             cpu = np.zeros((n, max_segs))
             mem = np.zeros((n, max_segs))
-            period = np.full(n, np.inf)
-            for i, s in enumerate(specs):
-                k = len(s.segments)
-                seg = np.asarray(s.segments, dtype=np.float64)
-                bps[i, :k] = seg[:, 0]
-                cpu[i, :k] = seg[:, 1]
-                mem[i, :k] = seg[:, 2]
-                # Padding repeats the last value so idx overshoot is benign.
-                cpu[i, k:] = seg[-1, 1]
-                mem[i, k:] = seg[-1, 2]
-                if s.period is not None:
-                    period[i] = s.period
+            bps[r_idx, c_idx] = flat[:, 0]
+            cpu[r_idx, c_idx] = flat[:, 1]
+            mem[r_idx, c_idx] = flat[:, 2]
+            # Padding repeats the last value so idx overshoot is benign.
+            pad_src = np.minimum(np.arange(max_segs)[None, :],
+                                 counts[:, None] - 1)
+            take = np.arange(n)[:, None]
+            cpu = cpu[take, pad_src]
+            mem = mem[take, pad_src]
+            period = np.fromiter(
+                ((np.inf if s.period is None else s.period) for s in specs),
+                dtype=np.float64, count=n)
             bank.rows = np.asarray(rows, dtype=np.int64)
             bank.period = period
             bank.bps = bps

@@ -233,6 +233,112 @@ def test_run_sweep_batch_fallback_partitions_grid():
                                    ref[name]["cpc"].energy_j, rtol=1e-9)
 
 
+@pytest.mark.parametrize("order", ("reversed", "shuffled"))
+def test_run_sweep_async_completion_order_independent(monkeypatch, order):
+    """The overlapped pipeline dispatches every bucket before harvesting
+    any; out-of-order bucket completion (injected by shuffling the harvest
+    order) must still return the merged grid in exact specs x policies
+    order, with per-cell values matching the vector engine -- including the
+    vector-fallback cells interleaved into the assembly."""
+    import repro.sim.sweep as sw
+
+    specs = [SweepSpec(name="small", n_hosts=4, spike="burst",
+                       duration_s=600.0, tick_s=30.0),
+             SweepSpec(name="big", n_hosts=8, spike="burst",
+                       duration_s=600.0, tick_s=30.0),
+             SweepSpec(name="odd", n_hosts=4, spike="flat",
+                       duration_s=300.0, tick_s=30.0)]  # mixed time grid
+    policies = ("cpc", "static")
+    ref = run_sweep(specs, policies=policies, engine="vector")
+
+    orders: list = []
+
+    def scrambled(n):
+        idx = list(range(n))
+        if order == "reversed":
+            idx.reverse()
+        else:
+            rng = np.random.RandomState(0)
+            rng.shuffle(idx)
+        orders.append(list(idx))
+        return idx
+
+    monkeypatch.setattr(sw, "_harvest_order", scrambled)
+    with pytest.warns(RuntimeWarning, match="sequential vector engine"):
+        res = run_sweep(specs, policies=policies, engine="batch",
+                        on_unsupported="fallback")
+    # The hetero grid really produced >= 2 concurrently dispatched buckets
+    # (pow2 classes (4, 16) and (8, 16)) whose harvest we scrambled.
+    assert orders and max(len(o) for o in orders) >= 2
+    # Exact specs x policies iteration order, fallback cell included.
+    assert list(res) == [s.name for s in specs]
+    for name in res:
+        assert list(res[name]) == list(policies)
+    for s in specs:
+        for p in policies:
+            a, b = ref[s.name][p], res[s.name][p]
+            assert b.cap_changes == a.cap_changes, (s.name, p)
+            np.testing.assert_allclose(b.energy_j, a.energy_j, rtol=1e-9)
+            np.testing.assert_allclose(b.cpu_payload_mhz_s,
+                                       a.cpu_payload_mhz_s, rtol=1e-9)
+
+
+_TS_FIELDS = ("cpu_payload_mhz_s", "cpu_demand_mhz_s", "mem_payload_mb_s",
+              "mem_demand_mb_s", "energy_j")
+_TS_COUNTERS = ("cap_changes", "vmotions", "power_ons", "power_offs")
+
+
+@pytest.mark.parametrize("regime", ("cap", "dpm", "rules", "timed"))
+def test_reduced_metrics_bit_identical_to_timeseries(regime):
+    """The device-side reduced path (default) and the full per-tick
+    timeseries path agree bit for bit: ``keep_timeseries=False`` summaries
+    equal the ``keep_timeseries=True`` run's summaries *and* the
+    ``fold_timeseries`` reduction of its per-tick series, across every
+    batched regime (cap-only scan, DPM churn, rules + balancer, timed
+    migrations)."""
+    from repro.sim.batch import BatchedSimulator
+    from repro.sim.sweep import _build_batch_cells, _grid_balancer
+
+    grids = {
+        "cap": dict(sizes=(4,), spikes=("burst",), heterogeneous=(False,),
+                    duration_s=600.0, tick_s=30.0),
+        "dpm": dict(sizes=(6,), spikes=("burst",), heterogeneous=(False,),
+                    churns=("dpm",), duration_s=1500.0, tick_s=30.0),
+        "rules": dict(sizes=(8,), spikes=("burst",), heterogeneous=(False,),
+                      rules=("violation_burst",), duration_s=600.0,
+                      tick_s=10.0),
+        "timed": dict(sizes=(6,), spikes=("burst",), heterogeneous=(False,),
+                      churns=("timed_churn",), rules=("violation_burst",),
+                      duration_s=1200.0, tick_s=10.0),
+    }
+    specs = scenario_families(budgets_per_host_w=(250.0,), **grids[regime])
+    cells, _ = _build_batch_cells(specs, ("cpc", "static"))
+    bal = _grid_balancer(specs)
+    r0 = BatchedSimulator(cells, balancer=bal, slot_slack=3.0).run()
+    r1 = BatchedSimulator(cells, balancer=bal, slot_slack=3.0,
+                          keep_timeseries=True).run()
+    assert r0.timeseries is None
+    assert set(r1.timeseries) == set(_TS_FIELDS) | set(_TS_COUNTERS)
+    red = r1.reduced_timeseries()
+    for f in _TS_FIELDS:
+        assert np.array_equal(getattr(r1, f), getattr(r0, f)), f
+        assert np.array_equal(red[f], getattr(r0, f)), f
+    for f in _TS_COUNTERS:
+        assert np.array_equal(getattr(r1, f), getattr(r0, f)), f
+        assert np.array_equal(red[f], getattr(r0, f)), f
+    # The satisfaction summary derives from the folded fields exactly too.
+    with np.errstate(invalid="ignore"):
+        np.testing.assert_array_equal(
+            red["cpu_payload_mhz_s"] / red["cpu_demand_mhz_s"],
+            r0.cpu_payload_mhz_s / r0.cpu_demand_mhz_s)
+    # Each regime exercised the machinery whose counters it folds.
+    if regime == "dpm":
+        assert int(r0.power_offs.sum()) > 0
+    if regime in ("rules", "timed"):
+        assert int(r0.vmotions.sum()) > 0
+    assert int(r0.cap_changes.sum()) > 0
+
+
 def test_run_sweep_batched_policy_separation():
     """CPC beats Static under host-correlated bursts on the batch engine."""
     spec = SweepSpec(name="sep", n_hosts=12, vms_per_host=8, spike="burst",
