@@ -236,6 +236,64 @@ def measure_kernel() -> dict:
         }
 
 
+def measure_budget_service() -> dict:
+    """``budget_service``: the live headroom/admission service and the
+    hierarchical-budget sweep family, parity-gated with a generous
+    latency bound.
+
+    Three things ride on this entry: (1) the service's headroom answers
+    must equal brute-force recomputation exactly on the post-replay state
+    (the control plane's core contract); (2) the ``row_contention``
+    budget-tree sweep slice must replay identically batch vs vector
+    (exact cap-change counts, 1e-9 payload/energy); (3) replay latency
+    percentiles are recorded, gated only against a 10x-the-baseline
+    ceiling -- absolute microseconds are runner noise, an order of
+    magnitude is an accidental O(n^2) or a jit on the hot path.
+    """
+    import numpy as np
+
+    from repro.core.budget_tree import BudgetTree
+    from repro.runtime import budget_service as bsvc
+    from repro.sim.sweep import row_contention_specs, run_sweep
+
+    n_hosts, n_events = 50, 4000
+    budget = 250.0 * n_hosts
+    tree = BudgetTree.two_rows(budget, n_hosts, row0_limit=0.45 * budget)
+    hosts = [f"host{i}" for i in range(n_hosts)]
+    on = np.ones(n_hosts, dtype=bool)
+    caps0 = tree.project(np.full(n_hosts, 250.0), on,
+                         floors=np.zeros(n_hosts))
+    svc = bsvc.BudgetService(tree, hosts, caps0, on)
+    rep = svc.replay(bsvc.synthetic_feed(tree, n_events=n_events, seed=0))
+    parity = max(abs(svc.headroom(h) - svc.brute_force_headroom(h))
+                 for h in hosts)
+
+    # 600 s reaches past the burst onset, so the cpc cell really changes
+    # caps under the binding row and the parity bit is non-trivial.
+    specs = row_contention_specs(sizes=(10,), duration_s=600.0)
+    policies = ("cpc", "static")
+    vec = run_sweep(specs, policies=policies, engine="vector")
+    bat = run_sweep(specs, policies=policies, engine="batch")
+    sweep_active = any(vec[s]["cpc"].cap_changes > 0 for s in vec)
+    sweep_exact = sweep_active and all(
+        vec[s][p].cap_changes == bat[s][p].cap_changes
+        and abs(vec[s][p].cpu_payload_mhz_s - bat[s][p].cpu_payload_mhz_s)
+        <= 1e-9 * abs(vec[s][p].cpu_payload_mhz_s)
+        and abs(vec[s][p].energy_j - bat[s][p].energy_j)
+        <= 1e-9 * abs(vec[s][p].energy_j)
+        for s in vec for p in vec[s])
+    return {
+        "n_hosts": n_hosts,
+        "n_events": rep.n_events,
+        "n_decisions": rep.n_decisions,
+        "n_errors": rep.n_errors,
+        "p50_us": rep.p50_us,
+        "p99_us": rep.p99_us,
+        "headroom_parity_max_w": float(parity),
+        "row_contention_parity": bool(sweep_exact),
+    }
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--update-baseline", action="store_true",
@@ -269,6 +327,13 @@ def main() -> int:
           f"{mk['max_abs_diff_vs_lax']:.1e}, "
           f"{mk['us_per_call_interpret']:.0f}us/call (interpret mode, "
           f"informational)", flush=True)
+    measured["budget_service"] = mb = measure_budget_service()
+    print(f"budget_service: {mb['n_events']}events@{mb['n_hosts']}h "
+          f"p50 {mb['p50_us']:.0f}us p99 {mb['p99_us']:.0f}us, "
+          f"headroom parity {mb['headroom_parity_max_w']:.1e}, "
+          f"row_contention parity "
+          f"{'exact' if mb['row_contention_parity'] else 'BROKEN'}",
+          flush=True)
 
     with open(BASELINE_PATH) as f:
         bench = json.load(f)
@@ -321,6 +386,25 @@ def main() -> int:
                       f"scheduler noise, not a property of the compiled "
                       f"program; the bit-identity parity gate still "
                       f"applies", flush=True)
+            failed |= not ok
+            continue
+        if "headroom_parity_max_w" in base:
+            # Budget service: parity is the hard gate (headroom answers
+            # exactly equal brute force; the row_contention tree sweep
+            # bit-stable batch vs vector).  Latency only fails at 10x the
+            # committed baseline -- absolute microseconds are runner
+            # noise, an order of magnitude is an algorithmic regression.
+            ceil = max(base["p99_us"] * 10.0, 1000.0)
+            ok = (got["headroom_parity_max_w"] == 0.0
+                  and got["row_contention_parity"]
+                  and got["p99_us"] <= ceil)
+            status = "ok" if ok else "FAIL"
+            print(f"{status} {name}: headroom parity "
+                  f"{got['headroom_parity_max_w']:.1e} (gate: exactly 0), "
+                  f"row_contention "
+                  f"{'exact' if got['row_contention_parity'] else 'BROKEN'}"
+                  f", p99 {got['p99_us']:.0f}us (ceiling {ceil:.0f}us)",
+                  flush=True)
             failed |= not ok
             continue
         if "bit_identical" in base:

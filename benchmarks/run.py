@@ -35,6 +35,11 @@ live in EXPERIMENTS.md.
                           (subprocess with forced host device count), plus
                           a 10k-host / 100k-VM-slot datacenter cell, via
                           benchmarks/sweep_sharded.py
+  budget_service       -- hierarchical-budget control plane: event-replay
+                          latency percentiles (headroom/admission queries,
+                          demand updates, node-limit changes over a two-row
+                          budget tree) plus headroom and row_contention
+                          sweep parity
   roofline_summary     -- per-(arch x shape) roofline terms from the dry-run
 
 Run: PYTHONPATH=src python -m benchmarks.run [--skip-slow] [--json]
@@ -546,6 +551,26 @@ def roofline_summary():
         f"{k}:{len(v)}" for k, v in sorted(by_dom.items())))
 
 
+def budget_service():
+    """Hierarchical-budget control plane: replay latency + parity.
+
+    Replays a mixed synthetic event feed (headroom/admission queries,
+    demand updates, power churn, node-limit changes) through
+    ``repro.runtime.budget_service.BudgetService`` over a two-row budget
+    tree, and runs the ``row_contention`` tree sweep slice batch vs
+    vector.  Reports p50/p99 per-event latency and both parity checks;
+    ``benchmarks.check_regression`` gates the same measurement in CI."""
+    from benchmarks.check_regression import measure_budget_service
+    m = measure_budget_service()
+    ARTIFACT["budget_service"] = m
+    return (f"{m['n_events']}events@{m['n_hosts']}h:"
+            f"p50:{m['p50_us']:.0f}us;p99:{m['p99_us']:.0f}us;"
+            f"decisions:{m['n_decisions']};"
+            f"headroom_parity:{m['headroom_parity_max_w']:.1e};"
+            f"row_contention:"
+            f"{'exact' if m['row_contention_parity'] else 'FAIL'}")
+
+
 def kernel_microbenches():
     from benchmarks.kernel_bench import BENCHES as KB
     parts = []
@@ -568,6 +593,7 @@ BENCHES = [
     ("sweep_grid_timed", sweep_grid_timed, True),
     ("sweep_e2e", sweep_e2e, True),
     ("sweep_scale_sharded", sweep_scale_sharded, True),
+    ("budget_service", budget_service, True),
     ("kernel_microbenches", kernel_microbenches, False),
     ("roofline_summary", roofline_summary, False),
 ]

@@ -59,6 +59,14 @@ class NumpyBackend:
         return out
 
     @staticmethod
+    def seg_min(values, seg_ids, n_segs):
+        """Per-segment min, +inf for empty segments (the budget-tree
+        slack gather: min headroom over each host's ancestor path)."""
+        out = np.full(n_segs, np.inf, dtype=np.float64)
+        np.minimum.at(out, seg_ids, values)
+        return out
+
+    @staticmethod
     def fori(n, body, init):
         """``state = body(i, state)`` for i in [0, n)."""
         state = init
@@ -104,6 +112,12 @@ class JaxBackend:
         # backend's zero-initialized semantics (values are >= 0).
         out = self._jax.ops.segment_max(values, seg_ids, num_segments=n_segs)
         return self.xp.maximum(out, 0.0)
+
+    def seg_min(self, values, seg_ids, n_segs):
+        # segment_min yields +inf for empty segments, matching the NumPy
+        # backend's inf-initialized semantics.
+        return self._jax.ops.segment_min(values, seg_ids,
+                                         num_segments=n_segs)
 
     def fori(self, n, body, init):
         return self._jax.lax.fori_loop(0, n, body, init)

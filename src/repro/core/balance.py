@@ -83,6 +83,16 @@ def balance_power_cap(snapshot: ClusterSnapshot,
             np.asarray([True]),
             config.params())
         new_caps, did_balance = caps[0], bool(did[0])
+    tree = snapshot.effective_tree()
+    if tree is not None:
+        # Hierarchical budgets: transfers conserve the cluster total but
+        # may still push a row past its limit; scale the balanced caps
+        # back under every node, protecting the reserved floors.
+        floor_caps = kernels.reserved_floor_caps(
+            np, hosts, av.cpu_reserved()[None])[0]
+        new_caps = kernels.tree_project_caps(
+            np, tree.cols(), av.host_on[None], new_caps[None],
+            floor_caps[None])[0]
     av.write_caps(f, new_caps)
     if did_balance:
         f.validate()

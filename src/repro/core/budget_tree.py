@@ -1,0 +1,170 @@
+"""Hierarchical power-budget trees.
+
+CloudPowerCap's original protocol manages a single scalar rack budget.  A
+datacenter deployment stacks budgets: host -> rack -> row -> room, each
+level with its own breaker/contract limit, and every watt a host receives
+must fit under *every* limit on its root path.  :class:`BudgetTree` is the
+dense description of that hierarchy shared by all three engines:
+
+  * ``parent``    -- ``(n_nodes,)`` int parent index, root at index 0 with
+    parent ``-1``; parents always precede children (topological order), so
+    depth-bounded up/down sweeps are simple prefix loops.
+  * ``limit``     -- ``(n_nodes,)`` float per-node power limit in watts.
+  * ``host_node`` -- ``(n_hosts,)`` int node each host hangs off (in
+    snapshot/ArrayView host iteration order).
+
+The engines never walk the tree pointer-by-pointer.  The constructor
+flattens it into an ancestor incidence matrix (``host x node`` bool:
+"node m is on host h's root path"), which turns every tree question into a
+masked segment reduction (`repro.core.kernels` ``tree_*`` ops): subtree
+cap-sums are a segment-sum up the tree, per-host effective slack is a
+masked min gather down, and over-limit projection is a per-node
+proportional scale applied through the same mask.  The batched engine
+packs the incidence matrix per cell and carries it through its
+``lax.scan`` unchanged.
+
+A *trivial* tree (single node whose limit is at least the scalar budget)
+encodes exactly today's flat behavior; engines skip the tree code path for
+it entirely so flat configurations stay bit-identical to the scalar
+protocol.
+"""
+
+from __future__ import annotations
+
+from typing import Iterable
+
+import numpy as np
+
+from repro import backend
+from repro.core import kernels
+
+__all__ = ["BudgetTree"]
+
+
+class BudgetTree:
+    """Immutable budget hierarchy over the cluster's hosts.
+
+    Instances are shared (never copied) across snapshot clones; to change a
+    limit, build a new tree with :meth:`with_limit`.
+    """
+
+    def __init__(self, parent: Iterable[int], limit: Iterable[float],
+                 host_node: Iterable[int]):
+        self.parent = np.asarray(parent, dtype=np.int64)
+        self.limit = np.asarray(limit, dtype=np.float64)
+        self.host_node = np.asarray(host_node, dtype=np.int64)
+        n = self.parent.shape[0]
+        if n == 0:
+            raise ValueError("budget tree needs at least a root node")
+        if self.limit.shape != (n,):
+            raise ValueError("parent/limit length mismatch")
+        if self.parent[0] != -1:
+            raise ValueError("node 0 must be the root (parent == -1)")
+        if n > 1:
+            kids = self.parent[1:]
+            if np.any(kids < 0) or np.any(kids >= np.arange(1, n)):
+                raise ValueError(
+                    "parents must precede children (parent[i] in [0, i))")
+        if np.any(self.limit < 0.0):
+            raise ValueError("node limits must be non-negative")
+        if self.host_node.size and (
+                self.host_node.min() < 0 or self.host_node.max() >= n):
+            raise ValueError("host_node references an unknown node")
+
+        # Ancestor-or-self incidence: anc_nodes[m, k] == node k lies on
+        # node m's root path.  Parents precede children, so one forward
+        # pass closes the relation.
+        anc = np.eye(n, dtype=bool)
+        for m in range(1, n):
+            anc[m] |= anc[self.parent[m]]
+        self.anc_nodes = anc
+        self.host_anc = anc[self.host_node]          # (H, N) bool
+        self.depth = anc.sum(axis=1).astype(np.int64) - 1   # root depth 0
+
+        # Flattened (host, ancestor) pair lists: the CSR-ish layout the
+        # S=1 control plane feeds to the backend segment ops.
+        ph, pn = np.nonzero(self.host_anc)
+        self.pair_host = ph.astype(np.int64)
+        self.pair_node = pn.astype(np.int64)
+
+    # ------------------------------------------------------------ builders
+    @classmethod
+    def flat(cls, budget: float, n_hosts: int) -> "BudgetTree":
+        """Single-node tree encoding today's scalar rack budget."""
+        return cls([-1], [float(budget)], np.zeros(n_hosts, dtype=np.int64))
+
+    @classmethod
+    def two_rows(cls, budget: float, n_hosts: int, row0_limit: float,
+                 row1_limit: float | None = None) -> "BudgetTree":
+        """Root + two row nodes; first half of the hosts on row 0."""
+        if row1_limit is None:
+            row1_limit = float(budget)
+        split = n_hosts // 2
+        host_node = np.where(np.arange(n_hosts) < split, 1, 2)
+        return cls([-1, 0, 0], [float(budget), float(row0_limit),
+                                float(row1_limit)], host_node)
+
+    def with_limit(self, node: int, limit: float) -> "BudgetTree":
+        """A copy of this tree with one node limit replaced."""
+        new_limit = self.limit.copy()
+        new_limit[int(node)] = float(limit)
+        return BudgetTree(self.parent, new_limit, self.host_node)
+
+    # ------------------------------------------------------------- queries
+    @property
+    def n_nodes(self) -> int:
+        return int(self.parent.shape[0])
+
+    @property
+    def n_hosts(self) -> int:
+        return int(self.host_node.shape[0])
+
+    def is_trivial(self, budget: float) -> bool:
+        """True when the tree adds no constraint beyond the scalar budget
+        (single root whose limit does not undercut it)."""
+        return self.n_nodes == 1 and float(self.limit[0]) >= budget - 1e-9
+
+    def cols(self) -> "kernels.TreeCols":
+        """The ``(S=1, ...)`` kernel columns for this tree."""
+        return kernels.TreeCols(anc=self.host_anc[None],
+                                limit=self.limit[None],
+                                depth=self.depth[None])
+
+    def node_sums(self, caps: np.ndarray, on: np.ndarray) -> np.ndarray:
+        """Per-node subtree cap-sum (powered-off hosts contribute 0)."""
+        caps_on = np.where(on, caps, 0.0)
+        return backend.NUMPY.seg_sum(
+            caps_on[self.pair_host], self.pair_node, self.n_nodes)
+
+    def headroom(self, caps: np.ndarray, on: np.ndarray) -> np.ndarray:
+        """Per-node remaining watts under the node limit."""
+        return self.limit - self.node_sums(caps, on)
+
+    def host_slack(self, caps: np.ndarray, on: np.ndarray) -> np.ndarray:
+        """Per-host tightest headroom along the root path (may be < 0)."""
+        head = self.headroom(caps, on)
+        return backend.NUMPY.seg_min(
+            head[self.pair_node], self.pair_host, self.n_hosts)
+
+    def max_overshoot(self, caps: np.ndarray, on: np.ndarray) -> float:
+        """Largest per-node limit violation in watts (<= 0 when clean)."""
+        return float(np.max(self.node_sums(caps, on) - self.limit))
+
+    def subtree_hosts(self, node: int) -> np.ndarray:
+        """Bool mask of hosts inside ``node``'s subtree."""
+        return self.host_anc[:, int(node)]
+
+    def project(self, caps: np.ndarray, on: np.ndarray,
+                floors: np.ndarray | None = None) -> np.ndarray:
+        """Scale caps down until every node limit holds (see
+        :func:`repro.core.kernels.tree_project_caps`)."""
+        if floors is None:
+            floors = np.zeros_like(caps)
+        return kernels.tree_project_caps(
+            np, self.cols(), on[None], caps[None], floors[None])[0]
+
+    def validate(self, caps: np.ndarray, on: np.ndarray,
+                 atol: float = 1e-6) -> None:
+        over = self.max_overshoot(caps, on)
+        assert over <= atol, (
+            f"budget tree violated: worst node over by {over:.6f} W")

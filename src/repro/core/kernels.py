@@ -213,6 +213,115 @@ def count_cap_changes(xp, on, before, after):
     return xp.sum(changed, axis=-1)
 
 
+# ------------------------------------------------------------ budget tree
+#
+# Hierarchical budgets (host -> rack -> row -> room) arrive flattened as an
+# ancestor incidence matrix (see ``repro.core.budget_tree.BudgetTree``), so
+# every tree question is a masked segment reduction over the node axis:
+# subtree cap-sums are a segment-sum up the tree, per-host slack a masked
+# min gather down, and over-limit repair a per-node proportional scale.
+# The ops are deliberately pure ``(S, H) x (S, H, N) -> (S, N)`` array math
+# so the same source runs eagerly on NumPy (object plane, S == 1) and under
+# jit inside the batched engine's ``lax.scan``.
+
+#: A node counts as *binding* for projection only past this overshoot, so
+#: conserving kernels whose totals drift by float-summation ULPs (well
+#: below 1e-9 at rack scale) pass through bitwise untouched.
+TREE_PROJECT_EPS = 1e-9
+
+#: Headroom below this counts a node as *saturated* for evacuation scoping.
+TREE_BIND_EPS = 1e-6
+
+
+class TreeCols(NamedTuple):
+    """Budget-tree columns (a pytree, so jit-transparent).
+
+    ``anc[s, h, m]`` -- node ``m`` lies on host ``h``'s root path (ancestor
+    incidence, self-inclusive via the host's leaf).  Padded hosts have an
+    all-False row; padded nodes an all-False column with ``limit == +inf``
+    and ``depth == -1``, so they never constrain anything.
+    """
+
+    anc: object      # (S, H, N) bool
+    limit: object    # (S, N) Watts
+    depth: object    # (S, N) int, root 0 (padding -1)
+
+
+def tree_anc_at(xp, tree: TreeCols, host):
+    """Ancestor row of per-cell host index ``host`` (``(S,) -> (S, N)``)."""
+    return xp.take_along_axis(
+        tree.anc, host[..., None, None], axis=-2)[..., 0, :]
+
+
+def tree_node_sums(xp, tree: TreeCols, on, caps):
+    """Per-node subtree cap-sum: segment-sum of powered-on caps up the
+    tree through the ancestor incidence (``(S, H) -> (S, N)``)."""
+    caps_on = xp.where(on, caps, 0.0)
+    return xp.sum(xp.where(tree.anc, caps_on[..., None], 0.0), axis=-2)
+
+
+def tree_headroom(xp, tree: TreeCols, on, caps):
+    """Per-node remaining watts under the node limit (may be < 0)."""
+    return tree.limit - tree_node_sums(xp, tree, on, caps)
+
+
+def tree_host_slack(xp, tree: TreeCols, headroom):
+    """Per-host effective slack: tightest headroom along the root path
+    (gather down; ``+inf`` for hosts outside the tree, i.e. padding)."""
+    return xp.min(xp.where(tree.anc, headroom[..., None, :], xp.inf),
+                  axis=-1)
+
+
+def tree_project_caps(xp, tree: TreeCols, on, caps, floors):
+    """Scale caps down until every node limit holds, never below floors.
+
+    Each host's cap splits into a protected floor and excess; every node
+    whose subtree sum overshoots its limit by more than
+    ``TREE_PROJECT_EPS`` computes the proportional excess scale that lands
+    it exactly on the limit, and each host applies the tightest scale along
+    its root path.  One pass suffices: a node's post-projection sum is at
+    most ``node_floor + s_node * node_excess == limit`` because every
+    subtree host's scale is <= ``s_node``.  Non-binding nodes (every node,
+    for a flat tree inside its budget) leave caps bitwise untouched.
+
+    Precondition: the floors themselves fit under every limit (the
+    reserved-floor analogue of ``correct_constraints``); otherwise the
+    projection bottoms out at the floors and the engine invariants flag
+    the misconfigured tree.
+    """
+    fl = xp.where(on, xp.minimum(floors, caps), 0.0)
+    ex = xp.where(on, caps, 0.0) - fl
+    node_fl = xp.sum(xp.where(tree.anc, fl[..., None], 0.0), axis=-2)
+    node_ex = xp.sum(xp.where(tree.anc, ex[..., None], 0.0), axis=-2)
+    binding = node_fl + node_ex > tree.limit + TREE_PROJECT_EPS
+    scale = xp.clip((tree.limit - node_fl) / xp.maximum(node_ex, 1e-300),
+                    0.0, 1.0)
+    s_node = xp.where(binding, scale, 1.0)
+    s_host = xp.min(xp.where(tree.anc, s_node[..., None, :], xp.inf),
+                    axis=-1)
+    return xp.where(on & (s_host < 1.0), fl + s_host * ex, caps)
+
+
+def tree_evac_scope(xp, tree: TreeCols, on, caps, victim):
+    """Destination scope for evacuating ``victim``: the subtree of its
+    deepest *saturated* ancestor (headroom < ``TREE_BIND_EPS``), so the
+    freed watts and the displaced demand stay inside the binding domain.
+    With no saturated ancestor (always, for a flat tree inside its budget)
+    every host is in scope -- the scalar-protocol behavior.
+    """
+    s, h, _ = tree.anc.shape
+    head = tree_headroom(xp, tree, on, caps)
+    anc_v = tree_anc_at(xp, tree, victim)                     # (S, N)
+    saturated = anc_v & (head < TREE_BIND_EPS)
+    key = xp.where(saturated, tree.depth, -1)
+    node = xp.argmax(key, axis=-1)                            # deepest
+    scope = xp.take_along_axis(
+        tree.anc, xp.broadcast_to(node[..., None, None], (s, h, 1)),
+        axis=-1)[..., 0]                                      # (S, H)
+    return xp.where(xp.any(saturated, axis=-1)[..., None], scope,
+                    xp.ones_like(scope))
+
+
 # ---------------------------------------------------------------- balance
 def _masked_std(xp, values, mask, count):
     """Population stddev of ``values`` where ``mask`` (count = mask sum)."""
@@ -411,7 +520,7 @@ def dpm_all_low(xp, on, cpu_util, mem_util, low_util):
 
 def power_on_funding_caps(be, hosts: HostCols, caps, cand, cpu_util,
                           host_demand, cpu_reserved, budget,
-                          high_util: float):
+                          high_util: float, tree: TreeCols | None = None):
     """Algorithm 3 power-on funding (paper Fig. 5), batched.
 
     Funds the cap of candidate host ``cand`` (``(S,)`` index): unallocated
@@ -420,6 +529,16 @@ def power_on_funding_caps(be, hosts: HostCols, caps, cand, cpu_util,
     (no oscillation), never below their reservations or idle power.  An
     already-powered-on candidate keeps its allocation; funding only tops it
     up toward peak.
+
+    With a ``tree``, both funding sources additionally respect the budget
+    hierarchy: the unallocated pool is clipped to the candidate's tightest
+    ancestor headroom, and each donated watt that crosses a limit node on
+    its way to the candidate (a node guarding the candidate but not the
+    donor) debits that node's headroom and stops when it runs out -- so
+    funding can never borrow across a saturated row boundary.  Donors
+    inside the candidate's own binding subtree are untouched by the check
+    (their watts never cross the boundary).  Without a tree (or with every
+    crossed node slack) the result is bitwise the flat-protocol answer.
 
     Returns ``(new_caps, granted)`` where ``new_caps`` has donors drained
     and the candidate at its granted cap (``min(granted, peak)``), and
@@ -438,8 +557,15 @@ def power_on_funding_caps(be, hosts: HostCols, caps, cand, cpu_util,
     granted0 = xp.where(cand_on, at_cand(caps), 0.0)
     needed = xp.maximum(peak_c - granted0, 0.0)
 
-    # Step 1: unallocated budget.
+    # Step 1: unallocated budget (clipped to the candidate's ancestor
+    # headroom when a tree is live -- unallocated watts still may not push
+    # a row past its limit).
     pool = xp.maximum(budget - xp.sum(xp.where(on, caps, 0.0), axis=-1), 0.0)
+    if tree is not None:
+        head = tree_headroom(xp, tree, on, caps)
+        anc_c = tree_anc_at(xp, tree, cand)                   # (S, N)
+        pool_c = xp.min(xp.where(anc_c, head, xp.inf), axis=-1)
+        pool = xp.minimum(pool, xp.maximum(pool_c, 0.0))
     take0 = xp.minimum(pool, needed)
     needed = needed - take0
 
@@ -460,6 +586,32 @@ def power_on_funding_caps(be, hosts: HostCols, caps, cand, cpu_util,
     residue = needed[..., None] - cum_before
     take = xp.where(residue > 1e-9,
                     xp.clip(residue, 0.0, sorted_avail), 0.0)
+    if tree is not None:
+        # Tree pass over the same sorted donors: each donation is capped by
+        # the remaining headroom of the nodes it crosses (ancestors of the
+        # candidate that are not ancestors of the donor), then debits them.
+        # The flat prefix-sum ``take`` stays the base amount, so when no
+        # crossed node binds the result is bitwise the flat answer.
+        s, n_hosts = caps.shape
+        head = head - xp.where(anc_c, take0[..., None], 0.0)
+        anc_sorted = xp.take_along_axis(
+            tree.anc, order[..., None], axis=-2)              # (S, H, N)
+
+        def drain(k, st):
+            head_k, take_k = st
+            anc_d = xp.take_along_axis(
+                anc_sorted, xp.full((s, 1, 1), k, dtype=order.dtype),
+                axis=-2)[..., 0, :]
+            crossed = anc_c & ~anc_d                          # (S, N)
+            room = xp.min(xp.where(crossed, head_k, xp.inf), axis=-1)
+            base = xp.take_along_axis(
+                take, xp.full((s, 1), k, dtype=order.dtype), axis=-1)[..., 0]
+            t = xp.minimum(base, xp.maximum(room, 0.0))
+            head_k = head_k - xp.where(crossed, t[..., None], 0.0)
+            take_k = xp.where(h_idx[None, :] == k, t[..., None], take_k)
+            return head_k, take_k
+
+        _, take = be.fori(n_hosts, drain, (head, take))
     inverse = be.argsort(order, axis=-1)
     taken = xp.take_along_axis(take, inverse, axis=-1)
 
@@ -468,10 +620,17 @@ def power_on_funding_caps(be, hosts: HostCols, caps, cand, cpu_util,
     return new_caps, granted
 
 
-def power_off_reabsorb_caps(xp, hosts: HostCols, caps, off_idx, budget):
+def power_off_reabsorb_caps(xp, hosts: HostCols, caps, off_idx, budget,
+                            tree: TreeCols | None = None):
     """Algorithm 3 power-off reabsorption: the victim's cap returns to the
     pool and is spread over the remaining powered-on hosts proportionally to
-    their headroom to peak.  Returns the new cap column (victim at 0)."""
+    their headroom to peak.  Returns the new cap column (victim at 0).
+
+    With a ``tree``, the grown caps are projected back under every node
+    limit (floors at the pre-growth caps, so reabsorption growth -- never
+    the surviving allocation -- is what gets scaled back).  For a flat tree
+    inside its budget the projection is bitwise a no-op.
+    """
     h_idx = xp.arange(caps.shape[-1])
     is_off = h_idx == off_idx[..., None]
     on_after = hosts.on & ~is_off
@@ -487,12 +646,16 @@ def power_off_reabsorb_caps(xp, hosts: HostCols, caps, off_idx, budget):
         / xp.maximum(total_head, 1e-300)[..., None],
         hosts.power_peak)
     ok = (total_head > 0.0) & (pool > 0.0)
-    return xp.where(ok[..., None] & recipients, grown, caps0)
+    result = xp.where(ok[..., None] & recipients, grown, caps0)
+    if tree is None:
+        return result
+    return tree_project_caps(xp, tree, on_after, result, caps0)
 
 
 def plan_evacuation(be, hosts: HostCols, caps, victim, occ, eff_slot,
                     mem_slot, res_slot, migratable, host_mem,
-                    target_util: float, allowed=None, anti=None):
+                    target_util: float, allowed=None, anti=None,
+                    scope=None):
     """DPM evacuation planning on the dense slot layout ``(S, H, J)``.
 
     Replays ``repro.drs.dpm.run_dpm``'s greedy: the victim's VMs leave in
@@ -513,6 +676,11 @@ def plan_evacuation(be, hosts: HostCols, caps, victim, occ, eff_slot,
     each evacuee may only land on a host its VM-host bitmask allows and
     where no member of any of its anti-affinity rules lives -- counting
     evacuees already placed earlier in the same plan.
+
+    ``scope`` (``(S, H)`` bool) restricts destinations, e.g. to the
+    victim's tightest saturated budget-tree subtree
+    (:func:`tree_evac_scope`), so displaced demand stays inside the
+    binding power domain.
     """
     xp = be.xp
     s, h, j = occ.shape
@@ -559,6 +727,8 @@ def plan_evacuation(be, hosts: HostCols, caps, victim, occ, eff_slot,
         r = vic_res[s_idx, ko]
         mig = vic_mig[s_idx, ko]
         fit = on & ~is_vic
+        if scope is not None:
+            fit = fit & scope
         fit = fit & (res_h + r[..., None] <= managed + 1e-9)
         fit = fit & (mem_h + m[..., None] <= host_mem + 1e-9)
         util_after = (eff_h + e[..., None]) / xp.maximum(managed, 1e-9)

@@ -98,6 +98,12 @@ class ManagerCore:
         working = self._phase_balancing(working, actions, notes, budget)
         working = self._phase_redistribution(working, actions, notes, now,
                                              low_since, last_config_change)
+        # Hierarchical budgets: every phase projects/scopes its own caps,
+        # so the tree invariant must hold on whatever state the invocation
+        # hands back (a powering-on candidate's pending grant counts via
+        # its already-set cap).
+        assert working.tree_respected(), (
+            "manager invocation left a budget-tree node over its limit")
         migrations = sum(1 for a in actions if a.kind == "migrate")
         cap_changes = sum(1 for a in actions if a.kind == "set_power_cap")
         return InvocationResult(actions=actions, snapshot=working,

@@ -43,11 +43,13 @@ def redistribute_for_power_on(snapshot: ClusterSnapshot, candidate_id: str,
     f = snapshot.clone()
     av = f.as_arrays()
     cand = np.asarray([av.host_index[candidate_id]])
+    tree = f.effective_tree()
     new_caps, granted = kernels.power_on_funding_caps(
         NUMPY, av.host_cols(), av.power_cap[None], cand,
         av.host_cpu_utilization()[None], av.host_demand()[None],
         av.cpu_reserved()[None], np.asarray([f.power_budget]),
-        dpm_config.high_util)
+        dpm_config.high_util,
+        tree=tree.cols() if tree is not None else None)
     av.write_caps(f, new_caps[0])
     # The cap IS the budget allocation: never larger than what was granted.
     # Below idle the host cannot even sit powered-on -- the caller (DPM
@@ -62,9 +64,11 @@ def redistribute_after_power_off(snapshot: ClusterSnapshot, off_id: str
     f = snapshot.clone()
     av = f.as_arrays()
     off = np.asarray([av.host_index[off_id]])
+    tree = f.effective_tree()
     new_caps = kernels.power_off_reabsorb_caps(
         np, av.host_cols(), av.power_cap[None], off,
-        np.asarray([f.power_budget]))
+        np.asarray([f.power_budget]),
+        tree=tree.cols() if tree is not None else None)
     f.hosts[off_id].powered_on = False
     av.write_caps(f, new_caps[0])
     f.validate()

@@ -40,6 +40,14 @@ def redivvy_power_cap(before: ClusterSnapshot, after: ClusterSnapshot,
                            for hid in av.host_ids], dtype=np.float64)
     new_caps = kernels.redivvy_caps(np, av.host_on[None], caps_start[None],
                                     av.power_cap[None])[0]
+    tree = after.effective_tree()
+    if tree is not None:
+        # Hierarchical budgets: scale the redivvied caps back under every
+        # node limit, protecting the reserved floors (``av.power_cap`` is
+        # the floor column here -- ``after`` arrives floored).
+        new_caps = kernels.tree_project_caps(
+            np, tree.cols(), av.host_on[None], new_caps[None],
+            av.power_cap[None])[0]
     for i, hid in enumerate(av.host_ids):
         if av.host_on[i]:
             after.hosts[hid].power_cap = float(new_caps[i])
@@ -88,6 +96,13 @@ def fundable_capacity(flex: ClusterSnapshot, host_id: str) -> float:
         return 0.0
     spare = max(flex.power_budget - sum(
         h.power_cap for h in flex.powered_on_hosts()), 0.0)
+    tree = flex.effective_tree()
+    if tree is not None:
+        # The host can only absorb spare watts up to the tightest headroom
+        # along its root path (a saturated row strands spare budget).
+        av = flex.as_arrays()
+        slack = tree.host_slack(av.power_cap, av.host_on)
+        spare = min(spare, max(float(slack[av.host_index[host_id]]), 0.0))
     cap = min(host.power_cap + spare, host.spec.power_peak)
     return float(host.spec.managed_capacity(cap))
 

@@ -105,6 +105,16 @@ def run_dpm(snapshot: ClusterSnapshot, config: DPMConfig,
     on_idx = np.nonzero(on_mask)[0]
     victim_i = int(on_idx[np.argmin(cpu_util[on_idx])])
     victim = snapshot.hosts[av.host_ids[victim_i]]
+    # Hierarchical budgets: keep evacuees inside the victim's tightest
+    # saturated budget subtree (same mask as the batched engine's
+    # ``kernels.tree_evac_scope``), so the displaced demand stays in the
+    # power domain whose freed watts will feed it.
+    tree = snapshot.effective_tree()
+    evac_scope = None
+    if tree is not None:
+        evac_scope = kernels.tree_evac_scope(
+            np, tree.cols(), on_mask[None], av.power_cap[None],
+            np.asarray([victim_i]))[0]
     trial = snapshot.clone()
     evacuations: list[tuple[str, str]] = []
     ok = True
@@ -116,6 +126,9 @@ def run_dpm(snapshot: ClusterSnapshot, config: DPMConfig,
         best, best_util = None, 1e18
         for host in trial.powered_on_hosts():
             if host.host_id == victim.host_id:
+                continue
+            if evac_scope is not None and \
+                    not bool(evac_scope[av.host_index[host.host_id]]):
                 continue
             if not placement.fits(trial, vm.vm_id, host.host_id):
                 continue

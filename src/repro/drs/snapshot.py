@@ -96,11 +96,19 @@ class ClusterSnapshot:
     """
 
     def __init__(self, hosts: Iterable[Host], vms: Iterable[VirtualMachine],
-                 power_budget: float, rules: Optional[list] = None):
+                 power_budget: float, rules: Optional[list] = None,
+                 budget_tree=None):
         self.hosts: dict[str, Host] = {h.host_id: h for h in hosts}
         self.vms: dict[str, VirtualMachine] = {v.vm_id: v for v in vms}
         self.power_budget = float(power_budget)
         self.rules = list(rules or [])
+        #: Optional ``repro.core.budget_tree.BudgetTree`` over the hosts in
+        #: iteration order; ``None`` (or a trivial single-node tree) means
+        #: the flat scalar budget.  Trees are immutable and shared across
+        #: clones.
+        self.budget_tree = budget_tree
+        if budget_tree is not None and budget_tree.n_hosts != len(self.hosts):
+            raise ValueError("budget tree host count != cluster host count")
         self._host_sums: Optional[dict] = None
         self._check_placements()
 
@@ -116,6 +124,7 @@ class ClusterSnapshot:
         snap.vms = {k: copy.copy(v) for k, v in self.vms.items()}
         snap.power_budget = self.power_budget
         snap.rules = list(self.rules)
+        snap.budget_tree = self.budget_tree
         snap._host_sums = None
         return snap
 
@@ -282,10 +291,30 @@ class ClusterSnapshot:
     def budget_respected(self) -> bool:
         return self.total_allocated_power() <= self.power_budget + 1e-6
 
+    def effective_tree(self):
+        """The budget tree when it actually constrains beyond the scalar
+        budget; ``None`` for flat/trivial configurations (engines skip the
+        tree code path entirely, keeping them bit-identical to the scalar
+        protocol)."""
+        tree = self.budget_tree
+        if tree is None or tree.is_trivial(self.power_budget):
+            return None
+        return tree
+
+    def tree_respected(self, atol: float = 1e-6) -> bool:
+        """Every budget-tree node's subtree cap-sum within its limit."""
+        tree = self.effective_tree()
+        if tree is None:
+            return True
+        av = self.as_arrays()
+        return tree.max_overshoot(av.power_cap, av.host_on) <= atol
+
     def validate(self) -> None:
         assert self.budget_respected(), (
             f"power budget violated: {self.total_allocated_power():.1f} W "
             f"allocated > {self.power_budget:.1f} W budget")
+        assert self.tree_respected(), (
+            "budget tree violated: a node's subtree caps exceed its limit")
         for h in self.powered_on_hosts():
             assert self.reservations_respected(h.host_id), (
                 f"{h.host_id}: reservations exceed managed capacity")

@@ -177,6 +177,14 @@ class _StaticSpec(NamedTuple):
     # the ``(S,)`` reductions off device; parity tests flip this on and
     # check the carry fold against ``fold_timeseries`` bit for bit.
     keep_timeseries: bool = False
+    # Budget-tree node axis: 0 compiles the flat scalar-budget program
+    # (byte-identical to pre-tree builds); > 0 packs per-cell ancestor
+    # incidence / limit / depth columns and threads the tree through every
+    # cap-producing kernel (projection after redivvy and balance, scoped
+    # funding/reabsorption/evacuation) plus an ``over_tree`` invariant
+    # carried through the scan.  Cells without a tree ride along as a
+    # single root node limited at their scalar budget (a bitwise no-op).
+    n_tree_nodes: int = 0
 
 
 @dataclasses.dataclass
@@ -359,11 +367,20 @@ def _build_program(static: _StaticSpec):
                               jnp.minimum(a["reservation"], a["limit"]), 0.0)
         demands = make_demands(a)
         deliver = make_deliver(a)
+        tcols = None
+        if static.n_tree_nodes:
+            tcols = kernels.TreeCols(a["tree_anc"], a["tree_limit"],
+                                     a["tree_depth"])
 
         def invoke_manager(caps, cpu):
             """Phase 1 (reserved-floor redivvy) + phase 2 (BalancePowerCap),
             counting cap changes exactly as ``order_cap_changes`` emits."""
             redivvied = kernels.redivvy_caps(jnp, on, caps, floor_caps)
+            if tcols is not None:
+                # Tree projection inside the CPC branch only, exactly where
+                # the object plane's ``redivvy_power_cap`` applies it.
+                redivvied = kernels.tree_project_caps(jnp, tcols, on,
+                                                      redivvied, floor_caps)
             caps1 = jnp.where(a["enabled"][:, None], redivvied, caps)
             changes = kernels.count_cap_changes(jnp, on, caps, caps1)
             vm_ceils = jnp.where(
@@ -381,12 +398,23 @@ def _build_program(static: _StaticSpec):
                 a["enabled"], static.balance,
                 dense=kernels.DenseCols(vm_floors, vm_ceils, weights,
                                         active, wf_iters))
+            if tcols is not None:
+                caps2 = jnp.where(
+                    a["enabled"][:, None],
+                    kernels.tree_project_caps(jnp, tcols, on, caps2,
+                                              floor_caps),
+                    caps2)
             changes = changes + kernels.count_cap_changes(jnp, on, caps1,
                                                           caps2)
             return caps2, changes.astype(jnp.int32)
 
         def step(carry, x):
-            caps, acc, win, tag_pay, tag_dem, n_changes, max_total = carry
+            if tcols is None:
+                (caps, acc, win, tag_pay, tag_dem, n_changes,
+                 max_total) = carry
+            else:
+                (caps, acc, win, tag_pay, tag_dem, n_changes, max_total,
+                 over_tree) = carry
             t, is_drs, in_win = x
             cpu, mem = demands(t)
             caps, changes = jax.lax.cond(
@@ -403,6 +431,11 @@ def _build_program(static: _StaticSpec):
             carry = (caps, acc, win, tag_pay + tp * dt, tag_dem + td * dt,
                      n_changes + changes,
                      jnp.maximum(max_total, jnp.sum(caps * on, axis=-1)))
+            if tcols is not None:
+                carry = carry + (jnp.maximum(
+                    over_tree,
+                    jnp.max(kernels.tree_node_sums(jnp, tcols, on, caps)
+                            - tcols.limit, axis=-1)),)
             if not static.keep_timeseries:
                 return carry, None
             zc = jnp.zeros(S, dtype=jnp.int32)
@@ -414,9 +447,11 @@ def _build_program(static: _StaticSpec):
                 jnp.zeros((S, static.n_tags)), jnp.zeros((S, static.n_tags)),
                 jnp.zeros(S, dtype=jnp.int32),
                 jnp.sum(a["caps0"] * a["on"], axis=-1))
+        if tcols is not None:
+            init = init + (jnp.full(S, -jnp.inf),)
         xs = (a["ts"], a["drs_mask"], a["win_mask"])
-        (caps, acc, win, tag_pay, tag_dem, n_changes, max_total), ys = (
-            jax.lax.scan(step, init, xs))
+        final, ys = jax.lax.scan(step, init, xs)
+        (caps, acc, win, tag_pay, tag_dem, n_changes, max_total) = final[:7]
         zi = jnp.zeros(S, dtype=jnp.int32)
         out = {"acc": acc, "win": win, "tag_payload": tag_pay,
                "tag_demand": tag_dem, "cap_changes": n_changes,
@@ -425,6 +460,8 @@ def _build_program(static: _StaticSpec):
                "final_caps": caps, "final_on": a["on"],
                "final_occ": a["occ"],
                "slot_pressure": jnp.zeros(S, dtype=bool)}
+        if tcols is not None:
+            out["over_tree"] = final[7]
         if static.keep_timeseries:
             out["timeseries"] = ys
         return out
@@ -436,6 +473,10 @@ def _build_program(static: _StaticSpec):
         deliver = make_deliver(a)
         exists = a["exists"]
         host_mem_spec = a["host_mem"]
+        tcols = None
+        if static.n_tree_nodes:
+            tcols = kernels.TreeCols(a["tree_anc"], a["tree_limit"],
+                                     a["tree_depth"])
 
         rule_keys = tuple(k for k in ("aff_group", "allowed", "anti")
                           if k in a)
@@ -532,6 +573,9 @@ def _build_program(static: _StaticSpec):
             apply_cpc = can & a["enabled"]
             floor_caps = kernels.reserved_floor_caps(jnp, hosts, cpu_res)
             redivvied = kernels.redivvy_caps(jnp, on, caps, floor_caps)
+            if tcols is not None:
+                redivvied = kernels.tree_project_caps(jnp, tcols, on,
+                                                      redivvied, floor_caps)
             caps1 = jnp.where(apply_cpc[:, None], redivvied, caps)
             changes = jnp.where(
                 can, kernels.count_cap_changes(jnp, on, caps, caps1), 0)
@@ -552,6 +596,12 @@ def _build_program(static: _StaticSpec):
                 static.balance,
                 dense=kernels.DenseCols(vm_floors, vm_ceils,
                                         work["weights"], act3, wf_iters))
+            if tcols is not None:
+                caps2 = jnp.where(
+                    apply_cpc[:, None],
+                    kernels.tree_project_caps(jnp, tcols, on, caps2,
+                                              floor_caps),
+                    caps2)
             changes = changes + jnp.where(
                 can, kernels.count_cap_changes(jnp, on, caps1, caps2), 0)
 
@@ -598,7 +648,7 @@ def _build_program(static: _StaticSpec):
             want_on = do_dpm & hot_any & jnp.any(standby, axis=-1)
             funded, granted = kernels.power_on_funding_caps(
                 be, hosts, caps2, cand, cpu_util, eff_h, cpu_res,
-                a["budget"], dpmp.high_util)
+                a["budget"], dpmp.high_util, tree=tcols)
             cand_cols = kernels.HostCols(
                 *(gather_host(col, cand)[..., None]
                   for col in (jnp.ones_like(on), a["idle"], a["peak"],
@@ -630,17 +680,21 @@ def _build_program(static: _StaticSpec):
             maybe_off = (do_dpm & ~hot_any & (n_on > 1) & all_low
                          & window_ok)
             victim = jnp.argmin(jnp.where(on, cpu_util, jnp.inf), axis=-1)
+            evac_scope = None
+            if tcols is not None:
+                evac_scope = kernels.tree_evac_scope(jnp, tcols, on, caps2,
+                                                     victim)
             ok, order, dests, n_evac, pressure = kernels.plan_evacuation(
                 be, hosts, caps2, victim, occ, eff_slot, mem,
                 res, work["migratable"], host_mem_spec,
                 dpmp.target_util, allowed=work.get("allowed"),
-                anti=work.get("anti"))
+                anti=work.get("anti"), scope=evac_scope)
             do_off = maybe_off & ok
             work = _apply_remap(work, do_off, victim, order, dests)
             vmot = vmot + jnp.where(do_off, n_evac, 0).astype(jnp.int32)
 
             reabsorbed = kernels.power_off_reabsorb_caps(
-                jnp, hosts, caps2, victim, a["budget"])
+                jnp, hosts, caps2, victim, a["budget"], tree=tcols)
             # The deferred actions touch exactly the hosts whose cap
             # change clears the emission threshold (order_cap_changes).
             changed = on & (jnp.abs(reabsorbed - caps2)
@@ -809,6 +863,20 @@ def _build_program(static: _StaticSpec):
                 caps = jnp.where(
                     boot[:, None] & onehot,
                     jnp.minimum(caps, pool[:, None]), caps)
+                if tcols is not None:
+                    # The returning host's cap must also fit its ancestor
+                    # headroom, with the pending power-on grant counted as
+                    # allocated (Simulator._apply_power_events).
+                    pend_on = ((c["pon_idx"] >= 0)[:, None]
+                               & (h_idx[None, :] == c["pon_idx"][:, None]))
+                    head = kernels.tree_headroom(jnp, tcols, on | pend_on,
+                                                 caps)
+                    anc_b = kernels.tree_anc_at(jnp, tcols, eh)
+                    room = jnp.min(jnp.where(anc_b, head, jnp.inf), axis=-1)
+                    caps = jnp.where(
+                        boot[:, None] & onehot,
+                        jnp.minimum(caps,
+                                    jnp.maximum(room, 0.0)[:, None]), caps)
                 on = jnp.where((due & target)[:, None] & onehot, True, on)
                 on = jnp.where((due & ~target)[:, None] & onehot, False, on)
                 last_cfg = jnp.where(due & (cur != target), t, last_cfg)
@@ -942,6 +1010,16 @@ def _build_program(static: _StaticSpec):
                 c["pon_idx"] >= 0,
                 gather_host(caps, jnp.clip(c["pon_idx"], 0, H - 1)), 0.0)
             total = jnp.sum(caps * on, axis=-1) + pend_cap
+            if tcols is not None:
+                # Per-node invariant with the pending power-on target
+                # counted as allocated (its grant is its already-set cap).
+                tree_mask = on | ((c["pon_idx"] >= 0)[:, None]
+                                  & (h_idx[None, :] == c["pon_idx"][:, None]))
+                node_over = (kernels.tree_node_sums(jnp, tcols, tree_mask,
+                                                    caps)
+                             - tcols.limit)
+                over_tree = jnp.maximum(c["over_tree"],
+                                        jnp.max(node_over, axis=-1))
 
             # 6. DPM low-watermark tracking at delivered capacity, through
             # the same utilization kernel the invocation's triggers use.
@@ -965,6 +1043,8 @@ def _build_program(static: _StaticSpec):
                 tag_dem=c["tag_dem"] + td * dt,
                 over_budget=jnp.maximum(c["over_budget"],
                                         total - a["budget"]))
+            if tcols is not None:
+                c["over_tree"] = over_tree
             if not static.keep_timeseries:
                 return c, None
             return c, dict(
@@ -997,6 +1077,8 @@ def _build_program(static: _StaticSpec):
             "over_budget": jnp.full(S, -jnp.inf),
             "slot_pressure": jnp.zeros(S, dtype=bool),
         }
+        if tcols is not None:
+            init["over_tree"] = jnp.full(S, -jnp.inf)
         if static.timed:
             init.update({
                 "mig_src": jnp.full((S, M), -1, dtype=jnp.int64),
@@ -1016,6 +1098,8 @@ def _build_program(static: _StaticSpec):
                "final_caps": c["caps"], "final_on": c["on"],
                "final_occ": c["slots"]["occ"],
                "slot_pressure": c["slot_pressure"]}
+        if tcols is not None:
+            out["over_tree"] = c["over_tree"]
         if static.keep_timeseries:
             out["timeseries"] = ys
         return out
@@ -1040,6 +1124,8 @@ def _out_specs(static: _StaticSpec, P):
         "vmotions", "power_ons", "power_offs", "max_total_cap",
         "over_budget", "final_caps", "final_on", "final_occ",
         "slot_pressure")}
+    if static.n_tree_nodes:
+        specs["over_tree"] = P("cells")
     if static.keep_timeseries:
         specs["timeseries"] = P(None, "cells")
     return specs
@@ -1245,6 +1331,10 @@ class BatchedSimulator:
         for t, host_id, _ in c.config.power_events:
             if host_id not in c.snapshot.hosts:
                 return f"power event at t={t} targets unknown host {host_id!r}"
+        if c.snapshot.effective_tree() is not None and c.snapshot.rules:
+            return ("budget trees with placement rules cannot be batched "
+                    "(constraint correction's cap funding is tree-unaware); "
+                    "such cells run on the vector engine")
         if check_traces:
             bank = c.trace_bank
             if bank is None:
@@ -1358,6 +1448,12 @@ class BatchedSimulator:
                             for v in c.snapshot.vms.values() for t in v.tags})
         G = len(tag_names)
         E = max([len(c.config.power_events) for c in cells] + [1])
+        # Hierarchical budgets: pad every cell to the widest tree.  A
+        # tree-less cell in a tree batch keeps the padded defaults (no
+        # ancestors, infinite limits), which make every tree op a provable
+        # no-op -- its caps replay bit-identically to a tree-free batch.
+        trees = [c.snapshot.effective_tree() for c in cells]
+        n_tree = max((t.n_nodes for t in trees if t is not None), default=0)
 
         def host_col(fill=0.0):
             return np.full((S, H), fill, dtype=np.float64)
@@ -1395,6 +1491,10 @@ class BatchedSimulator:
             "win_mask": np.zeros((T, S), dtype=bool),
         }
         a["bps"][..., 0] = 0.0
+        if n_tree:
+            a["tree_anc"] = np.zeros((S, H, n_tree), dtype=bool)
+            a["tree_limit"] = np.full((S, n_tree), np.inf)
+            a["tree_depth"] = np.full((S, n_tree), -1, dtype=np.int64)
         # Rule columns only exist when some cell actually has that rule
         # kind -- absent columns skip their admission term entirely.
         if pack_rules and rmeta.n_groups:
@@ -1466,6 +1566,12 @@ class BatchedSimulator:
             a["mem_vals"][i, hj, slot] = mem[order]
             a["period"][i, hj, slot] = period[order]
             a["budget"][i] = snap.power_budget
+            if n_tree and trees[i] is not None:
+                tree = trees[i]
+                h_c = len(snap.hosts)
+                a["tree_anc"][i, :h_c, :tree.n_nodes] = tree.host_anc
+                a["tree_limit"][i, :tree.n_nodes] = tree.limit
+                a["tree_depth"][i, :tree.n_nodes] = tree.depth
             a["enabled"][i] = c.powercap_enabled
             a["dpm"][i] = c.dpm_enabled
             a["bal_on"][i] = c.balancer_enabled
@@ -1516,7 +1622,8 @@ class BatchedSimulator:
             timed=self._timed, mig_table=mig_table, limits=limits,
             vmotion_rate_mb_s=rate, vmotion_overhead_mhz=ovh,
             executor=backend_mod.executor_name(),
-            keep_timeseries=self._keep_timeseries)
+            keep_timeseries=self._keep_timeseries,
+            n_tree_nodes=n_tree)
         self._ticks = T
         self._prepared = None
         self.pack_s = time.perf_counter() - t_pack0
@@ -1628,6 +1735,12 @@ class BatchedSimulator:
             f"budget violated during execution: worst overshoot "
             f"{float(over.max()):.3f} W (cell "
             f"{self.cells[int(over.argmax())].name})")
+        if "over_tree" in out:
+            ot = out["over_tree"]
+            assert float(ot.max()) <= 1e-6, (
+                f"budget tree violated during execution: worst node over by "
+                f"{float(ot.max()):.3f} W (cell "
+                f"{self.cells[int(ot.argmax())].name})")
 
         acc = out["acc"]
         return BatchResult(

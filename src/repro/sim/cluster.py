@@ -146,15 +146,31 @@ class Simulator:
                     # the budget invariant counts them.
                     total = sum(h.power_cap
                                 for h in self.live.powered_on_hosts())
+                    allocated = {h.host_id
+                                 for h in self.live.powered_on_hosts()}
                     for p in self.pending:
                         if p.action.kind == "power_on" and \
                                 p.state in ("waiting", "running"):
                             tgt = self.live.hosts[p.action.target]
                             if not tgt.powered_on:
                                 total += tgt.power_cap
+                                allocated.add(tgt.host_id)
                     host.power_cap = min(
                         host.power_cap,
                         max(self.live.power_budget - total, 0.0))
+                    tree = self.live.effective_tree()
+                    if tree is not None:
+                        # The returning host's cap must also fit under
+                        # every limit on its root path, with pending
+                        # power-on grants counted as allocated.
+                        ids = list(self.live.hosts)
+                        caps = np.array(
+                            [self.live.hosts[h].power_cap for h in ids])
+                        mask = np.array([h in allocated for h in ids])
+                        slack = tree.host_slack(caps, mask)
+                        host.power_cap = min(
+                            host.power_cap,
+                            max(float(slack[ids.index(host_id)]), 0.0))
                 host.powered_on = bool(on)
                 self._topology_version += 1
                 self.last_config_change = t
@@ -340,6 +356,15 @@ class Simulator:
         assert total <= self.live.power_budget + 1e-6, (
             f"budget violated during execution: {total:.1f} W > "
             f"{self.live.power_budget:.1f} W")
+        tree = self.live.effective_tree()
+        if tree is not None:
+            ids = list(self.live.hosts)
+            caps = np.array([self.live.hosts[h].power_cap for h in ids])
+            mask = np.array([h in on_or_pending for h in ids])
+            over = tree.max_overshoot(caps, mask)
+            assert over <= 1e-6, (
+                f"budget tree violated during execution: worst node over "
+                f"by {over:.6f} W")
 
     def _invoke_manager(self, t: float) -> None:
         """One DRS + CloudPowerCap invocation; queues the emitted actions.

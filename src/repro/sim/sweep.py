@@ -70,6 +70,14 @@ SPIKES = ("flat", "burst", "step", "prime")
 CHURNS = ("none", "dpm", "maintenance", "failure", "timed_churn",
           "failure_cascade")
 RULESETS = ("none", "violation_burst", "cap_blocked")
+TREES = ("none", "two_row")
+
+#: ``two_row`` tree family: row 0 (the first half of the hosts) is limited
+#: to this fraction of the rack budget -- below its pro-rata share, so the
+#: row limit binds before the rack budget does.  The burst is concentrated
+#: on row 0 (see :func:`build_sweep`), so CloudPowerCap must redistribute
+#: *within* the binding row; Static strands the capacity.
+TWO_ROW_LIMIT_FRAC = 0.45
 
 #: Launch gating for the timed-vMotion churn families: per-host concurrent
 #: migration slots and a cluster-wide launches-per-invocation budget.
@@ -95,6 +103,7 @@ class SweepSpec:
     heterogeneous: bool = False             # mix PAPER_HOST with SMALL_HOST
     churn: str = "none"                     # one of CHURNS
     rules: str = "none"                     # one of RULESETS
+    tree: str = "none"                      # one of TREES
     duration_s: float = 1200.0
     tick_s: float = 10.0
     drs_period_s: float = 300.0
@@ -229,6 +238,8 @@ def build_sweep(spec: SweepSpec, policy: str,
         raise ValueError(f"unknown churn family {spec.churn!r}")
     if spec.rules not in RULESETS:
         raise ValueError(f"unknown rule family {spec.rules!r}")
+    if spec.tree not in TREES:
+        raise ValueError(f"unknown tree family {spec.tree!r}")
     host_specs = _specs_for(spec)
     budget = spec.budget
     total_peak = sum(s.power_peak for s in host_specs)
@@ -261,6 +272,12 @@ def build_sweep(spec: SweepSpec, policy: str,
     # capacity and the policies separate.
     hot_host = rng.rand(spec.n_hosts) < 0.2
     phase_frac = rng.uniform(0.0, 0.5, size=spec.n_vms)
+    if spec.tree == "two_row":
+        # Concentrate the burst on row 0 so its limit is what binds (the
+        # random draws above still happen, keeping the stream identical
+        # for tree-less specs with the same seed).
+        hot_host = np.zeros(spec.n_hosts, dtype=bool)
+        hot_host[:max(spec.n_hosts // 4, 1)] = True
 
     n_on = len(on_hosts)
     vm_key = (spec.n_vms, tuple(on_hosts))
@@ -316,7 +333,21 @@ def build_sweep(spec: SweepSpec, policy: str,
                 vms = [dataclasses.replace(v, reservation=overrides[v.vm_id])
                        if v.vm_id in overrides else v for v in vms]
             rules = [AffinityRule((mover, anchor))]
-    snap = ClusterSnapshot(hosts, vms, power_budget=budget, rules=rules)
+    tree = None
+    if spec.tree == "two_row":
+        from repro.core.budget_tree import BudgetTree
+        tree = BudgetTree.two_rows(budget, spec.n_hosts,
+                                   row0_limit=TWO_ROW_LIMIT_FRAC * budget)
+        # Deployment must respect the tree from t=0: scale each binding
+        # row's initial caps down to its limit (zero floors -- sweep VMs
+        # carry no reservations).
+        caps = np.array([h.power_cap for h in hosts])
+        on_mask = np.array([h.powered_on for h in hosts])
+        caps = tree.project(caps, on_mask, floors=np.zeros(spec.n_hosts))
+        for h, cap in zip(hosts, caps):
+            h.power_cap = float(cap)
+    snap = ClusterSnapshot(hosts, vms, power_budget=budget, rules=rules,
+                           budget_tree=tree)
     power_events: tuple = ()
     if spec.churn == "maintenance":
         # One powered-on host leaves for the middle third and returns.
@@ -777,6 +808,19 @@ def scenario_families(sizes: Sequence[int] = (10, 100, 1000),
                                 rules=rule, duration_s=duration_s,
                                 tick_s=tick_s))
     return specs
+
+
+def row_contention_specs(sizes: Sequence[int] = (10, 100),
+                         duration_s: float = 1200.0,
+                         tick_s: float = 10.0) -> list[SweepSpec]:
+    """The ``two_row`` budget-tree family: a row limit binds before the
+    rack budget does (burst concentrated on row 0), in the cap-only
+    management regime -- the grid where CloudPowerCap's tree-aware
+    redistribution separates from Static within a row."""
+    return [SweepSpec(name=f"h{n}_row_contention", n_hosts=n,
+                      spike="burst", tree="two_row",
+                      duration_s=duration_s, tick_s=tick_s)
+            for n in sizes]
 
 
 def scale_ladder(sizes: Sequence[int] = (10, 100, 1000),

@@ -1,0 +1,226 @@
+"""Fault-injection suite for the headroom/admission service.
+
+Malformed queries, powered-off leaves, and limit changes racing a pending
+power-on must either raise a structured :class:`BudgetServiceError` or
+return a consistent answer -- and the service must *never* expose a cap
+set that violates an ancestor limit mid-transition (the invariant is
+re-checked after every event, including failed ones).  The error taxonomy
+(``code`` strings) is pinned here so callers can branch on it.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.budget_tree import BudgetTree
+from repro.core.power_model import PAPER_HOST
+from repro.drs.snapshot import ClusterSnapshot, Host, VirtualMachine
+from repro.runtime.budget_service import (AdmissionQuery, BudgetService,
+                                          BudgetServiceError, CapDecision,
+                                          DemandUpdate, HeadroomQuery,
+                                          NodeLimitChange, PowerOff,
+                                          PowerOnComplete, PowerOnRequest,
+                                          service_from_snapshot,
+                                          sync_router_capacities,
+                                          synthetic_feed)
+from repro.runtime.serve_loop import CapacityAwareRouter, Replica
+
+
+def two_row_service(row0=700.0, row1=400.0, budget=1100.0):
+    """Rows of two hosts each; h3 starts in standby."""
+    tree = BudgetTree.two_rows(budget, 4, row0_limit=row0, row1_limit=row1)
+    caps = np.array([250.0, 250.0, 320.0, 0.0])
+    on = np.array([True, True, True, False])
+    return BudgetService(tree, [f"h{i}" for i in range(4)], caps, on)
+
+
+# -------------------------------------------------------- malformed input
+@pytest.mark.parametrize("event,code", [
+    (HeadroomQuery("nope"), "unknown-host"),
+    (AdmissionQuery("nope", 10.0), "unknown-host"),
+    (AdmissionQuery("h0", -1.0), "bad-watts"),
+    (AdmissionQuery("h0", float("nan")), "bad-watts"),
+    (DemandUpdate("h0", float("inf")), "bad-watts"),
+    (DemandUpdate("h3", 100.0), "host-off"),
+    (PowerOnRequest("h0", 100.0), "already-on"),
+    (PowerOnComplete("h0"), "not-pending"),
+    (PowerOff("h3"), "host-off"),
+    (NodeLimitChange(99, 100.0), "unknown-node"),
+    (NodeLimitChange(1, -10.0), "bad-watts"),
+    (NodeLimitChange(1, float("nan")), "bad-watts"),
+])
+def test_malformed_events_raise_structured_codes(event, code):
+    svc = two_row_service()
+    caps0, on0 = svc.caps.copy(), svc.on.copy()
+    with pytest.raises(BudgetServiceError) as exc:
+        svc.handle(event)
+    assert exc.value.code == code
+    # Failed events leave no partial state behind.
+    np.testing.assert_array_equal(svc.caps, caps0)
+    np.testing.assert_array_equal(svc.on, on0)
+    assert not svc.pending.any()
+
+
+def test_unknown_event_type_rejected():
+    svc = two_row_service()
+    with pytest.raises(BudgetServiceError) as exc:
+        svc.handle(object())
+    assert exc.value.code == "unknown-event"
+
+
+def test_topology_mismatch_rejected():
+    tree = BudgetTree.two_rows(1000.0, 4, row0_limit=500.0)
+    with pytest.raises(BudgetServiceError) as exc:
+        BudgetService(tree, ["h0", "h1"], np.zeros(2), np.ones(2, bool))
+    assert exc.value.code == "bad-topology"
+
+
+def test_initially_violating_caps_rejected():
+    tree = BudgetTree.two_rows(1000.0, 4, row0_limit=300.0)
+    with pytest.raises(BudgetServiceError) as exc:
+        BudgetService(tree, [f"h{i}" for i in range(4)],
+                      np.array([250.0, 250.0, 100.0, 100.0]),
+                      np.ones(4, bool))
+    assert exc.value.code == "invariant"
+
+
+# ------------------------------------------------------ powered-off leaves
+def test_powered_off_leaf_consistent_answers():
+    svc = two_row_service()
+    # A standby host still answers queries (its stale cap counts nothing).
+    assert svc.headroom("h3") == pytest.approx(80.0)
+    fits, grantable = svc.admissible("h3", 60.0)
+    assert fits and grantable == pytest.approx(60.0)
+    fits, grantable = svc.admissible("h3", 200.0)
+    assert not fits and grantable == pytest.approx(80.0)
+    # ...but mutating it requires an explicit power-on request.
+    with pytest.raises(BudgetServiceError) as exc:
+        svc.handle(DemandUpdate("h3", 100.0))
+    assert exc.value.code == "host-off"
+
+
+def test_double_power_on_rejected_grant_preserved():
+    svc = two_row_service()
+    granted, decisions = svc.handle(PowerOnRequest("h3", 200.0))
+    assert granted == pytest.approx(80.0)     # clipped to row-1 headroom
+    assert [d.reason for d in decisions] == ["power-on-grant"]
+    with pytest.raises(BudgetServiceError) as exc:
+        svc.handle(PowerOnRequest("h3", 50.0))
+    assert exc.value.code == "already-pending"
+    assert svc.caps[3] == pytest.approx(80.0)  # first grant untouched
+    svc.handle(PowerOnComplete("h3"))
+    assert svc.on[3] and not svc.pending[3]
+
+
+# ------------------------------- limit change racing a pending power-on
+def test_limit_change_racing_pending_power_on():
+    """Tighten row 1 while h3's 80 W grant is still in flight: the service
+    must scale the *pending* grant too (it counts as allocated) and stream
+    the forced decreases -- the invariant holds at every step."""
+    svc = two_row_service()
+    svc.handle(PowerOnRequest("h3", 200.0))
+    assert svc.pending[3] and svc.caps[3] == pytest.approx(80.0)
+    # Row 1 now sits exactly at its 400 W limit (320 + 80 pending).
+    _, decisions = svc.handle(NodeLimitChange(2, 200.0))
+    touched = {d.host_id: d.cap_w for d in decisions}
+    assert set(touched) == {"h2", "h3"}       # both row-1 residents shrink
+    assert sum(touched.values()) == pytest.approx(200.0)
+    assert svc.caps[3] < 80.0                 # the pending grant was cut
+    # Completion lands inside the tightened row.
+    svc.handle(PowerOnComplete("h3"))
+    assert svc.tree.max_overshoot(svc.caps, svc.on) <= 1e-6
+    # Row 0 was never touched by the race.
+    assert "h0" not in touched and "h1" not in touched
+
+
+def test_limit_change_never_exposes_violation_midstream():
+    """Every event handler re-checks the invariant before returning, so a
+    replayed feed full of races and malformed events can never leave a
+    node over its limit (handle() would assert, failing the test)."""
+    svc = two_row_service()
+    feed = synthetic_feed(svc.tree, n_events=500, seed=3)
+    # synthetic_feed names hosts host{i}; remap onto this service's ids.
+    remap = {f"host{i}": f"h{i}" for i in range(4)}
+    events = [dataclass_replace(ev, remap) for ev in feed]
+    report = svc.replay(events)
+    assert report.n_events == len(events)
+    assert report.n_errors > 0                # the feed includes races
+    assert svc.tree.max_overshoot(svc.caps, svc.on | svc.pending) <= 1e-6
+    # Latency percentiles are well-formed (the benchmark gates them).
+    assert 0.0 < report.p50_us <= report.p99_us
+
+
+def dataclass_replace(ev, remap):
+    if hasattr(ev, "host_id"):
+        import dataclasses
+        return dataclasses.replace(ev, host_id=remap[ev.host_id])
+    return ev
+
+
+def test_replay_strict_raises_collecting_does_not():
+    svc = two_row_service()
+    events = [HeadroomQuery("h0"), DemandUpdate("nope", 10.0),
+              HeadroomQuery("h1")]
+    report = svc.replay(events)
+    assert report.n_errors == 1
+    assert report.errors[0][0] == "unknown-host"
+    assert report.answers[0] is not None and report.answers[2] is not None
+    with pytest.raises(BudgetServiceError):
+        two_row_service().replay(events, strict=True)
+
+
+# ------------------------------------------------------- demand semantics
+def test_demand_update_clips_raise_to_headroom():
+    svc = two_row_service()
+    # h2 asks for more than row 1 allows: clipped at 320 + 80 = 400.
+    new, decisions = svc.handle(DemandUpdate("h2", 500.0))
+    assert new == pytest.approx(400.0)
+    assert decisions == [CapDecision("h2", 400.0, "demand-update")]
+    # Decreases always pass through exactly.
+    new, _ = svc.handle(DemandUpdate("h2", 100.0))
+    assert new == 100.0
+    # A no-op update streams no decision.
+    _, decisions = svc.handle(DemandUpdate("h2", 100.0))
+    assert decisions == []
+
+
+def test_power_off_frees_row_headroom():
+    svc = two_row_service()
+    assert svc.headroom("h3") == pytest.approx(80.0)
+    svc.handle(PowerOff("h2"))
+    assert svc.headroom("h3") == pytest.approx(400.0)
+
+
+# ----------------------------------------------------- runtime integration
+def test_service_from_snapshot_and_router_sync():
+    tree = BudgetTree.two_rows(1100.0, 4, row0_limit=700.0,
+                               row1_limit=400.0)
+    hosts = [Host(f"h{i}", PAPER_HOST, power_cap=c, powered_on=onf)
+             for i, (c, onf) in enumerate(
+                 [(250.0, True), (250.0, True), (320.0, True),
+                  (0.0, False)])]
+    vms = [VirtualMachine(vm_id="vm0", host_id="h0")]
+    snap = ClusterSnapshot(hosts, vms, power_budget=1100.0,
+                           budget_tree=tree)
+    svc = service_from_snapshot(snap)
+    assert svc.headroom("h3") == pytest.approx(80.0)
+
+    router = CapacityAwareRouter([Replica(f"r{i}", f"h{i}")
+                                  for i in range(4)])
+    replica_hosts = {f"r{i}": f"h{i}" for i in range(4)}
+    sync_router_capacities(svc, router, replica_hosts)
+    assert router.capacity["r0"] == pytest.approx(250.0)
+    assert router.capacity["r3"] == 0.0       # off host weights zero
+    svc.handle(PowerOnRequest("h3", 200.0))
+    sync_router_capacities(svc, router, replica_hosts)
+    assert router.capacity["r3"] == 0.0       # pending: still zero
+    svc.handle(PowerOnComplete("h3"))
+    sync_router_capacities(svc, router, replica_hosts)
+    assert router.capacity["r3"] == pytest.approx(80.0)
+
+
+def test_service_from_snapshot_without_tree_uses_flat():
+    hosts = [Host("h0", PAPER_HOST, power_cap=200.0)]
+    snap = ClusterSnapshot(hosts, [], power_budget=300.0)
+    svc = service_from_snapshot(snap)
+    assert svc.tree.n_nodes == 1
+    assert svc.headroom("h0") == pytest.approx(100.0)

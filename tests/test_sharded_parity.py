@@ -133,3 +133,42 @@ def test_sharded_vs_single_device_bit_identical_subprocess():
         text=True, timeout=900,
         env=os.environ.copy() | {"PYTHONPATH": "src"})
     assert "SHARDED_PARITY_OK" in out.stdout, out.stderr[-2000:]
+
+
+ROW_CONTENTION_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax
+    from repro.sim import sweep as sw
+
+    assert len(jax.devices()) == 8
+    specs = sw.row_contention_specs(sizes=(10,), duration_s=600.0)
+    policies = ("cpc", "static")
+    res1 = sw.run_sweep(specs, policies=policies, engine="batch",
+                        n_devices=1)
+    res8 = sw.run_sweep(specs, policies=policies, engine="batch")
+    assert any(n_dev > 1 for _, n_dev in
+               [(tuple(b["bucket"]), b["n_devices"])
+                for b in sw.LAST_BATCH_INFO])
+    for name in res1:
+        for p in policies:
+            a, b = res1[name][p], res8[name][p]
+            assert a.cap_changes == b.cap_changes, (name, p)
+            assert a.energy_j == b.energy_j, (name, p)
+            assert a.cpu_payload_mhz_s == b.cpu_payload_mhz_s, (name, p)
+    assert any(res1[name]["cpc"].cap_changes > 0 for name in res1)
+    print("ROW_CONTENTION_SHARDED_OK")
+""")
+
+
+@pytest.mark.slow
+def test_row_contention_sharded_bit_identical_subprocess():
+    """The budget-tree columns shard with the cells axis: the two_row grid
+    on 8 forced virtual devices is bit-identical to the single-device run,
+    with the cpc cell really redistributing under its binding row."""
+    import os
+    out = subprocess.run(
+        [sys.executable, "-c", ROW_CONTENTION_SCRIPT], capture_output=True,
+        text=True, timeout=900,
+        env=os.environ.copy() | {"PYTHONPATH": "src"})
+    assert "ROW_CONTENTION_SHARDED_OK" in out.stdout, out.stderr[-2000:]

@@ -4,7 +4,8 @@ import numpy as np
 import pytest
 
 from repro.core.power_model import PAPER_HOST
-from repro.sim.sweep import (SMALL_HOST, SweepSpec, build_sweep, run_cell,
+from repro.sim.sweep import (SMALL_HOST, TWO_ROW_LIMIT_FRAC, SweepSpec,
+                             build_sweep, row_contention_specs, run_cell,
                              run_sweep, run_sweep_batched, scale_ladder,
                              scenario_families)
 
@@ -337,6 +338,80 @@ def test_reduced_metrics_bit_identical_to_timeseries(regime):
     if regime in ("rules", "timed"):
         assert int(r0.vmotions.sum()) > 0
     assert int(r0.cap_changes.sum()) > 0
+
+
+# --------------------------------------------- budget-tree (row) families
+def test_row_contention_specs_shapes():
+    specs = row_contention_specs(sizes=(10, 100))
+    assert [s.n_hosts for s in specs] == [10, 100]
+    assert all(s.tree == "two_row" for s in specs)
+    assert len({s.name for s in specs}) == len(specs)
+
+
+def test_unknown_tree_rejected():
+    with pytest.raises(ValueError, match="tree"):
+        build_sweep(SweepSpec(name="t", tree="nope"), "cpc")
+
+
+def test_build_sweep_two_row_deployment_respects_tree():
+    """Deployment projects the initial caps under the row limits, so every
+    engine starts from a tree-respecting state."""
+    spec = row_contention_specs(sizes=(10,))[0]
+    for policy in ("cpc", "static", "statichigh"):
+        snap, _, _ = build_sweep(spec, policy)
+        tree = snap.effective_tree()
+        assert tree is not None
+        caps = np.array([h.power_cap for h in snap.hosts.values()])
+        on = np.array([h.powered_on for h in snap.hosts.values()])
+        assert tree.max_overshoot(caps, on) <= 1e-6
+        # Row 0's limit really undercuts its pro-rata share.
+        assert tree.limit[1] == pytest.approx(
+            TWO_ROW_LIMIT_FRAC * snap.power_budget)
+
+
+def test_build_sweep_tree_preserves_rng_stream():
+    """Adding the tree must not disturb the random draws: the tree-less
+    spec with the same seed deploys the identical VM set and traces."""
+    base = SweepSpec(name="t", n_hosts=10, spike="burst", seed=5)
+    treed = SweepSpec(name="t", n_hosts=10, spike="burst", seed=5,
+                      tree="two_row")
+    a, ta, _ = build_sweep(base, "cpc")
+    b, tb, _ = build_sweep(treed, "cpc")
+    assert [v.vm_id for v in a.vms.values()] == \
+        [v.vm_id for v in b.vms.values()]
+    for vid in ta:
+        assert ta[vid](50.0) == tb[vid](50.0)
+
+
+def test_row_contention_batch_matches_vector():
+    """Differential acceptance: the two_row grid is bit-identical between
+    the batched scan (tree columns carried through lax.scan) and the
+    sequential vector engine -- exact cap-change counts, tight-tolerance
+    payload/energy."""
+    specs = row_contention_specs(sizes=(10,), duration_s=600.0)
+    policies = ("cpc", "static")
+    seq = run_sweep(specs, policies=policies, engine="vector")
+    bat = run_sweep(specs, policies=policies, engine="batch")
+    for name in seq:
+        for p in policies:
+            a, b = seq[name][p], bat[name][p]
+            assert b.cap_changes == a.cap_changes, (name, p)
+            assert b.vmotions == 0
+            np.testing.assert_allclose(b.cpu_payload_mhz_s,
+                                       a.cpu_payload_mhz_s, rtol=1e-9)
+            np.testing.assert_allclose(b.energy_j, a.energy_j, rtol=1e-9)
+    assert seq[specs[0].name]["cpc"].cap_changes > 0
+
+
+def test_row_contention_policy_separation():
+    """The burst is concentrated under the binding row, so CPC's tree-aware
+    redistribution recovers payload Static strands against the row limit."""
+    specs = row_contention_specs(sizes=(10,), duration_s=600.0)
+    res = run_sweep(specs, policies=("cpc", "static"), engine="batch")
+    name = specs[0].name
+    cpc, static = res[name]["cpc"], res[name]["static"]
+    assert cpc.cap_changes > 0 and static.cap_changes == 0
+    assert cpc.cpu_payload_mhz_s > static.cpu_payload_mhz_s * 1.001
 
 
 def test_run_sweep_batched_policy_separation():
